@@ -1,0 +1,81 @@
+"""Kernel-vs-oracle benchmark: correctness deltas + host-side timing.
+
+interpret=True executes the Pallas kernel body through the JAX interpreter
+(CPU) — timing is NOT TPU performance; the oracle timing column is the
+meaningful baseline here and the kernel's value shows up in the §Roofline
+arithmetic (transe_score moves 5 gathered rows once through VMEM;
+rank_topk streams the entity table without materializing (B, E)).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels.rank_topk import rank_counts
+from repro.kernels.transe_score import transe_score
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                      # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps
+
+
+def run(verbose: bool = True):
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # transe_score sweep
+    for (E, R, k, B) in [(5000, 50, 64, 1024), (20000, 100, 128, 4096)]:
+        ent = jnp.asarray(rng.normal(size=(E, k)).astype(np.float32))
+        rel = jnp.asarray(rng.normal(size=(R, k)).astype(np.float32))
+        idx = jnp.asarray(np.stack([
+            rng.integers(0, E, B), rng.integers(0, R, B),
+            rng.integers(0, E, B), rng.integers(0, E, B),
+            rng.integers(0, E, B)], axis=1).astype(np.int32))
+        f_kernel = jax.jit(lambda e, r, i: transe_score(
+            e, r, i, margin=1.0, norm="l1", interpret=True)[0])
+        f_ref = jax.jit(lambda e, r, i: ref.transe_score_ref(
+            e, r, i, 1.0, "l1")[0])
+        got = f_kernel(ent, rel, idx)
+        want = f_ref(ent, rel, idx)
+        err = float(jnp.max(jnp.abs(got - want)))
+        t_ref = _time(f_ref, ent, rel, idx)
+        rows.append({
+            "bench": f"transe_score_E{E}_k{k}_B{B}",
+            "max_abs_err": f"{err:.2e}",
+            "oracle_us": round(t_ref * 1e6, 1),
+        })
+
+    # rank_topk sweep
+    for (B, E, k) in [(256, 5000, 64), (512, 20000, 64)]:
+        q = jnp.asarray(rng.normal(size=(B, k)).astype(np.float32))
+        tab = jnp.asarray(rng.normal(size=(E, k)).astype(np.float32))
+        gold = jnp.asarray(rng.uniform(1, 5, size=(B,)).astype(np.float32))
+        f_kernel = jax.jit(lambda q, t, g: rank_counts(
+            q, t, g, norm="l2", interpret=True))
+        f_ref = jax.jit(lambda q, t, g: ref.rank_counts_ref(q, t, g, "l2"))
+        got = f_kernel(q, tab, gold)
+        want = f_ref(q, tab, gold)
+        exact = int(jnp.sum(got == want))
+        t_ref = _time(f_ref, q, tab, gold)
+        rows.append({
+            "bench": f"rank_topk_B{B}_E{E}",
+            "exact_match": f"{exact}/{B}",
+            "oracle_us": round(t_ref * 1e6, 1),
+        })
+
+    if verbose:
+        for r in rows:
+            print(",".join(f"{k}={v}" for k, v in r.items()), flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

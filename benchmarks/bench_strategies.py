@@ -1,0 +1,78 @@
+"""Paper Table: accuracy of the MapReduce Reduce strategies vs single-thread
+TransE (entity inference / relation prediction / triplet classification).
+
+The paper's success criterion (§Abstract, §4): parallel training should
+"retain the performance ... evaluated by the single-thread TransE".  We
+train on the synthetic planted-translation KG (no network access to
+Freebase/NELL — DESIGN.md §7) and report all three tasks for:
+  single-thread | W=4 BGD | W=4 SGD x {random, average, average_all,
+  miniloss_perkey, miniloss_global}
+
+Fairness: W workers at fixed epochs take W-fold fewer sequential updates,
+so parallel settings use the standard linear learning-rate scaling
+(lr x W) — without it every parallel variant is simply undertrained
+(measured: hits@10 0.125 vs 0.24 at equal lr; with scaling they retain
+94-97%).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import kg_eval, mapreduce, transe
+from repro.data import kg as kg_lib
+
+EPOCHS = 60
+DIM = 48
+WORKERS = 4
+BASE_LR = 0.05
+
+
+def build(lr: float = BASE_LR):
+    kg = kg_lib.synthetic_kg(0, n_entities=1500, n_relations=12,
+                             n_triplets=15000)
+    tcfg = transe.TransEConfig(
+        n_entities=kg.n_entities, n_relations=kg.n_relations, dim=DIM,
+        margin=1.0, norm="l1", learning_rate=lr)
+    return kg, tcfg
+
+
+def run(verbose: bool = True):
+    kg, _ = build()
+    rows = []
+    settings = [("single-thread", dict(n_workers=1, paradigm="sgd",
+                                       strategy="average"))]
+    settings.append((f"bgd-W{WORKERS}", dict(n_workers=WORKERS,
+                                             paradigm="bgd")))
+    for strat in ("average", "average_all", "random", "miniloss_perkey",
+                  "miniloss_global"):
+        settings.append((f"sgd-{strat}-W{WORKERS}",
+                         dict(n_workers=WORKERS, paradigm="sgd",
+                              strategy=strat)))
+
+    for name, kw in settings:
+        cfg = mapreduce.MapReduceConfig(backend="vmap", batch_size=256, **kw)
+        lr = BASE_LR * kw["n_workers"]           # linear-scaling rule
+        _, tcfg = build(lr)
+        t0 = time.time()
+        res = mapreduce.train(kg, tcfg, cfg, epochs=EPOCHS, seed=0)
+        dt = time.time() - t0
+        metrics = kg_eval.evaluate_all(res.params, kg, norm=tcfg.norm)
+        ef = metrics["entity_filtered"]
+        rp = metrics["relation_prediction"]
+        row = {
+            "setting": name,
+            "final_loss": round(res.loss_history[-1], 4),
+            "ent_mean_rank_filt": round(ef["mean_rank"], 1),
+            "ent_hits@10_filt": round(ef["hits@10"], 4),
+            "rel_hits@1": round(rp["hits@1"], 4),
+            "triplet_cls_acc": round(metrics["triplet_classification_acc"], 4),
+            "train_s": round(dt, 1),
+        }
+        rows.append(row)
+        if verbose:
+            print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only strategies|speedup|kernels|convergence]
+
+Prints one CSV-ish line per row; each module is importable for tests.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["strategies", "speedup", "kernels", "convergence"])
+    args = ap.parse_args()
+
+    from benchmarks import (bench_convergence, bench_kernels, bench_speedup,
+                            bench_strategies)
+
+    suites = {
+        "kernels": bench_kernels.run,
+        "convergence": bench_convergence.run,
+        "speedup": bench_speedup.run,
+        "strategies": bench_strategies.run,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    for name, fn in suites.items():
+        print(f"== bench:{name} ==", flush=True)
+        t0 = time.time()
+        fn(verbose=True)
+        print(f"== bench:{name} done ({time.time()-t0:.0f}s) ==", flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,59 @@
+"""Batched serving of a reduced zoo model: prefill + KV-cache decode with
+per-sequence completion (serving-side end-to-end driver).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma2-2b --batch 4
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import registry, vlm_stub
+from repro.serve import engine as engine_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b",
+                    choices=list(configs.ARCH_IDS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch, reduced=True)
+    task = registry.make_task(cfg)
+    params = task.init(jax.random.PRNGKey(0))
+    eng = engine_lib.Engine(task, params)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           size=(args.batch, args.prompt_len)).astype(np.int32)
+    extra = {}
+    if cfg.vision_tokens:
+        extra["patch_embeds"] = vlm_stub.synthetic_patch_embeds(
+            jax.random.PRNGKey(1), args.batch, cfg.vision_tokens,
+            cfg.d_model, cfg.dtype)
+    if cfg.encoder_decoder:
+        extra["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (args.batch, 32, cfg.d_model)
+        ).astype(cfg.dtype)
+
+    gcfg = engine_lib.GenerateConfig(max_new_tokens=args.max_new,
+                                     temperature=0.0)
+    t0 = time.time()
+    out = eng.generate(prompts, gcfg, extra_batch=extra or None)
+    dt = time.time() - t0
+    print(f"[{args.arch}-reduced] {out.size} tokens in {dt:.1f}s")
+    for i, row in enumerate(out[:2]):
+        print(f"  seq{i}: {row.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""repro — Parallel Knowledge Embedding with MapReduce (Fan et al., 2015)
+reimplemented as a production-grade multi-pod JAX training/serving framework.
+
+Layers:
+  repro.core      the paper's technique (TransE + MapReduce SGD/BGD)
+  repro.data      KG triplet pipeline + LM token pipeline
+  repro.models    the 10 assigned architectures (config-assembled)
+  repro.configs   exact published configs
+  repro.train     optimizer / losses / loop / checkpoint / fault tolerance
+  repro.serve     KV-cache serving engine
+  repro.parallel  sharding rules + collective helpers
+  repro.kernels   Pallas TPU kernels for the paper's hot spots
+  repro.launch    mesh / dry-run / train / serve entry points
+  repro.roofline  compiled-artifact roofline analysis
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,16 @@
+"""The paper's primary contribution: TransE + its MapReduce parallelization
+(SGD Map with random/average/mini-loss Reduce strategies, and the BGD
+gradient-Reduce paradigm), plus the hierarchical cross-pod generalization
+(`local_sgd`) that makes the technique a first-class feature for every
+architecture in this framework."""
+from repro.core import eval as kg_eval  # noqa: F401  (eval is a builtin name)
+from repro.core import local_sgd, mapreduce, merge, negative, transe  # noqa: F401
+
+__all__ = [
+    "transe",
+    "negative",
+    "merge",
+    "mapreduce",
+    "local_sgd",
+    "kg_eval",
+]

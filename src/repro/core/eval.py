@@ -1,0 +1,262 @@
+"""Evaluation protocol of the paper: entity inference, relation prediction,
+triplet classification.
+
+This is the *reference* (pure-jnp batched) implementation.  The
+entity-inference hot loop also exists as a Pallas TPU kernel
+(``kernels/rank_topk.py``); tests cross-check the two.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import negative, transe
+
+
+@dataclasses.dataclass
+class RankMetrics:
+    mean_rank: float
+    mrr: float
+    hits_at_1: float
+    hits_at_10: float
+    n: int
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "mean_rank": self.mean_rank,
+            "mrr": self.mrr,
+            "hits@1": self.hits_at_1,
+            "hits@10": self.hits_at_10,
+            "n": self.n,
+        }
+
+
+def _metrics_from_ranks(ranks: np.ndarray) -> RankMetrics:
+    ranks = ranks.astype(np.float64)
+    return RankMetrics(
+        mean_rank=float(ranks.mean()),
+        mrr=float((1.0 / ranks).mean()),
+        hits_at_1=float((ranks <= 1).mean()),
+        hits_at_10=float((ranks <= 10).mean()),
+        n=len(ranks),
+    )
+
+
+@jax.jit
+def _tail_scores(ent: jax.Array, rel: jax.Array, h: jax.Array, r: jax.Array,
+                 norm_is_l1: bool) -> jax.Array:
+    """d(h, r, e) for all candidate tails e: (B, E)."""
+    q = ent[h] + rel[r]                                # (B, k)
+    diff = q[:, None, :] - ent[None, :, :]             # (B, E, k)
+    return jax.lax.cond(
+        norm_is_l1,
+        lambda d: jnp.sum(jnp.abs(d), axis=-1),
+        lambda d: jnp.sqrt(jnp.sum(d * d, axis=-1) + 1e-12),
+        diff,
+    )
+
+
+@jax.jit
+def _head_scores(ent: jax.Array, rel: jax.Array, r: jax.Array, t: jax.Array,
+                 norm_is_l1: bool) -> jax.Array:
+    """d(e, r, t) for all candidate heads e: (B, E)."""
+    q = ent[t] - rel[r]                                # t - r
+    diff = ent[None, :, :] - q[:, None, :]
+    return jax.lax.cond(
+        norm_is_l1,
+        lambda d: jnp.sum(jnp.abs(d), axis=-1),
+        lambda d: jnp.sqrt(jnp.sum(d * d, axis=-1) + 1e-12),
+        diff,
+    )
+
+
+def entity_inference(
+    params: transe.Params,
+    test: np.ndarray,
+    norm: str = "l1",
+    known: Optional[set] = None,
+    batch: int = 128,
+) -> Dict[str, RankMetrics]:
+    """Link prediction: for every test triplet, rank the gold tail among all
+    entities substituted as tail, and the gold head likewise.  Returns raw
+    and (if ``known`` given) filtered metrics, averaged over both sides —
+    the paper's 'entity inference' task."""
+    ent = params["ent"]
+    rel = params["rel"]
+    l1 = norm == "l1"
+    raw_ranks, filt_ranks = [], []
+
+    for i in range(0, len(test), batch):
+        chunk = test[i : i + batch]
+        h = jnp.asarray(chunk[:, 0])
+        r = jnp.asarray(chunk[:, 1])
+        t = jnp.asarray(chunk[:, 2])
+        for side in ("tail", "head"):
+            if side == "tail":
+                scores = np.asarray(_tail_scores(ent, rel, h, r, l1))
+                gold = chunk[:, 2]
+            else:
+                scores = np.asarray(_head_scores(ent, rel, r, t, l1))
+                gold = chunk[:, 0]
+            gold_scores = scores[np.arange(len(chunk)), gold]
+            raw = 1 + (scores < gold_scores[:, None]).sum(axis=1)
+            raw_ranks.append(raw)
+            if known is not None:
+                filt = raw.copy()
+                for j, (hh, rr, tt) in enumerate(chunk):
+                    if side == "tail":
+                        better = [
+                            e for e in _known_tails(known, hh, rr)
+                            if e != tt and scores[j, e] < gold_scores[j]
+                        ]
+                    else:
+                        better = [
+                            e for e in _known_heads(known, rr, tt)
+                            if e != hh and scores[j, e] < gold_scores[j]
+                        ]
+                    filt[j] = raw[j] - len(better)
+                filt_ranks.append(filt)
+
+    out = {"raw": _metrics_from_ranks(np.concatenate(raw_ranks))}
+    if known is not None:
+        out["filtered"] = _metrics_from_ranks(np.concatenate(filt_ranks))
+    return out
+
+
+# Known-triplet indices for filtered metrics (built lazily, cached on the set
+# object's id — the set itself is immutable for our purposes).
+_KNOWN_CACHE: Dict[int, tuple] = {}
+
+
+def _known_index(known: set):
+    cached = _KNOWN_CACHE.get(id(known))
+    if cached is None:
+        by_hr: Dict[tuple, list] = {}
+        by_rt: Dict[tuple, list] = {}
+        for (h, r, t) in known:
+            by_hr.setdefault((h, r), []).append(t)
+            by_rt.setdefault((r, t), []).append(h)
+        cached = (by_hr, by_rt)
+        _KNOWN_CACHE[id(known)] = cached
+    return cached
+
+
+def _known_tails(known: set, h: int, r: int) -> list:
+    return _known_index(known)[0].get((h, r), [])
+
+
+def _known_heads(known: set, r: int, t: int) -> list:
+    return _known_index(known)[1].get((r, t), [])
+
+
+def relation_prediction(
+    params: transe.Params,
+    test: np.ndarray,
+    norm: str = "l1",
+    batch: int = 512,
+) -> RankMetrics:
+    """Rank the gold relation among all relations for each test (h, ?, t)."""
+    ent = params["ent"]
+    rel = np.asarray(params["rel"])
+    ranks = []
+    for i in range(0, len(test), batch):
+        chunk = test[i : i + batch]
+        h = np.asarray(ent)[chunk[:, 0]]
+        t = np.asarray(ent)[chunk[:, 2]]
+        diff = (h - t)[:, None, :] + rel[None, :, :]           # (B, R, k)
+        if norm == "l1":
+            scores = np.abs(diff).sum(-1)
+        else:
+            scores = np.sqrt((diff * diff).sum(-1) + 1e-12)
+        gold = scores[np.arange(len(chunk)), chunk[:, 1]]
+        ranks.append(1 + (scores < gold[:, None]).sum(axis=1))
+    return _metrics_from_ranks(np.concatenate(ranks))
+
+
+def triplet_classification(
+    params: transe.Params,
+    valid: np.ndarray,
+    test: np.ndarray,
+    n_entities: int,
+    norm: str = "l1",
+    seed: int = 0,
+) -> float:
+    """Is <h,r,t> true?  Learn a per-relation energy threshold on valid
+    (pos + corrupted neg), report accuracy on test (pos + corrupted neg) —
+    the paper's 'triplet classification' task (protocol of Socher et al. /
+    Wang et al. 2014)."""
+    key = jax.random.PRNGKey(seed)
+    k_v, k_t = jax.random.split(key)
+    valid_neg = np.asarray(
+        negative.corrupt_unif(k_v, jnp.asarray(valid), n_entities)
+    )
+    test_neg = np.asarray(
+        negative.corrupt_unif(k_t, jnp.asarray(test), n_entities)
+    )
+
+    def scores(tr):
+        return np.asarray(transe.energy(params, jnp.asarray(tr), norm))
+
+    sv_pos, sv_neg = scores(valid), scores(valid_neg)
+    st_pos, st_neg = scores(test), scores(test_neg)
+
+    n_rel = int(params["rel"].shape[0])
+    thresholds = np.zeros((n_rel,), np.float64)
+    global_scores = np.concatenate([sv_pos, sv_neg])
+    global_labels = np.concatenate(
+        [np.ones_like(sv_pos), np.zeros_like(sv_neg)]
+    )
+    global_thr = _best_threshold(global_scores, global_labels)
+    for r in range(n_rel):
+        m_pos = valid[:, 1] == r
+        m_neg = valid_neg[:, 1] == r
+        s = np.concatenate([sv_pos[m_pos], sv_neg[m_neg]])
+        l = np.concatenate([np.ones(m_pos.sum()), np.zeros(m_neg.sum())])
+        thresholds[r] = _best_threshold(s, l) if len(s) >= 4 else global_thr
+
+    pred_pos = st_pos < thresholds[test[:, 1]]
+    pred_neg = st_neg < thresholds[test_neg[:, 1]]
+    correct = pred_pos.sum() + (~pred_neg).sum()
+    return float(correct) / (len(test) + len(test_neg))
+
+
+def _best_threshold(scores: np.ndarray, labels: np.ndarray) -> float:
+    """Threshold minimizing classification error: score < thr => positive."""
+    order = np.argsort(scores)
+    s, l = scores[order], labels[order]
+    # predicting positive for the first i items: correct = pos in prefix +
+    # neg in suffix.
+    pos_prefix = np.concatenate([[0], np.cumsum(l)])
+    neg_suffix = np.concatenate([np.cumsum((1 - l)[::-1])[::-1], [0]])
+    correct = pos_prefix + neg_suffix
+    i = int(np.argmax(correct))
+    if i == 0:
+        return float(s[0]) - 1e-6 if len(s) else 0.0
+    if i == len(s):
+        return float(s[-1]) + 1e-6
+    return float(0.5 * (s[i - 1] + s[i]))
+
+
+def evaluate_all(
+    params: transe.Params,
+    kg,
+    norm: str = "l1",
+    filtered: bool = True,
+) -> Dict[str, object]:
+    """All three paper tasks in one call (used by benchmarks/examples)."""
+    known = kg.known_set() if filtered else None
+    ent = entity_inference(params, kg.test, norm, known)
+    rp = relation_prediction(params, kg.test, norm)
+    tc = triplet_classification(params, kg.valid, kg.test, kg.n_entities, norm)
+    out = {
+        "entity_raw": ent["raw"].row(),
+        "relation_prediction": rp.row(),
+        "triplet_classification_acc": tc,
+    }
+    if filtered:
+        out["entity_filtered"] = ent["filtered"].row()
+    return out

@@ -1,0 +1,290 @@
+"""The MapReduce TransE engine (paper §3).
+
+Two paradigms, exactly as the paper structures them:
+
+  * **SGD-based** (§3.1): Map = each worker runs a full local-SGD epoch on its
+    balanced subset with a private copy of the embeddings; Reduce = merge the
+    W inconsistent copies per key (``core/merge.py`` strategies).
+  * **BGD-based** (§3.2): Map = each worker computes the *gradient* of its
+    subset batch; Reduce = sum gradients; one global update.  Conflict-free
+    by construction — this is synchronous data-parallel training.
+
+Two execution backends with identical math:
+
+  * ``vmap``      — simulated workers on a single device (leading worker axis
+                    via ``jax.vmap``).  Exact semantics, used for quality
+                    benchmarks and tests on this CPU-only container.
+  * ``shard_map`` — real devices along a mesh axis; Reduce runs as
+                    ``jax.lax`` collectives.  ``reduce_impl`` picks the
+                    paper-literal ``allgather`` Reduce or the optimized
+                    ``psum`` winner-select Reduce (see merge.py).
+
+The module-level ``train()`` drives epochs host-side (partitioning, negative
+sampling keys, loss history) and is what examples/ and benchmarks/ call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import merge as merge_lib
+from repro.core import negative, transe
+from repro.data import kg as kg_lib
+
+Params = transe.Params
+
+
+@dataclasses.dataclass(frozen=True)
+class MapReduceConfig:
+    n_workers: int = 4
+    paradigm: str = "sgd"           # 'sgd' | 'bgd'
+    strategy: str = "average"       # merge_lib.STRATEGIES (sgd paradigm only)
+    reduce_impl: str = "psum"       # 'psum' | 'allgather' (shard_map backend)
+    backend: str = "vmap"           # 'vmap' | 'shard_map'
+    batch_size: int = 256
+    partition: str = "balanced"     # 'balanced' | 'stratified'
+    axis_name: str = "workers"
+
+    def __post_init__(self):
+        if self.paradigm not in ("sgd", "bgd"):
+            raise ValueError(f"bad paradigm {self.paradigm!r}")
+        if self.paradigm == "sgd" and self.strategy not in merge_lib.STRATEGIES:
+            raise ValueError(f"bad strategy {self.strategy!r}")
+        if self.backend not in ("vmap", "shard_map"):
+            raise ValueError(f"bad backend {self.backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# SGD paradigm
+# ---------------------------------------------------------------------------
+
+def _merge_tables_stacked(
+    strategy: str, stacked: Params, stats, merge_key: jax.Array
+) -> Params:
+    k_ent, k_rel = jax.random.split(merge_key)
+    ent = merge_lib.merge_stacked(
+        strategy, stacked["ent"], stats.ent_count, stats.ent_loss,
+        stats.mean_loss, k_ent,
+    )
+    rel = merge_lib.merge_stacked(
+        strategy, stacked["rel"], stats.rel_count, stats.rel_loss,
+        stats.mean_loss, k_rel,
+    )
+    return {"ent": ent, "rel": rel}
+
+
+def sgd_epoch_vmap(
+    params: Params,
+    pos: jax.Array,              # (W, S, B, 3)
+    neg: jax.Array,              # (W, S, B, 3)
+    cfg: MapReduceConfig,
+    tcfg: transe.TransEConfig,
+    merge_key: jax.Array,
+) -> tuple[Params, jax.Array]:
+    """Map (vmapped local epochs from shared params) + Reduce (stacked)."""
+    run = functools.partial(transe.run_epoch, cfg=tcfg)
+    stacked, stats = jax.vmap(run, in_axes=(None, 0, 0))(params, pos, neg)
+    merged = _merge_tables_stacked(cfg.strategy, stacked, stats, merge_key)
+    return merged, jnp.mean(stats.mean_loss)
+
+
+def sgd_epoch_shard(
+    params: Params,
+    pos: jax.Array,              # (W, S, B, 3), sharded on axis 0
+    neg: jax.Array,
+    cfg: MapReduceConfig,
+    tcfg: transe.TransEConfig,
+    merge_key: jax.Array,
+    mesh: Mesh,
+) -> tuple[Params, jax.Array]:
+    """Map/Reduce over a real mesh axis via shard_map."""
+    ax = cfg.axis_name
+
+    def worker(params, pos_w, neg_w):
+        # pos_w: (1, S, B, 3) — this shard's subset
+        local, stats = transe.run_epoch(params, pos_w[0], neg_w[0], tcfg)
+        k_ent, k_rel = jax.random.split(merge_key)
+        mfn = (
+            merge_lib.merge_collective
+            if cfg.reduce_impl == "psum"
+            else merge_lib.merge_allgather
+        )
+        ent = mfn(cfg.strategy, local["ent"], stats.ent_count, stats.ent_loss,
+                  stats.mean_loss, ax, k_ent)
+        rel = mfn(cfg.strategy, local["rel"], stats.rel_count, stats.rel_loss,
+                  stats.mean_loss, ax, k_rel)
+        loss = jax.lax.pmean(stats.mean_loss, ax)
+        return {"ent": ent, "rel": rel}, loss
+
+    fn = jax.shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(), P(ax), P(ax)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return fn(params, pos, neg)
+
+
+# ---------------------------------------------------------------------------
+# BGD paradigm
+# ---------------------------------------------------------------------------
+
+def bgd_epoch_vmap(
+    params: Params,
+    pos: jax.Array,              # (W, S, B, 3)
+    neg: jax.Array,
+    cfg: MapReduceConfig,
+    tcfg: transe.TransEConfig,
+) -> tuple[Params, jax.Array]:
+    """Per step: Map = per-worker gradients, Reduce = mean, global update.
+    Mathematically identical to single-thread minibatch SGD on the W·B-sized
+    union batch (tested in tests/test_mapreduce.py)."""
+    if tcfg.normalize == "epoch":
+        params = transe.normalize_entities(params)
+
+    pos_s = jnp.swapaxes(pos, 0, 1)   # (S, W, B, 3)
+    neg_s = jnp.swapaxes(neg, 0, 1)
+
+    def step(carry, batch):
+        params, loss_sum = carry
+        pos_b, neg_b = batch          # (W, B, 3)
+        losses, grads = jax.vmap(
+            lambda p, n: transe.batch_gradients(params, p, n, tcfg)
+        )(pos_b, neg_b)
+        grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+        params = transe.apply_gradients(params, grads, tcfg.learning_rate)
+        if tcfg.normalize == "step":
+            params = transe.normalize_entities(params)
+        return (params, loss_sum + jnp.mean(losses)), None
+
+    (params, loss_sum), _ = jax.lax.scan(
+        step, (params, jnp.zeros((), tcfg.dtype)), (pos_s, neg_s)
+    )
+    return params, loss_sum / pos_s.shape[0]
+
+
+def bgd_epoch_shard(
+    params: Params,
+    pos: jax.Array,
+    neg: jax.Array,
+    cfg: MapReduceConfig,
+    tcfg: transe.TransEConfig,
+    mesh: Mesh,
+) -> tuple[Params, jax.Array]:
+    ax = cfg.axis_name
+
+    def worker(params, pos_w, neg_w):
+        if tcfg.normalize == "epoch":
+            params = transe.normalize_entities(params)
+
+        def step(carry, batch):
+            params, loss_sum = carry
+            pos_b, neg_b = batch
+            loss, grads = transe.batch_gradients(params, pos_b, neg_b, tcfg)
+            grads = jax.lax.pmean(grads, ax)          # the BGD Reduce
+            params = transe.apply_gradients(params, grads, tcfg.learning_rate)
+            if tcfg.normalize == "step":
+                params = transe.normalize_entities(params)
+            return (params, loss_sum + jax.lax.pmean(loss, ax)), None
+
+        (params, loss_sum), _ = jax.lax.scan(
+            step, (params, jnp.zeros((), tcfg.dtype)), (pos_w[0], neg_w[0])
+        )
+        return params, loss_sum / pos_w.shape[1]
+
+    fn = jax.shard_map(
+        worker, mesh=mesh,
+        in_specs=(P(), P(ax), P(ax)), out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return fn(params, pos, neg)
+
+
+# ---------------------------------------------------------------------------
+# Epoch dispatcher + host-side training driver
+# ---------------------------------------------------------------------------
+
+def make_epoch_fn(
+    cfg: MapReduceConfig, tcfg: transe.TransEConfig, mesh: Optional[Mesh] = None
+) -> Callable:
+    """Returns jitted ``epoch_fn(params, pos, neg, merge_key) -> (params, loss)``."""
+    if cfg.backend == "shard_map":
+        if mesh is None:
+            raise ValueError("shard_map backend needs a mesh")
+        if cfg.paradigm == "sgd":
+            fn = lambda p, pos, neg, k: sgd_epoch_shard(p, pos, neg, cfg, tcfg, k, mesh)
+        else:
+            fn = lambda p, pos, neg, k: bgd_epoch_shard(p, pos, neg, cfg, tcfg, mesh)
+    else:
+        if cfg.paradigm == "sgd":
+            fn = lambda p, pos, neg, k: sgd_epoch_vmap(p, pos, neg, cfg, tcfg, k)
+        else:
+            fn = lambda p, pos, neg, k: bgd_epoch_vmap(p, pos, neg, cfg, tcfg)
+    return jax.jit(fn)
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Params
+    loss_history: list
+    epochs_run: int
+
+
+def train(
+    kg: kg_lib.KG,
+    tcfg: transe.TransEConfig,
+    cfg: MapReduceConfig,
+    *,
+    epochs: int = 50,
+    seed: int = 0,
+    mesh: Optional[Mesh] = None,
+    params: Optional[Params] = None,
+    callback: Optional[Callable[[int, float], None]] = None,
+) -> TrainResult:
+    """Host-side epoch driver: balanced partitioning, deterministic batches,
+    negative sampling, Map/Reduce epoch, loss history.
+
+    ``cfg.n_workers == 1`` with any backend reproduces single-thread
+    Algorithm 1 (the paper's baseline)."""
+    part_fn = (
+        kg_lib.partition_stratified
+        if cfg.partition == "stratified"
+        else kg_lib.partition_balanced
+    )
+    partitioned = part_fn(seed, kg.train, cfg.n_workers)
+
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        key, k_init = jax.random.split(key)
+        params = transe.init_params(k_init, tcfg)
+
+    epoch_fn = make_epoch_fn(cfg, tcfg, mesh)
+
+    if cfg.backend == "shard_map":
+        assert mesh is not None
+        rep = NamedSharding(mesh, P())
+        shard = NamedSharding(mesh, P(cfg.axis_name))
+        params = jax.device_put(params, rep)
+
+    history = []
+    for epoch in range(epochs):
+        pos = kg_lib.epoch_batches(seed, epoch, partitioned, cfg.batch_size)
+        key, k_neg, k_merge = jax.random.split(key, 3)
+        pos = jnp.asarray(pos)
+        neg = negative.make_negatives(k_neg, pos, tcfg.n_entities, tcfg.sampling)
+        if cfg.backend == "shard_map":
+            pos = jax.device_put(pos, shard)
+            neg = jax.device_put(neg, shard)
+        params, loss = epoch_fn(params, pos, neg, k_merge)
+        loss = float(loss)
+        history.append(loss)
+        if callback is not None:
+            callback(epoch, loss)
+    return TrainResult(params=params, loss_history=history, epochs_run=epochs)

@@ -1,0 +1,235 @@
+"""Reduce-phase merge strategies (paper §3.1.2).
+
+After the Map phase, W workers hold W inconsistent copies of each embedding
+table.  The paper proposes three ways to Reduce the W vectors per key:
+
+  * ``random``            — pick one worker's vector per key at random,
+  * ``average``           — per-key mean,
+  * ``miniloss``          — the vector from the worker with the smallest loss.
+
+We implement each in two refinements (DESIGN.md §2 Faithfulness notes):
+  * per-key *touch-aware* variants (only workers whose subset actually
+    updated the key participate) — ``random``, ``average``,
+    ``miniloss_perkey``;
+  * the literal global variants — ``average_all`` (plain mean over all
+    workers), ``miniloss_global`` (min-mean-loss worker wins every key).
+
+Two execution paths with identical semantics:
+  * **stacked**: tables carry a leading worker axis ``(W, N, k)`` — used by
+    the vmap simulation backend and by the all_gather Reduce;
+  * **collective**: per-shard tables ``(N, k)`` inside ``shard_map`` with an
+    ``axis_name`` — the production path.  The priority-select trick (psum of
+    ``emb * onehot(winner)``) reduces Reduce traffic from O(W·N·k)
+    (all_gather, paper-literal) to O(N·k) (two psums) — see DESIGN.md §4 and
+    EXPERIMENTS.md §Perf.
+
+A "table" here is one embedding matrix ``(N, k)`` with its per-key stats
+``count (N,)`` / ``loss (N,)``; callers apply the merge per table ('ent',
+'rel').
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+STRATEGIES = (
+    "random",
+    "average",
+    "average_all",
+    "miniloss_perkey",
+    "miniloss_global",
+)
+
+_BIG = 1e30
+
+
+# ---------------------------------------------------------------------------
+# Stacked path: tables (W, N, k); counts/losses (W, N); worker_loss (W,)
+# ---------------------------------------------------------------------------
+
+def _select_by_priority_stacked(
+    stacked: jax.Array, priority: jax.Array
+) -> jax.Array:
+    """Per key, return the row of the worker with the max priority.
+    ``stacked``: (W, N, k); ``priority``: (W, N) -> (N, k)."""
+    winner = jnp.argmax(priority, axis=0)                       # (N,)
+    return jnp.take_along_axis(
+        stacked, winner[None, :, None], axis=0
+    )[0]
+
+
+def merge_average_all_stacked(stacked: jax.Array) -> jax.Array:
+    return jnp.mean(stacked, axis=0)
+
+
+def merge_average_stacked(stacked: jax.Array, counts: jax.Array) -> jax.Array:
+    """Touch-count-weighted mean; keys untouched everywhere keep the plain
+    mean (all copies are identical there, so it is the anchor value)."""
+    w = counts[..., None]                                       # (W, N, 1)
+    total = jnp.sum(w, axis=0)
+    weighted = jnp.sum(stacked * w, axis=0)
+    plain = jnp.mean(stacked, axis=0)
+    return jnp.where(total > 0, weighted / jnp.maximum(total, 1.0), plain)
+
+
+def _random_priorities(key: jax.Array, W: int, N: int) -> jax.Array:
+    """Per-worker uniform priorities from worker-folded keys — the same
+    construction in the stacked and collective paths, so the two backends
+    make bit-identical choices given the same key."""
+    return jax.vmap(
+        lambda w: jax.random.uniform(jax.random.fold_in(key, w), (N,))
+    )(jnp.arange(W))
+
+
+def merge_random_stacked(
+    key: jax.Array, stacked: jax.Array, counts: jax.Array
+) -> jax.Array:
+    """Per-key uniform choice among the workers that touched the key."""
+    W, N = counts.shape
+    u = _random_priorities(key, W, N)
+    priority = jnp.where(counts > 0, u, -_BIG)
+    # no toucher anywhere -> all copies identical; worker argmax(u) is fine.
+    any_touch = jnp.any(counts > 0, axis=0)
+    priority = jnp.where(any_touch[None, :], priority, u)
+    return _select_by_priority_stacked(stacked, priority)
+
+
+def merge_miniloss_perkey_stacked(
+    stacked: jax.Array, counts: jax.Array, losses: jax.Array
+) -> jax.Array:
+    """Per key: the worker with the smallest mean per-touch loss wins."""
+    mean_loss = jnp.where(counts > 0, losses / jnp.maximum(counts, 1.0), _BIG)
+    priority = -mean_loss                                        # max == min loss
+    return _select_by_priority_stacked(stacked, priority)
+
+
+def merge_miniloss_global_stacked(
+    stacked: jax.Array, worker_loss: jax.Array
+) -> jax.Array:
+    """The single worker with the smallest epoch loss wins every key."""
+    winner = jnp.argmin(worker_loss)
+    return stacked[winner]
+
+
+def merge_stacked(
+    strategy: str,
+    stacked: jax.Array,
+    counts: jax.Array,
+    losses: jax.Array,
+    worker_loss: jax.Array,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    if strategy == "average":
+        return merge_average_stacked(stacked, counts)
+    if strategy == "average_all":
+        return merge_average_all_stacked(stacked)
+    if strategy == "random":
+        if key is None:
+            raise ValueError("'random' strategy needs a PRNG key")
+        return merge_random_stacked(key, stacked, counts)
+    if strategy == "miniloss_perkey":
+        return merge_miniloss_perkey_stacked(stacked, counts, losses)
+    if strategy == "miniloss_global":
+        return merge_miniloss_global_stacked(stacked, worker_loss)
+    raise ValueError(f"unknown strategy {strategy!r}; want one of {STRATEGIES}")
+
+
+# ---------------------------------------------------------------------------
+# Collective path: per-shard (N, k) inside shard_map over `axis`
+# ---------------------------------------------------------------------------
+
+def _select_by_priority_psum(
+    local: jax.Array, priority: jax.Array, axis: str
+) -> jax.Array:
+    """Collective winner-take-all: O(N) + O(N·k) psums instead of an
+    O(W·N·k) all_gather.
+
+    Exact two-phase selection (float-safe): (1) pmax finds the best priority
+    — pmax returns one of the operand values bit-exactly, so the equality
+    test below is well defined; (2) among workers tying at the best
+    priority, the smallest worker index wins (matching the stacked path's
+    ``argmax`` first-winner tie-break); (3) one masked psum of the winner's
+    rows."""
+    idx = jax.lax.axis_index(axis).astype(jnp.float32)
+    best = jax.lax.pmax(priority, axis)                           # (N,)
+    am_best = priority == best
+    my_claim = jnp.where(am_best, idx, jnp.inf)
+    winner = jax.lax.pmin(my_claim, axis)                         # (N,)
+    mine = (am_best & (idx == winner)).astype(local.dtype)        # (N,)
+    return jax.lax.psum(local * mine[:, None], axis)
+
+
+def merge_collective(
+    strategy: str,
+    local: jax.Array,            # (N, k) this worker's table
+    count: jax.Array,            # (N,)
+    loss: jax.Array,             # (N,)
+    worker_loss: jax.Array,      # scalar, this worker's epoch loss
+    axis: str,
+    key: jax.Array | None = None,
+    liveness: jax.Array | None = None,
+) -> jax.Array:
+    """psum-based Reduce (production path).  ``liveness`` is an optional
+    per-worker 0/1 scalar (this worker's own flag): dead workers are excluded
+    from every strategy — the K-of-N fault-tolerant merge of DESIGN.md §4."""
+    live = jnp.ones((), local.dtype) if liveness is None else liveness.astype(local.dtype)
+    W_live = jax.lax.psum(live, axis)
+
+    if strategy == "average_all":
+        return jax.lax.psum(local * live, axis) / jnp.maximum(W_live, 1.0)
+
+    if strategy == "average":
+        w = count * live                                          # (N,)
+        total = jax.lax.psum(w, axis)
+        weighted = jax.lax.psum(local * w[:, None], axis)
+        plain = jax.lax.psum(local * live, axis) / jnp.maximum(W_live, 1.0)
+        return jnp.where(
+            total[:, None] > 0, weighted / jnp.maximum(total, 1.0)[:, None], plain
+        )
+
+    if strategy == "random":
+        if key is None:
+            raise ValueError("'random' strategy needs a PRNG key")
+        # fold in the worker id so every shard draws a distinct priority from
+        # a shared key (same key across shards => deterministic merge);
+        # identical construction to _random_priorities for backend parity.
+        idx = jax.lax.axis_index(axis)
+        u = jax.random.uniform(jax.random.fold_in(key, idx), count.shape)
+        touched = (count > 0) & (live > 0)
+        any_touch = jax.lax.psum(touched.astype(jnp.float32), axis) > 0
+        pri = jnp.where(touched, u, jnp.where(any_touch, -_BIG, u))
+        pri = jnp.where(live > 0, pri, -2 * _BIG)
+        return _select_by_priority_psum(local, pri, axis)
+
+    if strategy == "miniloss_perkey":
+        mean_loss = jnp.where(count > 0, loss / jnp.maximum(count, 1.0), _BIG)
+        pri = jnp.where(live > 0, -mean_loss, -2 * _BIG)
+        return _select_by_priority_psum(local, pri, axis)
+
+    if strategy == "miniloss_global":
+        pri = jnp.where(live > 0, -worker_loss, -2 * _BIG)
+        pri = jnp.broadcast_to(pri, count.shape)
+        return _select_by_priority_psum(local, pri, axis)
+
+    raise ValueError(f"unknown strategy {strategy!r}; want one of {STRATEGIES}")
+
+
+def merge_allgather(
+    strategy: str,
+    local: jax.Array,
+    count: jax.Array,
+    loss: jax.Array,
+    worker_loss: jax.Array,
+    axis: str,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Paper-literal Reduce: gather all W copies then run the stacked merge.
+    O(W·N·k) collective bytes — kept as the faithful baseline the §Perf
+    hillclimb starts from."""
+    stacked = jax.lax.all_gather(local, axis)                    # (W, N, k)
+    counts = jax.lax.all_gather(count, axis)                     # (W, N)
+    losses = jax.lax.all_gather(loss, axis)
+    wl = jax.lax.all_gather(worker_loss, axis)                   # (W,)
+    return merge_stacked(strategy, stacked, counts, losses, wl, key)

@@ -1,0 +1,95 @@
+"""Corrupted-triplet construction (paper Eq. 2).
+
+Delta'_{(h,r,t)} = {(h',r,t) | h' in E, h' != h} U {(h,r,t') | t' in E, t' != t}
+
+For each training triplet we corrupt EITHER the head OR the tail:
+ - 'unif': 50/50 coin (TransE / the paper),
+ - 'bern': per-relation Bernoulli using head/tail multiplicity statistics
+   (TransH; reduces false negatives for 1-to-N / N-to-1 relations).  Included
+   because the paper's successors it cites use it; benchmarks default 'unif'.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def corrupt_unif(
+    key: jax.Array, triplets: jax.Array, n_entities: int
+) -> jax.Array:
+    """Corrupt head or tail uniformly at random.
+
+    The replacement entity is drawn uniformly; we resample-by-shift to avoid
+    h' == h exactly (add a nonzero offset mod E), matching Eq. 2's h' != h
+    constraint without rejection loops (shapes stay static).
+    """
+    k_side, k_ent = jax.random.split(key)
+    B = triplets.shape[0]
+    corrupt_head = jax.random.bernoulli(k_side, 0.5, (B,))
+    # offset in [1, E-1] guarantees the replacement differs from the original.
+    offset = jax.random.randint(k_ent, (B,), 1, n_entities)
+    h, r, t = triplets[:, 0], triplets[:, 1], triplets[:, 2]
+    new_h = (h + offset) % n_entities
+    new_t = (t + offset) % n_entities
+    h2 = jnp.where(corrupt_head, new_h, h)
+    t2 = jnp.where(corrupt_head, t, new_t)
+    return jnp.stack([h2, r, t2], axis=1).astype(triplets.dtype)
+
+
+def bernoulli_stats(triplets: np.ndarray, n_relations: int) -> np.ndarray:
+    """tph/(tph+hpt) per relation — probability of corrupting the HEAD
+    (TransH eq. for 'bern' sampling).  Host-side (numpy) preprocessing."""
+    probs = np.full((n_relations,), 0.5, np.float32)
+    for r in range(n_relations):
+        mask = triplets[:, 1] == r
+        if not mask.any():
+            continue
+        sub = triplets[mask]
+        # tails-per-head / heads-per-tail
+        tph = len(sub) / max(len(np.unique(sub[:, 0])), 1)
+        hpt = len(sub) / max(len(np.unique(sub[:, 2])), 1)
+        probs[r] = tph / (tph + hpt)
+    return probs
+
+
+def corrupt_bern(
+    key: jax.Array,
+    triplets: jax.Array,
+    n_entities: int,
+    head_prob_per_rel: jax.Array,
+) -> jax.Array:
+    """'bern' corruption using precomputed per-relation head probabilities."""
+    k_side, k_ent = jax.random.split(key)
+    B = triplets.shape[0]
+    p = head_prob_per_rel[triplets[:, 1]]
+    corrupt_head = jax.random.uniform(k_side, (B,)) < p
+    offset = jax.random.randint(k_ent, (B,), 1, n_entities)
+    h, r, t = triplets[:, 0], triplets[:, 1], triplets[:, 2]
+    h2 = jnp.where(corrupt_head, (h + offset) % n_entities, h)
+    t2 = jnp.where(corrupt_head, t, (t + offset) % n_entities)
+    return jnp.stack([h2, r, t2], axis=1).astype(triplets.dtype)
+
+
+def make_negatives(
+    key: jax.Array,
+    pos_batches: jax.Array,      # (S, B, 3) or (W, S, B, 3)
+    n_entities: int,
+    sampling: str = "unif",
+    head_prob_per_rel: jax.Array | None = None,
+) -> jax.Array:
+    """Vectorized corruption for stacked batch tensors of any leading rank."""
+    lead = pos_batches.shape[:-2]
+    flat = pos_batches.reshape((-1,) + pos_batches.shape[-2:])
+    keys = jax.random.split(key, flat.shape[0])
+    if sampling == "unif":
+        neg = jax.vmap(lambda k, p: corrupt_unif(k, p, n_entities))(keys, flat)
+    elif sampling == "bern":
+        if head_prob_per_rel is None:
+            raise ValueError("'bern' sampling requires head_prob_per_rel")
+        neg = jax.vmap(
+            lambda k, p: corrupt_bern(k, p, n_entities, head_prob_per_rel)
+        )(keys, flat)
+    else:
+        raise ValueError(f"unknown sampling {sampling!r}")
+    return neg.reshape(lead + pos_batches.shape[-2:])

@@ -1,0 +1,2 @@
+"""Data substrates: knowledge-graph triplet pipeline (the paper's workload)
+and a deterministic sharded token pipeline for the LM architectures."""

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's compute hot spots (training triplet
+scoring + entity-inference ranking).  Validated in interpret mode on CPU;
+written for TPU v5e (BlockSpec VMEM tiling, MXU-shaped L2 path)."""
+from repro.kernels import ops, rank_topk, ref, transe_score  # noqa: F401

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: streaming entity-inference ranking.
+
+The paper's evaluation hot loop scores EVERY entity as a candidate
+replacement for each test triplet — an O(B·E·k) sweep that dominates eval
+wall-time on Freebase-scale tables.  A naive lowering materializes the
+(B, E) distance matrix in HBM; this kernel streams entity-table tiles
+through VMEM and keeps only a running (B,) counter of entities strictly
+closer than the gold — the rank — FlashAttention-style two-level tiling
+adapted from softmax-accumulation to metric ranking (DESIGN.md §3).
+
+TPU adaptation:
+  * L2 path: expand ||q - e||² = ||q||² - 2 q·e + ||e||² so the O(B·E·k)
+    contraction is a (TB, k) x (k, TE) matmul — it runs on the MXU. Tiles
+    are multiples of 128 to match the MXU/lane geometry.
+  * L1 path: no contraction form exists; the (TB, TE, k) |diff| reduce runs
+    on the VPU with k as the minor (lane) axis.
+  * Accumulation across entity tiles exploits Pallas' revisiting-output
+    semantics: the count block's index_map ignores the entity-tile index, so
+    it stays resident in VMEM while the inner grid dimension sweeps E.
+
+VMEM budget (fp32): q (TB, k) + table tile (TE, k) + L1 intermediate
+(TB, TE) — with TB=256, TE=512, k=128: 128 KB + 256 KB + 512 KB « 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TB = 256   # query tile (rows)
+DEFAULT_TE = 512   # entity-table tile (rows)
+
+
+def _kernel(q_ref, tab_ref, gold_ref, cnt_ref, *, norm: str):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    q = q_ref[...].astype(jnp.float32)          # (TB, k)
+    tab = tab_ref[...].astype(jnp.float32)      # (TE, k)
+    gold = gold_ref[...].astype(jnp.float32)    # (TB, 1)
+
+    if norm == "l1":
+        # (TB, TE, k) lives only in VREG/VMEM for this tile pair
+        d = jnp.sum(jnp.abs(q[:, None, :] - tab[None, :, :]), axis=-1)
+    else:
+        qq = jnp.sum(q * q, axis=-1, keepdims=True)              # (TB, 1)
+        tt = jnp.sum(tab * tab, axis=-1)[None, :]                # (1, TE)
+        # MXU contraction
+        qt = jax.lax.dot_general(
+            q, tab, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        d = jnp.sqrt(jnp.maximum(qq - 2.0 * qt + tt, 0.0) + 1e-12)
+
+    closer = (d < gold).astype(jnp.float32)                      # (TB, TE)
+    cnt_ref[...] += jnp.sum(closer, axis=1, keepdims=True)
+
+
+def rank_counts(
+    queries: jax.Array,        # (B, k)
+    table: jax.Array,          # (E, k)
+    gold_d: jax.Array,         # (B,)
+    *,
+    norm: str = "l1",
+    tb: int = DEFAULT_TB,
+    te: int = DEFAULT_TE,
+    interpret: bool = False,
+) -> jax.Array:
+    """Count of entities strictly closer than gold, per query: (B,) int32.
+    rank = 1 + count.  Inputs are padded here; pad rows of the table get
+    +inf-like distances and never count."""
+    B, k = queries.shape
+    E = table.shape[0]
+
+    tb = min(tb, max(8, B))
+    te = min(te, max(8, E))
+    Bp = -(-B // tb) * tb
+    Ep = -(-E // te) * te
+
+    qp = jnp.zeros((Bp, k), queries.dtype).at[:B].set(queries)
+    # pad entities FAR away: distance to anything is huge -> never "closer"
+    tp = jnp.full((Ep, k), 1e9, table.dtype).at[:E].set(table)
+    gp = jnp.zeros((Bp, 1), jnp.float32).at[:B, 0].set(gold_d.astype(jnp.float32))
+
+    grid = (Bp // tb, Ep // te)
+
+    cnt = pl.pallas_call(
+        functools.partial(_kernel, norm=norm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((te, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((tb, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
+        interpret=interpret,
+    )(qp, tp, gp)
+    return cnt[:B, 0].astype(jnp.int32)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantic ground truth: kernel tests sweep shapes/dtypes and
+assert allclose against these functions (interpret=True on CPU, real TPU on
+hardware).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _dist(diff: jax.Array, norm: str) -> jax.Array:
+    if norm == "l1":
+        return jnp.sum(jnp.abs(diff), axis=-1)
+    return jnp.sqrt(jnp.sum(diff * diff, axis=-1) + 1e-12)
+
+
+def transe_score_ref(
+    ent: jax.Array,            # (E, k)
+    rel: jax.Array,            # (R, k)
+    idx: jax.Array,            # (B, 5) int32 [h, r, t, nh, nt]
+    margin: float,
+    norm: str,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused TransE pos/neg scoring + hinge.  Returns (loss, d_pos, d_neg),
+    each (B,) in fp32."""
+    ent = ent.astype(jnp.float32)
+    rel = rel.astype(jnp.float32)
+    h = ent[idx[:, 0]]
+    r = rel[idx[:, 1]]
+    t = ent[idx[:, 2]]
+    nh = ent[idx[:, 3]]
+    nt = ent[idx[:, 4]]
+    d_pos = _dist(h + r - t, norm)
+    d_neg = _dist(nh + r - nt, norm)
+    loss = jnp.maximum(0.0, margin + d_pos - d_neg)
+    return loss, d_pos, d_neg
+
+
+def rank_counts_ref(
+    queries: jax.Array,        # (B, k) — h+r (tail side) or t-r (head side)
+    table: jax.Array,          # (E, k)
+    gold_d: jax.Array,         # (B,) distance of the gold entity
+    norm: str,
+) -> jax.Array:
+    """Number of entities strictly closer than the gold: rank = 1 + count.
+    Returns (B,) int32."""
+    q = queries.astype(jnp.float32)
+    t = table.astype(jnp.float32)
+    if norm == "l1":
+        d = jnp.sum(jnp.abs(q[:, None, :] - t[None, :, :]), axis=-1)
+    else:
+        d = jnp.sqrt(
+            jnp.sum(q * q, axis=-1)[:, None]
+            - 2.0 * q @ t.T
+            + jnp.sum(t * t, axis=-1)[None, :]
+            + 1e-12
+        )
+    return jnp.sum(d < gold_d.astype(jnp.float32)[:, None], axis=-1).astype(
+        jnp.int32
+    )

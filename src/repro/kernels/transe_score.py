@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: fused TransE triplet scoring (gather + translation
+distance + margin hinge).
+
+The paper's training hot spot is the per-triplet update: gather 5 embedding
+rows (h, r, t, corrupted-h, corrupted-t), form `h + r - t`, reduce to a
+distance, take the hinge.  A naive XLA lowering materializes the five (B, k)
+gathers in HBM before the elementwise work; this kernel fuses the whole pipe
+so each row is DMA'd into VMEM exactly once and only (B,) scalars leave.
+
+TPU adaptation (DESIGN.md §3): the gather uses the scalar-prefetch BlockSpec
+pattern — the triplet index array is prefetched, and each grid step's
+``index_map`` selects which *row block* of the embedding table the DMA engine
+brings to VMEM next.  Rows stream through a double-buffered pipeline; the
+VPU does the (1, k) elementwise work.  The MXU is idle by design — this op
+has no contraction; it is memory-bound, which the roofline table reflects.
+
+Working set per grid step: 5 rows x k x 4B + 3 scalars.  k <= 4096 keeps it
+far under VMEM (~16 MB); block shapes are (1, k) with k padded to the lane
+width (128) by the wrapper in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, h_ref, r_ref, t_ref, nh_ref, nt_ref,
+            loss_ref, dpos_ref, dneg_ref, *, margin: float, norm: str):
+    """One grid step = one triplet.  All refs are VMEM blocks."""
+    h = h_ref[0, :].astype(jnp.float32)
+    r = r_ref[0, :].astype(jnp.float32)
+    t = t_ref[0, :].astype(jnp.float32)
+    nh = nh_ref[0, :].astype(jnp.float32)
+    nt = nt_ref[0, :].astype(jnp.float32)
+
+    pos = h + r - t
+    neg = nh + r - nt
+    if norm == "l1":
+        d_pos = jnp.sum(jnp.abs(pos))
+        d_neg = jnp.sum(jnp.abs(neg))
+    else:
+        d_pos = jnp.sqrt(jnp.sum(pos * pos) + 1e-12)
+        d_neg = jnp.sqrt(jnp.sum(neg * neg) + 1e-12)
+
+    loss_ref[0, 0] = jnp.maximum(0.0, margin + d_pos - d_neg)
+    dpos_ref[0, 0] = d_pos
+    dneg_ref[0, 0] = d_neg
+
+
+def transe_score(
+    ent: jax.Array,           # (E, k)
+    rel: jax.Array,           # (R, k)
+    idx: jax.Array,           # (B, 5) int32: [h, r, t, nh, nt]
+    *,
+    margin: float = 1.0,
+    norm: str = "l1",
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (hinge_loss, d_pos, d_neg), each (B,) fp32."""
+    B = idx.shape[0]
+    E, k = ent.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            # each spec DMAs one table row per grid step, chosen by the
+            # prefetched index column — the TPU-native embedding gather.
+            pl.BlockSpec((1, k), lambda i, idx: (idx[i, 0], 0)),  # h   <- ent
+            pl.BlockSpec((1, k), lambda i, idx: (idx[i, 1], 0)),  # r   <- rel
+            pl.BlockSpec((1, k), lambda i, idx: (idx[i, 2], 0)),  # t   <- ent
+            pl.BlockSpec((1, k), lambda i, idx: (idx[i, 3], 0)),  # nh  <- ent
+            pl.BlockSpec((1, k), lambda i, idx: (idx[i, 4], 0)),  # nt  <- ent
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, idx: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, idx: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, idx: (i, 0)),
+        ],
+    )
+
+    out_shape = [
+        jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        jax.ShapeDtypeStruct((B, 1), jnp.float32),
+    ]
+
+    loss, d_pos, d_neg = pl.pallas_call(
+        functools.partial(_kernel, margin=margin, norm=norm),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(idx, ent, rel, ent, ent, ent)
+    return loss[:, 0], d_pos[:, 0], d_neg[:, 0]

@@ -1,0 +1,1 @@
+"""Entry points: production mesh, multi-pod dry-run, train/serve drivers."""

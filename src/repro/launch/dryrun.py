@@ -1,0 +1,198 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and extract memory / cost / collective
+evidence for EXPERIMENTS.md.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count at first init, and the dry-run (and ONLY the
+dry-run) needs 512 placeholder host devices for the (2,16,16) mesh.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # single-pod sweep
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.parallel import sharding as shard_lib
+from repro.roofline import analysis as roof
+from repro.roofline import hlo_cost
+from repro.train import loop as loop_lib, optimizer as opt_lib
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "pod2x16x16" if multi_pod else "pod16x16"
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               opt_name: str | None = None, cfg_overrides: dict | None = None):
+    """Build, lower and compile one cell.  Returns the evidence record."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    cfg = configs.get_config(arch)
+    if cfg_overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    opt_name = opt_name or cfg.optimizer
+    task = registry.make_task(cfg)
+    cell = registry.SHAPES[shape_name]
+    specs = task.input_specs(shape_name)
+    profile = cfg.sharding_profile
+
+    params_struct = jax.eval_shape(task.init, jax.random.PRNGKey(0))
+    p_sh = shard_lib.param_shardings(params_struct, mesh, profile)
+    b_sh = shard_lib.data_shardings(specs["batch"], mesh, profile)
+
+    t0 = time.time()
+    with mesh:
+        if cell.kind == "train":
+            opt_cfg = opt_lib.OptConfig(name=opt_name)
+            opt_struct = jax.eval_shape(
+                lambda p: opt_lib.init(p, opt_cfg), params_struct)
+            o_sh = shard_lib.opt_shardings(opt_struct, p_sh, mesh, profile)
+            step = loop_lib.make_train_step(
+                task, opt_cfg, microbatches=cfg.train_microbatches,
+                param_shardings=p_sh)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            ).lower(params_struct, opt_struct, specs["batch"])
+        elif cell.kind == "prefill":
+            lowered = jax.jit(
+                task.prefill, in_shardings=(p_sh, b_sh),
+            ).lower(params_struct, specs["batch"])
+        else:  # decode
+            c_sh = shard_lib.cache_shardings(specs["caches"], mesh, profile)
+            lowered = jax.jit(
+                task.decode_step,
+                in_shardings=(p_sh, b_sh, c_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(2,),
+            ).lower(params_struct, specs["batch"], specs["caches"])
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    # trip-count-aware per-device costs (backend cost_analysis counts scan
+    # bodies once — see roofline/hlo_cost.py); raw numbers kept alongside.
+    hc = hlo_cost.analyze(hlo)
+    mflops = roof.model_flops(cfg, cell)
+    rl = roof.roofline_from_hlo(hc, n_chips, mflops)
+    buffers = hlo_cost.top_buffers(hlo, n=10)
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": _mesh_tag(multi_pod),
+        "kind": cell.kind,
+        "profile": profile,
+        "optimizer": opt_name if cell.kind == "train" else None,
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_gb": round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                 + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+                / 2**30, 3),
+        },
+        "cost_raw_backend": {k: cost.get(k) for k in ("flops", "bytes accessed")},
+        "hlo_cost": hc.row(),
+        "top_buffers_gb": [[n, round(g, 3)] for n, g in buffers],
+        "roofline": rl.row(),
+    }
+    return record
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             opt_name: str | None = None) -> dict:
+    tag = _mesh_tag(multi_pod)
+    os.makedirs(os.path.join(out_dir, tag), exist_ok=True)
+    path = os.path.join(out_dir, tag, f"{arch}__{shape_name}.json")
+    if not registry.cell_is_applicable(arch, shape_name):
+        record = {
+            "arch": arch, "shape": shape_name, "mesh": tag,
+            "status": "skipped",
+            "reason": "full-attention arch; long_500k requires sub-quadratic "
+                      "sequence mixing (DESIGN.md §5)",
+        }
+    else:
+        try:
+            record = lower_cell(arch, shape_name, multi_pod, opt_name)
+        except Exception as e:  # noqa: BLE001 — recorded, sweep continues
+            record = {
+                "arch": arch, "shape": shape_name, "mesh": tag,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:],
+            }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(configs.ARCH_IDS))
+    ap.add_argument("--shape", choices=list(registry.SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--optimizer", default=None,
+                    help="override the config's optimizer")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in configs.ARCH_IDS:
+            for shape in registry.SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    for arch, shape in cells:
+        t0 = time.time()
+        rec = run_cell(arch, shape, args.multi_pod, args.out, args.optimizer)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" mem/dev={rec['memory']['peak_per_device_gb']}GB "
+                     f"terms(c/m/x)={r['compute_s']:.3e}/{r['memory_s']:.3e}/"
+                     f"{r['collective_s']:.3e}s bottleneck={r['bottleneck']}")
+        elif status == "error":
+            extra = " " + rec["error"][:160]
+        print(f"[{_mesh_tag(args.multi_pod)}] {arch} x {shape}: {status} "
+              f"({time.time() - t0:.0f}s){extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

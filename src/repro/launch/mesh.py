@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets the forced-host-device XLA flag
+before any jax initialization; everything else sees the real topology).
+
+Mesh semantics (DESIGN.md §4):
+  * ``pod``   — the paper's Map-worker axis: MapReduce/local-SGD merges
+                cross this axis every H steps (cheap inter-pod links);
+  * ``data``  — intra-pod data parallelism = the paper's BGD Reduce
+                (gradient psum every step) + the FSDP shard axis;
+  * ``model`` — tensor/expert parallelism.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for_devices(n: int, model_parallel: int = 1):
+    """Small-scale helper for tests/examples: (data, model) over n devices."""
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

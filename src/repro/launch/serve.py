@@ -1,0 +1,61 @@
+"""Serving launcher: batched prefill + decode on any zoo arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
+        --batch 4 --prompt-len 16 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import registry, vlm_stub
+from repro.serve import engine as engine_lib
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(configs.ARCH_IDS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_config(args.arch, reduced=args.reduced)
+    task = registry.make_task(cfg)
+    params = task.init(jax.random.PRNGKey(args.seed))
+    eng = engine_lib.Engine(task, params)
+
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(
+        0, cfg.vocab_size, size=(args.batch, args.prompt_len)).astype(np.int32)
+    extra = {}
+    if cfg.vision_tokens:
+        extra["patch_embeds"] = vlm_stub.synthetic_patch_embeds(
+            jax.random.PRNGKey(1), args.batch, cfg.vision_tokens,
+            cfg.d_model, cfg.dtype)
+    if cfg.encoder_decoder:
+        extra["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, 64, cfg.d_model)).astype(cfg.dtype)
+
+    gcfg = engine_lib.GenerateConfig(
+        max_new_tokens=args.max_new, temperature=args.temperature,
+        seed=args.seed)
+    t0 = time.time()
+    out = eng.generate(prompts, gcfg, extra_batch=extra or None)
+    dt = time.time() - t0
+    n_tok = out.size
+    print(f"generated {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s incl. compile)")
+    print("first sequence:", out[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

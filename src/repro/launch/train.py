@@ -1,0 +1,82 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --reduced \
+        --steps 50 --batch 8 --seq 128
+
+On real hardware the same entry point runs the full config on the
+production mesh (--mesh pod|single); on this CPU container use --reduced.
+For multi-host TPU, initialize jax.distributed before calling main() (the
+launcher auto-detects via JAX_COORDINATOR env) — the mesh/sharding code is
+topology-agnostic.
+
+The paper's cross-pod MapReduce training is enabled with --outer-sync H
+(average merge, int8-compressed deltas) — see core/local_sgd.py.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+from repro import configs
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.models import registry
+from repro.train import loop as loop_lib, optimizer as opt_lib
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(configs.ARCH_IDS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized config of the same family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["sgd", "adamw", "adafactor"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "single", "pod", "multi-pod"],
+                    help="'none' = local devices unsharded")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_config(args.arch, reduced=args.reduced)
+    task = registry.make_task(cfg)
+    if cfg.encoder_decoder or cfg.vision_tokens:
+        raise SystemExit(
+            "this CLI trains token-LM archs; see examples/ for the "
+            "multimodal training drivers")
+
+    mesh = None
+    if args.mesh in ("pod", "multi-pod"):
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi-pod")
+    elif args.mesh == "single" and len(jax.devices()) > 1:
+        from repro.launch.mesh import make_mesh_for_devices
+
+        mesh = make_mesh_for_devices(len(jax.devices()))
+
+    pipe = TokenPipeline(TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=args.seed))
+    opt_cfg = opt_lib.OptConfig(
+        name=args.optimizer, learning_rate=args.lr,
+        warmup_steps=max(args.steps // 20, 1), decay_steps=args.steps)
+    tcfg = loop_lib.TrainConfig(
+        steps=args.steps, microbatches=args.microbatches,
+        log_every=max(args.steps // 20, 1),
+        ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+    trainer = loop_lib.Trainer(task, pipe, opt_cfg, tcfg, mesh=mesh)
+    trainer.run(seed=args.seed)
+    print(f"final loss: {trainer.history[-1]:.4f} "
+          f"(start {trainer.history[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Architecture zoo: config-assembled models covering dense (llama/gemma2/
+qwen3), MoE (deepseek-v2 MLA, qwen-moe), SSM (mamba2/SSD), hybrid
+(recurrentgemma RG-LRU), encoder-decoder (whisper) and VLM (llava-next)
+families."""
+from repro.models import (  # noqa: F401
+    attention,
+    common,
+    encdec,
+    moe,
+    registry,
+    rglru,
+    ssm,
+    transformer,
+    vlm_stub,
+)

@@ -1,0 +1,427 @@
+"""Attention layers: GQA/MQA with rotary, sliding-window (local) masks,
+attention-logit softcap (gemma2), per-head qk-norm (qwen3), MLA latent
+attention (deepseek-v2) with both naive and absorbed decode, and cross
+attention (whisper).  All support a KV cache for serving.
+
+Cache layout (global layers): k/v (B, S_cache, KV, hd); local layers use a
+ring buffer of size ``window`` so a 500k-token context never allocates more
+than the window (this is what makes gemma2's local layers and
+recurrentgemma's attn layers cheap at decode).  MLA caches the latent
+(B, S, kv_lora + rope_hd) instead of per-head k/v — the paper-level memory
+win MLA exists for.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ModelConfig, dense_init, rms_norm, rope, softcap
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    if cfg.use_mla and not cross:
+        return _init_mla(key, cfg)
+    hd = cfg.head_dim_
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.n_heads, hd), cfg.d_model,
+                         cfg.param_dtype),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads, hd), cfg.d_model,
+                         cfg.param_dtype),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.n_kv_heads, hd), cfg.d_model,
+                         cfg.param_dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads, hd, cfg.d_model),
+                         cfg.n_heads * hd, cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), cfg.param_dtype)
+        p["k_norm"] = jnp.zeros((hd,), cfg.param_dtype)
+    return p
+
+
+def _init_mla(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    nope, rh, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    H, d, r = cfg.n_heads, cfg.d_model, cfg.kv_lora_rank
+    p = {
+        "w_dkv": dense_init(ks[0], (d, r), d, cfg.param_dtype),
+        "w_krope": dense_init(ks[1], (d, rh), d, cfg.param_dtype),
+        "kv_norm": jnp.zeros((r,), cfg.param_dtype),
+        "w_uk": dense_init(ks[2], (r, H, nope), r, cfg.param_dtype),
+        "w_uv": dense_init(ks[3], (r, H, vh), r, cfg.param_dtype),
+        "wo": dense_init(ks[4], (H, vh, d), H * vh, cfg.param_dtype),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = dense_init(ks[5], (d, cfg.q_lora_rank), d, cfg.param_dtype)
+        p["q_norm"] = jnp.zeros((cfg.q_lora_rank,), cfg.param_dtype)
+        p["w_uq"] = dense_init(
+            ks[6], (cfg.q_lora_rank, H, nope + rh), cfg.q_lora_rank,
+            cfg.param_dtype)
+    else:
+        p["w_uq"] = dense_init(ks[6], (d, H, nope + rh), d, cfg.param_dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+def make_mask(
+    q_pos: jax.Array,          # (B, Lq) positions of queries
+    kv_pos: jax.Array,         # (B, Lk) positions of keys (-1 = empty slot)
+    kind: str,                 # 'global' | 'local'
+    window: int,
+    causal: bool = True,
+) -> jax.Array:
+    """(B, 1, Lq, Lk) additive mask."""
+    dq = q_pos[:, :, None]
+    dk = kv_pos[:, None, :]
+    ok = dk >= 0
+    if causal:
+        ok &= dk <= dq
+    if kind == "local":
+        ok &= (dq - dk) < window
+    return jnp.where(ok, 0.0, NEG_INF)[:, None, :, :]
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+def _sdpa_dense(q, k, v, mask, cfg: ModelConfig, scale: float):
+    """Reference GQA attention, full (Lq, Lk) logits.  Used for short
+    sequences and decode (Lq=1)."""
+    B, Lq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, Lq, KV, G, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = softcap(logits, cfg.attn_softcap)
+    logits = logits + mask[:, :, None, :, :]        # mask (B,1,Lq,Lk)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, Lq, H, v.shape[-1]).astype(cfg.dtype)
+
+
+# Block sizes for the memory-efficient path.  Live logits per block are
+# (B, H, Q_BLOCK, KV_BLOCK) instead of (B, H, Lq, Lk), and masks are
+# computed blockwise from positions (never materialized at (Lq, Lk)) — the
+# TPU HBM adaptation that lets 32k/500k cells compile within device memory.
+Q_BLOCK = 512
+KV_BLOCK = 1024
+_DENSE_MAX = 2048       # below this KV length the dense path is cheaper
+
+
+def _sdpa_flash(q, k, v, q_pos, kv_pos, kind, causal, cfg: ModelConfig,
+                scale: float):
+    """FlashAttention-style two-level blocking in pure JAX: outer scan over
+    query blocks (rematerialized), inner online-softmax scan over KV blocks.
+    Exact same math as _sdpa_dense (tests assert allclose)."""
+    B, Lq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    Lk = k.shape[1]
+    hv = v.shape[-1]
+
+    CQ = min(Q_BLOCK, Lq)
+    CK = min(KV_BLOCK, Lk)
+    pq = (-Lq) % CQ
+    pk = (-Lk) % CK
+    # pad positions so padded rows/cols mask themselves out
+    qp = jnp.pad(q_pos, ((0, 0), (0, pq)), constant_values=-(2**30))
+    kp = jnp.pad(kv_pos, ((0, 0), (0, pk)), constant_values=-1)
+    qf = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kf = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq = qf.shape[1] // CQ
+    nk = kf.shape[1] // CK
+
+    qs = qf.reshape(B, nq, CQ, H, hd).transpose(1, 0, 2, 3, 4)
+    qps = qp.reshape(B, nq, CQ).transpose(1, 0, 2)
+    ks = kf.reshape(B, nk, CK, KV, hd).transpose(1, 0, 2, 3, 4)
+    vs = vf.reshape(B, nk, CK, KV, hv).transpose(1, 0, 2, 3, 4)
+    kps = kp.reshape(B, nk, CK).transpose(1, 0, 2)
+
+    def q_block(carry, xs):
+        qb, qpb = xs                             # (B,CQ,H,hd), (B,CQ)
+        qr = qb.reshape(B, CQ, KV, G, hd).astype(jnp.float32)
+
+        def kv_block(inner, kxs):
+            acc, m, denom = inner
+            kb, vb, kpb = kxs
+            logits = jnp.einsum("bqkgh,bskh->bkgqs", qr,
+                                kb.astype(jnp.float32)) * scale
+            logits = softcap(logits, cfg.attn_softcap)
+            mb = make_mask(qpb, kpb, kind, cfg.window, causal)  # (B,1,CQ,CK)
+            logits = logits + mb[:, :, None, :, :]
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            # guard fully-masked rows (padded queries): keep m finite
+            m_new = jnp.maximum(m_new, -1e30)
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            denom = denom * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, vb.astype(jnp.float32))
+            return (acc, m_new, denom), None
+
+        acc0 = jnp.zeros((B, KV, G, CQ, hv), jnp.float32)
+        m0 = jnp.full((B, KV, G, CQ), -1e30, jnp.float32)
+        d0 = jnp.zeros((B, KV, G, CQ), jnp.float32)
+        (acc, m, denom), _ = jax.lax.scan(kv_block, (acc0, m0, d0),
+                                          (ks, vs, kps))
+        out = acc / jnp.maximum(denom, 1e-30)[..., None]
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, CQ, H, hv)
+        return carry, out.astype(cfg.dtype)
+
+    # remat each query block: backward recomputes its inner scan instead of
+    # saving (B,H,CQ,CK) logits per block pair.
+    _, outs = jax.lax.scan(jax.checkpoint(q_block), 0, (qs, qps))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * CQ, H, hv)
+    return out[:, :Lq]
+
+
+def _sdpa_positions(q, k, v, q_pos, kv_pos, kind, causal,
+                    cfg: ModelConfig, scale: float):
+    """Dispatch on shape: flash blocking for long non-decode shapes, dense
+    (with materialized mask) otherwise."""
+    if q.shape[1] > 1 and k.shape[1] > _DENSE_MAX:
+        return _sdpa_flash(q, k, v, q_pos, kv_pos, kind, causal, cfg, scale)
+    mask = make_mask(q_pos, kv_pos, kind, cfg.window, causal)
+    return _sdpa_dense(q, k, v, mask, cfg, scale)
+
+
+# ---------------------------------------------------------------------------
+# standard (GQA) attention with cache
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array               # (B, S, KV, hd)
+    v: jax.Array
+    pos: jax.Array             # (B, S) position of each slot; -1 empty
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, length: int, kind: str):
+    if kind == "local":
+        length = min(length, cfg.window)
+    hd = cfg.head_dim_
+    return KVCache(
+        k=jnp.zeros((batch, length, cfg.n_kv_heads, hd), cfg.dtype),
+        v=jnp.zeros((batch, length, cfg.n_kv_heads, hd), cfg.dtype),
+        pos=jnp.full((batch, length), -1, jnp.int32),
+    )
+
+
+def project_cross_kv(p, kv: jax.Array, kv_pos: jax.Array, cfg: ModelConfig) -> KVCache:
+    """Precompute cross-attention k/v once (prefill); decode reuses them."""
+    k = jnp.einsum("bld,dnh->blnh", kv, p["wk"].astype(cfg.dtype))
+    v = jnp.einsum("bld,dnh->blnh", kv, p["wv"].astype(cfg.dtype))
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return KVCache(k=k, v=v, pos=kv_pos.astype(jnp.int32))
+
+
+def apply_attention(
+    p,
+    x: jax.Array,              # (B, L, d)
+    positions: jax.Array,      # (B, L)
+    cfg: ModelConfig,
+    kind: str = "global",      # 'global' | 'local'
+    cache: Optional[KVCache] = None,
+    cache_index: Optional[jax.Array] = None,   # scalar slot to write (decode)
+    kv: Optional[jax.Array] = None,            # cross-attention memory
+    kv_pos: Optional[jax.Array] = None,
+    cross_cache: Optional[KVCache] = None,     # precomputed cross k/v
+    causal: bool = True,
+):
+    """Returns (out, new_cache)."""
+    if cfg.use_mla and kv is None and cross_cache is None:
+        return apply_mla(p, x, positions, cfg, cache, cache_index)
+    hd = cfg.head_dim_
+    q = jnp.einsum("bld,dnh->blnh", x, p["wq"].astype(cfg.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+
+    if cross_cache is not None:
+        # cross attention against precomputed encoder k/v — no cache update
+        out = _sdpa_positions(q, cross_cache.k, cross_cache.v,
+                              positions, cross_cache.pos, "global", False,
+                              cfg, 1.0 / math.sqrt(hd))
+        return _proj_out(p, out, cfg), None
+
+    src = x if kv is None else kv
+    k = jnp.einsum("bld,dnh->blnh", src, p["wk"].astype(cfg.dtype))
+    v = jnp.einsum("bld,dnh->blnh", src, p["wv"].astype(cfg.dtype))
+
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if kv is None:             # self-attention: rope
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions if cache is None or cache_index is None
+                 else positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        if cache_index is not None:
+            # decode: write this step's k/v into the (ring) buffer
+            S = cache.k.shape[1]
+            slot = cache_index % S if kind == "local" else cache_index
+            ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+            cp = jax.lax.dynamic_update_slice_in_dim(
+                cache.pos, positions.astype(jnp.int32), slot, axis=1)
+            new_cache = KVCache(ck, cv, cp)
+            k, v, kpos = ck, cv, cp
+        else:
+            # prefill: fill the first L slots
+            L = k.shape[1]
+            S = cache.k.shape[1]
+            if kind == "local" and L > S:
+                # only the trailing window survives
+                ck = jax.lax.dynamic_slice_in_dim(k, L - S, S, axis=1)
+                cv = jax.lax.dynamic_slice_in_dim(v, L - S, S, axis=1)
+                cp = jax.lax.dynamic_slice_in_dim(
+                    positions.astype(jnp.int32), L - S, S, axis=1)
+                new_cache = KVCache(ck, cv, cp)
+            else:
+                ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, 0, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, 0, axis=1)
+                cp = jax.lax.dynamic_update_slice_in_dim(
+                    cache.pos, positions.astype(jnp.int32), 0, axis=1)
+                new_cache = KVCache(ck, cv, cp)
+            kpos = positions
+            # attention during prefill runs over the fresh k/v (not cache)
+        if cache_index is not None:
+            out = _sdpa_positions(q, k, v, positions, kpos, kind, causal,
+                                  cfg, 1.0 / math.sqrt(hd))
+            return _proj_out(p, out, cfg), new_cache
+
+    if kv is None:
+        out = _sdpa_positions(q, k, v, positions, positions, kind, causal,
+                              cfg, 1.0 / math.sqrt(hd))
+    else:
+        out = _sdpa_positions(q, k, v, positions, kv_pos, "global", False,
+                              cfg, 1.0 / math.sqrt(hd))
+    return _proj_out(p, out, cfg), new_cache
+
+
+def _proj_out(p, out, cfg):
+    return jnp.einsum("blnh,nhd->bld", out, p["wo"].astype(cfg.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2)
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array            # (B, S, kv_lora)
+    k_rope: jax.Array          # (B, S, rope_hd)
+    pos: jax.Array             # (B, S)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, length: int):
+    return MLACache(
+        c_kv=jnp.zeros((batch, length, cfg.kv_lora_rank), cfg.dtype),
+        k_rope=jnp.zeros((batch, length, cfg.qk_rope_head_dim), cfg.dtype),
+        pos=jnp.full((batch, length), -1, jnp.int32),
+    )
+
+
+def _mla_q(p, x, cfg):
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bld,dr->blr", x, p["w_dq"].astype(cfg.dtype))
+        cq = rms_norm(cq, p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("blr,rnh->blnh", cq, p["w_uq"].astype(cfg.dtype))
+    else:
+        q = jnp.einsum("bld,dnh->blnh", x, p["w_uq"].astype(cfg.dtype))
+    q_nope = q[..., : cfg.qk_nope_head_dim]
+    q_rope = q[..., cfg.qk_nope_head_dim :]
+    return q_nope, q_rope
+
+
+def apply_mla(p, x, positions, cfg: ModelConfig,
+              cache: Optional[MLACache] = None,
+              cache_index: Optional[jax.Array] = None):
+    """DeepSeek-V2 multi-head latent attention.
+
+    Train/prefill: latent expanded to per-head k/v (standard path).
+    Decode with ``cfg.mla_absorb``: queries are absorbed into the latent
+    space so attention runs directly against the (B, S, r) cache — no
+    per-head KV expansion; this is the §Perf 'absorbed decode' variant.
+    """
+    nope, rh, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(nope + rh)
+
+    q_nope, q_rope = _mla_q(p, x, cfg)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = jnp.einsum("bld,dr->blr", x, p["w_dkv"].astype(cfg.dtype))
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = jnp.einsum("bld,dh->blh", x, p["w_krope"].astype(cfg.dtype))
+    k_rope = rope(k_rope, positions, cfg.rope_theta)
+
+    new_cache = None
+    kpos = positions
+    if cache is not None:
+        if cache_index is not None:
+            cc = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_kv,
+                                                     cache_index, axis=1)
+            cr = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, k_rope,
+                                                     cache_index, axis=1)
+            cp = jax.lax.dynamic_update_slice_in_dim(
+                cache.pos, positions.astype(jnp.int32), cache_index, axis=1)
+            new_cache = MLACache(cc, cr, cp)
+            c_kv, k_rope, kpos = cc, cr, cp
+        else:
+            cc = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_kv, 0, axis=1)
+            cr = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, k_rope, 0, axis=1)
+            cp = jax.lax.dynamic_update_slice_in_dim(
+                cache.pos, positions.astype(jnp.int32), 0, axis=1)
+            new_cache = MLACache(cc, cr, cp)
+
+    if cfg.mla_absorb and cache_index is not None:
+        mask = make_mask(positions, kpos, "global", cfg.window, causal=True)
+        # Absorbed decode: fold w_uk into q, attend in latent space, fold
+        # w_uv into the output projection.  Per-step cost O(S·r) not O(S·H·hd).
+        q_lat = jnp.einsum("blnh,rnh->blnr", q_nope,
+                           p["w_uk"].astype(cfg.dtype))          # (B,L,H,r)
+        logits = (
+            jnp.einsum("blnr,bsr->bnls", q_lat.astype(jnp.float32),
+                       c_kv.astype(jnp.float32))
+            + jnp.einsum("blnh,bsh->bnls", q_rope.astype(jnp.float32),
+                         k_rope.astype(jnp.float32))
+        ) * scale
+        logits = softcap(logits, cfg.attn_softcap) + mask
+        w = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bnls,bsr->blnr", w, c_kv.astype(jnp.float32))
+        out = jnp.einsum("blnr,rnh->blnh", ctx.astype(cfg.dtype),
+                         p["w_uv"].astype(cfg.dtype))
+    else:
+        # standard path: expand the latent, fold the shared rope key into a
+        # per-head concat so one contraction covers both score terms, and
+        # reuse the shape-adaptive (flash-blocked) attention core.
+        k_nope = jnp.einsum("bsr,rnh->bsnh", c_kv, p["w_uk"].astype(cfg.dtype))
+        v = jnp.einsum("bsr,rnh->bsnh", c_kv, p["w_uv"].astype(cfg.dtype))
+        H = cfg.n_heads
+        k_cat = jnp.concatenate(
+            [k_nope,
+             jnp.broadcast_to(k_rope[:, :, None, :],
+                              k_rope.shape[:2] + (H, rh))], axis=-1)
+        q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _sdpa_positions(q_cat, k_cat, v, positions, kpos, "global",
+                              True, cfg, scale)
+
+    out = jnp.einsum("blnh,nhd->bld", out.astype(cfg.dtype),
+                     p["wo"].astype(cfg.dtype))
+    return out, new_cache

@@ -1,0 +1,318 @@
+"""Shared building blocks for the architecture zoo: the ModelConfig schema,
+norms, rotary embeddings, MLPs, embeddings, initializers.
+
+All layers are pure functions over plain-dict params (init_* returns the
+params, apply-style functions consume them) so everything composes with
+jit / scan / shard_map and ``jax.eval_shape`` (the dry-run never allocates).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One schema covers the whole zoo; families toggle feature flags.
+    Exact per-arch values live in src/repro/configs/<id>.py."""
+
+    name: str
+    family: str                       # dense|moe|ssm|hybrid|audio|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None    # default d_model // n_heads
+
+    # layer pattern: tuple of kinds repeated down the stack.
+    # kinds: 'global' | 'local' (sliding-window attn) | 'ssm' | 'rec' (RG-LRU)
+    pattern: Tuple[str, ...] = ("global",)
+
+    # attention options
+    window: int = 4096                # local attention window
+    qk_norm: bool = False             # qwen3
+    attn_softcap: Optional[float] = None    # gemma2: 50.0
+    final_softcap: Optional[float] = None   # gemma2: 30.0
+    rope_theta: float = 10000.0
+    post_norms: bool = False          # gemma2 sandwich norms
+    embed_scale: bool = False         # gemma family: x *= sqrt(d)
+
+    # MLA (deepseek-v2)
+    use_mla: bool = False
+    kv_lora_rank: int = 512
+    q_lora_rank: Optional[int] = None
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    mla_absorb: bool = False          # absorbed-matrix decode (perf variant)
+
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    first_k_dense: int = 0            # deepseek-v2: first layer stays dense
+    capacity_factor: float = 1.25
+    routed_scaling: float = 1.0
+    norm_topk_prob: bool = False
+
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 128
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    conv_kernel: int = 4
+
+    # RG-LRU (recurrentgemma)
+    rglru_width: int = 0              # 0 => d_model
+    rglru_c: float = 8.0
+    # Griffin's gates use block-diagonal weights; blocks also make the gate
+    # matmuls model-parallel with ZERO collectives (each shard owns whole
+    # blocks) — see EXPERIMENTS.md §Perf recurrentgemma iteration.
+    rglru_blocks: int = 16
+
+    # encoder-decoder (whisper)
+    encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    decoder_len: int = 448            # target length used by train shapes
+
+    # vlm (llava)
+    vision_tokens: int = 0            # prepended patch-embedding tokens
+
+    # misc
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    act: str = "silu"
+    dtype: Any = jnp.bfloat16         # activation/compute dtype
+    param_dtype: Any = jnp.float32
+
+    # parallel/runtime policy
+    sharding_profile: str = "dp"      # dp | tp | fsdp_tp
+    remat: bool = True
+    scan_layers: bool = True
+    ce_chunk: int = 2048              # chunked cross-entropy block (tokens)
+    # gradient-accumulation factor for the production train shapes: divides
+    # the per-device activation footprint (residual saves scale 1/mb)
+    train_microbatches: int = 1
+    # production optimizer ('adamw' | 'adafactor' | 'sgd'): adafactor's
+    # factored second moments are what fit deepseek-v2-236b's optimizer
+    # state in HBM (EXPERIMENTS.md §Perf)
+    optimizer: str = "adamw"
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_rnn(self) -> int:
+        return self.rglru_width or self.d_model
+
+    @property
+    def segments(self) -> Tuple[Tuple[Tuple[str, ...], int], ...]:
+        """(pattern, repeats) segments covering n_layers; a trailing partial
+        repetition becomes its own segment (e.g. recurrentgemma 38 = 12x
+        (rec,rec,global-local…) + the remainder)."""
+        p = len(self.pattern)
+        reps, rem = divmod(self.n_layers, p)
+        segs = []
+        start = 0
+        if self.first_k_dense:
+            segs.append(((self.pattern[0] + ":dense",), self.first_k_dense))
+        if self.first_k_dense:
+            # recompute repetitions over the remaining layers
+            n = self.n_layers - self.first_k_dense
+            reps, rem = divmod(n, p)
+        if reps:
+            segs.append((self.pattern, reps))
+        if rem:
+            segs.append((self.pattern[:rem], 1))
+        return tuple(segs)
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A small same-family config for CPU smoke tests."""
+        small = dict(
+            n_layers=len(self.pattern) * 2 if len(self.pattern) > 1 else 2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=max(1, min(self.n_kv_heads, 2)),
+            head_dim=16,
+            d_ff=128,
+            vocab_size=256,
+            window=16,
+            kv_lora_rank=32,
+            q_lora_rank=48 if self.q_lora_rank else None,
+            qk_nope_head_dim=16,
+            qk_rope_head_dim=8,
+            v_head_dim=16,
+            n_experts=8 if self.moe else 0,
+            n_shared_experts=min(self.n_shared_experts, 2),
+            top_k=min(self.top_k, 2) if self.moe else 0,
+            moe_d_ff=32 if self.moe else 0,
+            # dropless (cf = E/K) so prefill/decode/teacher-forced paths are
+            # bit-equivalent in the consistency tests
+            capacity_factor=4.0,
+            first_k_dense=min(self.first_k_dense, 1),
+            ssm_state=16,
+            ssm_head_dim=8,
+            ssm_chunk=8,
+            rglru_width=32 if self.rglru_width else 0,
+            n_encoder_layers=2 if self.encoder_decoder else 0,
+            decoder_len=16,
+            vision_tokens=8 if self.vision_tokens else 0,
+            dtype=jnp.float32,
+            sharding_profile="dp",
+            ce_chunk=64,
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size, dtype):
+    """Truncated-normal fan-in init (the zoo's shared default)."""
+    std = 1.0 / math.sqrt(in_axis_size)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., L, H, hd) or (..., L, hd); positions: (..., L)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs        # (..., L, half)
+    if x.ndim == ang.ndim + 1:                                    # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (L, d)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = jnp.arange(length, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoidal_at(positions: jax.Array, dim: int) -> jax.Array:
+    """Sinusoidal embeddings evaluated at arbitrary (possibly traced)
+    positions: (..., L) -> (..., L, dim).  No table, so decode positions can
+    exceed any pre-built length."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated / plain)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, cfg: ModelConfig, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], (d_model, d_ff), d_model, cfg.param_dtype),
+        "wo": dense_init(ks[1], (d_ff, d_model), d_ff, cfg.param_dtype),
+    }
+    if gated:
+        p["wg"] = dense_init(ks[2], (d_model, d_ff), d_model, cfg.param_dtype)
+    return p
+
+
+def apply_mlp(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = act_fn(cfg.act)
+    up = jnp.einsum("...d,df->...f", x, p["wi"].astype(cfg.dtype))
+    if "wg" in p:
+        up = act(jnp.einsum("...d,df->...f", x, p["wg"].astype(cfg.dtype))) * up
+    else:
+        up = act(up)
+    return jnp.einsum("...f,fd->...d", up, p["wo"].astype(cfg.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = {"table": embed_init(k1, (cfg.vocab_size, cfg.d_model), cfg.param_dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(
+            k2, (cfg.d_model, cfg.vocab_size), cfg.d_model, cfg.param_dtype
+        )
+    return p
+
+
+def embed_tokens(p, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = p["table"].astype(cfg.dtype)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    return x
+
+
+def unembed(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """hidden (..., d) -> logits (..., V) fp32, final softcap applied."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "...d,vd->...v", x.astype(jnp.float32),
+            p["table"].astype(jnp.float32),
+        )
+    else:
+        logits = jnp.einsum(
+            "...d,dv->...v", x.astype(jnp.float32),
+            p["unembed"].astype(jnp.float32),
+        )
+    return softcap(logits, cfg.final_softcap)

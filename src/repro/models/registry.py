@@ -1,0 +1,229 @@
+"""Uniform Task API over the architecture zoo + the assigned shape cells.
+
+A Task exposes pure functions the launcher/dry-run lowers:
+  * ``loss(params, batch)``                      — train_* shapes
+  * ``prefill(params, batch) -> (caches, logits)`` — prefill_* shapes
+  * ``decode_step(params, batch, caches)``       — decode_* / long_* shapes
+
+plus ``input_specs(shape_name)`` returning ShapeDtypeStruct stand-ins for
+every input (weak-type-correct, shardable, no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import DecoderLM
+from repro.train import losses
+
+AUX_COEF = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    kind: str                  # 'train' | 'prefill' | 'decode'
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode", 32768, 128),
+    "long_500k": ShapeCell("decode", 524288, 1),
+}
+
+# archs allowed to run long_500k (sub-quadratic sequence mixing);
+# pure full-attention archs skip it (DESIGN.md §5).
+SUBQUADRATIC = ("mamba2-130m", "recurrentgemma-9b")
+
+
+def cell_is_applicable(arch: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch in SUBQUADRATIC
+    return True
+
+
+# ---------------------------------------------------------------------------
+# decoder-only task (dense / moe / ssm / hybrid / vlm)
+# ---------------------------------------------------------------------------
+
+class DecoderTask:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.model = DecoderLM(cfg)
+
+    def init(self, key):
+        return self.model.init(key)
+
+    # -- train ----------------------------------------------------------------
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        patch = batch.get("patch_embeds")
+        B, Lt = tokens.shape
+        n_vis = patch.shape[1] if patch is not None else 0
+        L = Lt + n_vis
+        positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+        hidden, _, aux = self.model.forward(
+            params, tokens, positions, patch_embeds=patch)
+        hidden_text = hidden[:, n_vis:]
+        labels = losses.shift_labels(tokens)
+        ce = losses.chunked_cross_entropy(
+            hidden_text, labels,
+            lambda h: self.model.logits(params, h),
+            chunk=cfg.ce_chunk,
+        )
+        return ce + AUX_COEF * aux
+
+    # -- serve ----------------------------------------------------------------
+
+    # cache headroom prefill leaves for subsequent decode steps
+    GEN_MARGIN = 64
+
+    def prefill(self, params, batch):
+        """Run the prompt, returning caches (with GEN_MARGIN free slots)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        patch = batch.get("patch_embeds")
+        B, Lt = tokens.shape
+        n_vis = patch.shape[1] if patch is not None else 0
+        L = Lt + n_vis
+        positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+        caches = self.model.init_caches(B, L + self.GEN_MARGIN)
+        hidden, caches, _ = self.model.forward(
+            params, tokens, positions, patch_embeds=patch, caches=caches)
+        logits = self.model.logits(params, hidden[:, -1:])
+        return caches, logits
+
+    def decode_step(self, params, batch, caches):
+        """One token with an existing cache.  batch: tokens (B,1), pos ()."""
+        tokens = batch["tokens"]
+        pos = batch["pos"]
+        B = tokens.shape[0]
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        hidden, caches, _ = self.model.forward(
+            params, tokens, positions, caches=caches,
+            cache_index=pos.astype(jnp.int32), decode=True)
+        logits = self.model.logits(params, hidden)
+        return logits, caches
+
+    # -- specs ------------------------------------------------------------------
+
+    def input_specs(self, shape_name: str):
+        cfg = self.cfg
+        cell = SHAPES[shape_name]
+        i32 = jnp.int32
+        n_vis = cfg.vision_tokens
+        if cell.kind == "train":
+            text = cell.seq - n_vis
+            batch = {"tokens": jax.ShapeDtypeStruct((cell.batch, text), i32)}
+            if n_vis:
+                batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (cell.batch, n_vis, cfg.d_model), cfg.dtype)
+            return {"batch": batch}
+        if cell.kind == "prefill":
+            text = cell.seq - n_vis
+            batch = {"tokens": jax.ShapeDtypeStruct((cell.batch, text), i32)}
+            if n_vis:
+                batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (cell.batch, n_vis, cfg.d_model), cfg.dtype)
+            return {"batch": batch}
+        # decode: cache structs come from eval_shape of init_caches
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((cell.batch, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+        caches = jax.eval_shape(
+            lambda: self.model.init_caches(cell.batch, cell.seq))
+        return {"batch": batch, "caches": caches}
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder task (whisper)
+# ---------------------------------------------------------------------------
+
+class EncDecTask:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.model = EncDecLM(cfg)
+
+    def init(self, key):
+        return self.model.init(key)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        frames = batch["frames"]
+        tokens = batch["tokens"]
+        B, Lt = tokens.shape
+        memory = self.model.encode(params, frames)
+        positions = jnp.broadcast_to(jnp.arange(Lt)[None], (B, Lt))
+        hidden, _ = self.model.decode_stack(params, tokens, positions, memory)
+        labels = losses.shift_labels(tokens)
+        return losses.chunked_cross_entropy(
+            hidden, labels, lambda h: self.model.logits(params, h),
+            chunk=cfg.ce_chunk)
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        frames = batch["frames"]
+        tokens = batch["tokens"]            # (B, L_prompt)
+        B, Lp = tokens.shape
+        memory = self.model.encode(params, frames)
+        caches = self.model.init_caches(params, memory, Lp + 64)
+        positions = jnp.broadcast_to(jnp.arange(Lp)[None], (B, Lp))
+        hidden, caches = self.model.decode_stack(
+            params, tokens, positions, caches=caches)
+        return caches, self.model.logits(params, hidden[:, -1:])
+
+    def decode_step(self, params, batch, caches):
+        tokens = batch["tokens"]
+        pos = batch["pos"]
+        B = tokens.shape[0]
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        hidden, caches = self.model.decode_stack(
+            params, tokens, positions, caches=caches,
+            cache_index=pos.astype(jnp.int32))
+        return self.model.logits(params, hidden), caches
+
+    def input_specs(self, shape_name: str):
+        cfg = self.cfg
+        cell = SHAPES[shape_name]
+        i32 = jnp.int32
+        if cell.kind == "train":
+            return {"batch": {
+                "frames": jax.ShapeDtypeStruct(
+                    (cell.batch, cell.seq, cfg.d_model), cfg.dtype),
+                "tokens": jax.ShapeDtypeStruct(
+                    (cell.batch, cfg.decoder_len), i32),
+            }}
+        if cell.kind == "prefill":
+            return {"batch": {
+                "frames": jax.ShapeDtypeStruct(
+                    (cell.batch, cell.seq, cfg.d_model), cfg.dtype),
+                "tokens": jax.ShapeDtypeStruct(
+                    (cell.batch, cfg.decoder_len), i32),
+            }}
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((cell.batch, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+        # caches: self-KV of cache length + cross-KV over encoder memory.
+        params_struct = jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        mem_struct = jax.ShapeDtypeStruct(
+            (cell.batch, min(cell.seq, 4 * cfg.decoder_len), cfg.d_model),
+            cfg.dtype)
+        caches = jax.eval_shape(
+            lambda p, m: self.model.init_caches(p, m, cell.seq),
+            params_struct, mem_struct)
+        return {"batch": batch, "caches": caches}
+
+
+def make_task(cfg: ModelConfig):
+    return EncDecTask(cfg) if cfg.encoder_decoder else DecoderTask(cfg)

@@ -1,0 +1,146 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block:  x -> [gate branch: linear -> GeLU] ⊙ [rec branch: linear ->
+causal conv1d(4) -> RG-LRU] -> out linear.
+
+RG-LRU recurrence (elementwise, per channel):
+    r_t = sigmoid(W_a u_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x u_t + b_x)          input gate
+    a_t = exp(-c * softplus(Λ) * r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+
+Linear in h ⇒ runs as a ``jax.lax.associative_scan`` (log-depth on TPU) for
+train/prefill and an O(1) state update for decode — the sub-quadratic path
+that lets recurrentgemma run the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init
+
+
+def _gate_blocks(cfg: ModelConfig) -> int:
+    dr = cfg.d_rnn
+    nb = cfg.rglru_blocks
+    while nb > 1 and dr % nb != 0:
+        nb //= 2
+    return max(nb, 1)
+
+
+def init_rglru(key, cfg: ModelConfig):
+    d, dr = cfg.d_model, cfg.d_rnn
+    nb = _gate_blocks(cfg)
+    drb = dr // nb
+    ks = jax.random.split(key, 7)
+    # Λ init so that a ∈ (0.9, 0.999) at r = 1 (paper's stable range)
+    lam = jnp.log(jnp.expm1(
+        -jnp.log(jnp.linspace(0.9, 0.999, dr)) / cfg.rglru_c))
+    return {
+        "w_rec_in": dense_init(ks[0], (d, dr), d, cfg.param_dtype),
+        "w_gate_in": dense_init(ks[1], (d, dr), d, cfg.param_dtype),
+        "conv_w": dense_init(ks[2], (cfg.conv_kernel, dr), cfg.conv_kernel,
+                             cfg.param_dtype),
+        "conv_b": jnp.zeros((dr,), cfg.param_dtype),
+        # block-diagonal gates (Griffin §2.4): (nb, drb, drb)
+        "w_a": dense_init(ks[3], (nb, drb, drb), drb, cfg.param_dtype),
+        "b_a": jnp.zeros((dr,), cfg.param_dtype),
+        "w_x": dense_init(ks[4], (nb, drb, drb), drb, cfg.param_dtype),
+        "b_x": jnp.zeros((dr,), cfg.param_dtype),
+        "lam": lam.astype(cfg.param_dtype),
+        "w_out": dense_init(ks[5], (dr, d), dr, cfg.param_dtype),
+    }
+
+
+class RGLRUCache(NamedTuple):
+    h: jax.Array               # (B, d_rnn) hidden state (fp32)
+    conv: jax.Array            # (B, K-1, d_rnn)
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int):
+    return RGLRUCache(
+        h=jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_rnn), cfg.dtype),
+    )
+
+
+def _conv(u, w, b):
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + u.shape[1], :] * w[i][None, None] for i in range(K))
+    return out + b[None, None]
+
+
+def _gates(p, u, cfg):
+    B, L, dr = u.shape
+    nb, drb, _ = p["w_a"].shape
+    ub = u.reshape(B, L, nb, drb)
+    r = jax.nn.sigmoid(
+        jnp.einsum("blnd,nde->blne", ub, p["w_a"].astype(cfg.dtype))
+        .reshape(B, L, dr).astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(
+        jnp.einsum("blnd,nde->blne", ub, p["w_x"].astype(cfg.dtype))
+        .reshape(B, L, dr).astype(jnp.float32) + p["b_x"].astype(jnp.float32))
+    log_a = -cfg.rglru_c * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * u.astype(jnp.float32))
+    return a, gated_in
+
+
+def apply_rglru(
+    p,
+    x: jax.Array,              # (B, L, d_model)
+    cfg: ModelConfig,
+    cache: Optional[RGLRUCache] = None,
+    decode: bool = False,
+):
+    B, L, _ = x.shape
+    gate = jax.nn.gelu(
+        jnp.einsum("bld,de->ble", x, p["w_gate_in"].astype(cfg.dtype)))
+    u = jnp.einsum("bld,de->ble", x, p["w_rec_in"].astype(cfg.dtype))
+
+    new_conv = None
+    if decode:
+        assert cache is not None and L == 1
+        window = jnp.concatenate([cache.conv, u], axis=1)
+        w = p["conv_w"].astype(cfg.dtype)
+        u = (jnp.einsum("bkc,kc->bc", window, w)
+             + p["conv_b"].astype(cfg.dtype))[:, None]
+        new_conv = window[:, 1:]
+    else:
+        raw = u
+        u = _conv(u, p["conv_w"].astype(cfg.dtype), p["conv_b"].astype(cfg.dtype))
+        if cache is not None:
+            K = cfg.conv_kernel
+            new_conv = raw[:, -(K - 1):] if L >= K - 1 else jnp.concatenate(
+                [cache.conv[:, L:], raw], axis=1)
+
+    a, gin = _gates(p, u, cfg)                                 # fp32 (B,L,dr)
+
+    if decode:
+        h = cache.h * a[:, 0] + gin[:, 0]
+        y = h[:, None]
+        new_h = h
+    else:
+        h0 = cache.h if cache is not None else jnp.zeros(
+            (B, cfg.d_rnn), jnp.float32)
+
+        def combine(lhs, rhs):
+            al, bl = lhs
+            ar, br = rhs
+            return al * ar, bl * ar + br
+
+        aa, bb = jax.lax.associative_scan(combine, (a, gin), axis=1)
+        y = aa * h0[:, None] + bb                               # (B,L,dr)
+        new_h = y[:, -1]
+
+    out = (y.astype(cfg.dtype) * gate)
+    out = jnp.einsum("ble,ed->bld", out, p["w_out"].astype(cfg.dtype))
+    new_cache = (
+        RGLRUCache(h=new_h, conv=new_conv) if cache is not None else None
+    )
+    return out, new_cache

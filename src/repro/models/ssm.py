@@ -1,0 +1,223 @@
+"""Mamba-2 / SSD (state-space duality) layer [arXiv:2405.21060].
+
+TPU adaptation (DESIGN.md): the SSD chunked algorithm is already the
+TPU-friendly formulation — within-chunk work is dense masked matmuls (MXU),
+and the inter-chunk recurrence is an elementwise linear recurrence we run
+with ``jax.lax.associative_scan`` (log-depth, no serial loop).  Chunk length
+is a config knob (``ssm_chunk``) sized so the (Q, Q) intra-chunk attention
+tile and the (H, P, N) states stay VMEM-resident under XLA fusion.
+
+Decode is the O(1)-per-token recurrent form with an explicit (B, H, P, N)
+state + causal-conv ring state — this is why mamba2 runs the ``long_500k``
+cell that quadratic-attention archs must skip.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    G = 1                                     # n_groups
+    conv_dim = d_inner + 2 * G * N
+    return d_inner, H, N, G, conv_dim
+
+
+def init_ssm(key, cfg: ModelConfig):
+    d_inner, H, N, G, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    in_dim = 2 * d_inner + 2 * G * N + H      # z, x, B, C, dt
+    p = {
+        "in_proj": dense_init(ks[0], (cfg.d_model, in_dim), cfg.d_model,
+                              cfg.param_dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, conv_dim),
+                             cfg.conv_kernel, cfg.param_dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.param_dtype),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, H).astype(cfg.param_dtype)),
+        "D": jnp.ones((H,), cfg.param_dtype),
+        "dt_bias": jnp.zeros((H,), cfg.param_dtype),
+        "norm": jnp.zeros((d_inner,), cfg.param_dtype),
+        "out_proj": dense_init(ks[2], (d_inner, cfg.d_model), d_inner,
+                               cfg.param_dtype),
+    }
+    return p
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array           # (B, H, P, N)
+    conv: jax.Array            # (B, K-1, conv_dim) trailing inputs
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int):
+    d_inner, H, N, G, conv_dim = _dims(cfg)
+    return SSMCache(
+        state=jnp.zeros((batch, H, cfg.ssm_head_dim, N), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), cfg.dtype),
+    )
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d: xBC (B, L, C), w (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xBC.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a (..., T) -> (..., T, T): sum_{k=j+1..i} a_k for i >= j, -inf above."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,              # (B, L, H, P) — dt-scaled inputs
+    a: jax.Array,              # (B, L, H)    — dt * A (negative)
+    Bm: jax.Array,             # (B, L, H, N)
+    Cm: jax.Array,             # (B, L, H, N)
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,   # (B, H, P, N)
+):
+    """Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    c = L // chunk
+    xc = x.reshape(Bsz, c, chunk, H, P)
+    ac = a.reshape(Bsz, c, chunk, H).transpose(0, 3, 1, 2)   # (B,H,c,Q)
+    Bc = Bm.reshape(Bsz, c, chunk, H, N)
+    Cc = Cm.reshape(Bsz, c, chunk, H, N)
+
+    a_cumsum = jnp.cumsum(ac, axis=-1)                        # (B,H,c,Q)
+
+    # ---- intra-chunk (dense, MXU-shaped)
+    Lmat = jnp.exp(_segsum(ac))                               # (B,H,c,Q,Q)
+    y_diag = jnp.einsum("bcqhn,bcshn,bhcqs,bcshp->bcqhp",
+                        Cc, Bc, Lmat, xc)
+
+    # ---- chunk summaries
+    decay_states = jnp.exp(a_cumsum[..., -1:] - a_cumsum)     # (B,H,c,Q)
+    states = jnp.einsum("bcqhn,bhcq,bcqhp->bchpn",
+                        Bc, decay_states, xc)                 # (B,c,H,P,N)
+
+    # ---- inter-chunk linear recurrence via associative scan:
+    #      s_c = exp(sum a in chunk c) * s_{c-1} + states_c
+    chunk_decay = jnp.exp(a_cumsum[..., -1]).transpose(0, 2, 1)   # (B,c,H)
+    if initial_state is None:
+        initial_state = jnp.zeros((Bsz, H, P, N), x.dtype)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar[..., None, None] + br
+
+    a_scan = chunk_decay                                       # (B,c,H)
+    b_scan = states                                            # (B,c,H,P,N)
+    aa, bb = jax.lax.associative_scan(combine, (a_scan, b_scan), axis=1)
+    # inject the initial state: s_c = aa_c * s0 + bb_c
+    s_all = aa[..., None, None] * initial_state[:, None] + bb  # (B,c,H,P,N)
+    prev = jnp.concatenate([initial_state[:, None], s_all[:, :-1]], axis=1)
+    final_state = s_all[:, -1]
+
+    # ---- chunk-start state contribution
+    state_decay = jnp.exp(a_cumsum)                            # (B,H,c,Q)
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", Cc, prev, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, L, H, P)
+    return y, final_state
+
+
+def apply_ssm(
+    p,
+    x: jax.Array,              # (B, L, d_model)
+    cfg: ModelConfig,
+    cache: Optional[SSMCache] = None,
+    decode: bool = False,
+):
+    """Full mamba2 mixer.  Returns (out (B,L,d), new_cache)."""
+    d_inner, H, N, G, conv_dim = _dims(cfg)
+    P = cfg.ssm_head_dim
+    B_, L, _ = x.shape
+
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(cfg.dtype))
+    z, xr, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + G * N,
+                 2 * d_inner + 2 * G * N], axis=-1)
+
+    xBC = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    new_conv = None
+    if decode:
+        assert cache is not None and L == 1
+        window = jnp.concatenate([cache.conv, xBC], axis=1)    # (B, K, C)
+        w = p["conv_w"].astype(cfg.dtype)
+        out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(cfg.dtype)
+        xBC = jax.nn.silu(out)[:, None, :]
+        new_conv = window[:, 1:, :]
+    else:
+        xBC = _causal_conv(xBC, p["conv_w"].astype(cfg.dtype),
+                           p["conv_b"].astype(cfg.dtype))
+        if cache is not None:
+            K = cfg.conv_kernel
+            raw = jnp.concatenate([xr, Bm, Cm], axis=-1)
+            new_conv = raw[:, -(K - 1):, :] if L >= K - 1 else jnp.concatenate(
+                [cache.conv[:, L:, :], raw], axis=1)
+
+    xr, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + G * N], axis=-1)
+    xh = xr.reshape(B_, L, H, P)
+    Bm = jnp.broadcast_to(Bm.reshape(B_, L, 1, N), (B_, L, H, N))
+    Cm = jnp.broadcast_to(Cm.reshape(B_, L, 1, N), (B_, L, H, N))
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,L,H)
+
+    if decode:
+        state = cache.state
+        dA = jnp.exp(dt[:, 0] * A[None, :])                    # (B,H)
+        dx = (dt[:, 0, :, None] * xh[:, 0].astype(jnp.float32))  # (B,H,P)
+        state = state * dA[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", dx, Bm[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhpn,bhn->bhp", state, Cm[:, 0].astype(jnp.float32))
+        y = y[:, None]                                          # (B,1,H,P)
+        new_state = state
+    else:
+        a = dt * A[None, None, :]                               # (B,L,H)
+        xs = (dt[..., None] * xh.astype(jnp.float32))
+        pad = (-L) % cfg.ssm_chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+            Bm = jnp.pad(Bm.astype(jnp.float32),
+                         ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Cm = jnp.pad(Cm.astype(jnp.float32),
+                         ((0, 0), (0, pad), (0, 0), (0, 0)))
+        else:
+            Bm = Bm.astype(jnp.float32)
+            Cm = Cm.astype(jnp.float32)
+        init = cache.state if cache is not None else None
+        y, new_state = ssd_chunked(xs, a, Bm, Cm, cfg.ssm_chunk, init)
+        y = y[:, :L]
+
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, L, d_inner).astype(cfg.dtype)
+    y = y * jax.nn.silu(z)                                      # gated
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(cfg.dtype))
+
+    new_cache = (
+        SSMCache(state=new_state, conv=new_conv) if cache is not None else None
+    )
+    return out, new_cache

@@ -1,0 +1,205 @@
+"""Decoder-only LM assembled from ModelConfig: covers the dense, moe, ssm,
+hybrid and vlm families.
+
+The layer stack is organized as *segments* — (pattern, repeats) pairs (e.g.
+gemma2 = 13 x (local, global); recurrentgemma = 12 x (rec, rec, global-local)
++ remainder) — and each segment is a ``jax.lax.scan`` over its repeats with
+stacked params.  Scanning keeps the HLO size O(distinct layer kinds), not
+O(n_layers): compile time and program memory stay flat from smollm-135m to
+deepseek-v2-236b (this is what makes 512-device dry-run compiles tractable).
+``cfg.remat`` wraps each repeat in ``jax.checkpoint`` so the backward pass
+re-computes block activations instead of saving them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, moe as moe_lib, rglru, ssm
+from repro.models.common import ModelConfig, rms_norm
+from repro.parallel.util import constrain_batch
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def _split_kind(kind: str):
+    mixer, _, ffn_override = kind.partition(":")
+    return mixer, ffn_override
+
+
+def init_block(key, cfg: ModelConfig, kind: str):
+    mixer, ffn_override = _split_kind(kind)
+    ks = jax.random.split(key, 4)
+    p: dict = {"ln1": jnp.zeros((cfg.d_model,), cfg.param_dtype)}
+    if mixer in ("global", "local"):
+        p["mixer"] = attention.init_attention(ks[0], cfg)
+    elif mixer == "ssm":
+        p["mixer"] = ssm.init_ssm(ks[0], cfg)
+    elif mixer == "rec":
+        p["mixer"] = rglru.init_rglru(ks[0], cfg)
+    else:
+        raise ValueError(f"unknown mixer kind {mixer!r}")
+
+    has_ffn = cfg.d_ff > 0 or cfg.moe
+    if has_ffn:
+        p["ln2"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+        if cfg.moe and ffn_override != "dense":
+            p["ffn"] = moe_lib.init_moe(ks[1], cfg)
+        else:
+            p["ffn"] = common.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg)
+    if cfg.post_norms:
+        p["ln1_post"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+        if has_ffn:
+            p["ln2_post"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+    return p
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, length: int):
+    mixer, _ = _split_kind(kind)
+    if mixer in ("global", "local"):
+        if cfg.use_mla:
+            return attention.init_mla_cache(cfg, batch, length)
+        return attention.init_kv_cache(cfg, batch, length, mixer)
+    if mixer == "ssm":
+        return ssm.init_ssm_cache(cfg, batch)
+    if mixer == "rec":
+        return rglru.init_rglru_cache(cfg, batch)
+    raise ValueError(mixer)
+
+
+def apply_block(
+    p, x, positions, cfg: ModelConfig, kind: str,
+    cache=None, cache_index=None, decode: bool = False,
+):
+    """Returns (x, new_cache, aux_loss)."""
+    mixer, ffn_override = _split_kind(kind)
+    aux = jnp.zeros((), jnp.float32)
+
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if mixer in ("global", "local"):
+        out, new_cache = attention.apply_attention(
+            p["mixer"], h, positions, cfg, kind=mixer, cache=cache,
+            cache_index=cache_index)
+    elif mixer == "ssm":
+        out, new_cache = ssm.apply_ssm(p["mixer"], h, cfg, cache=cache,
+                                       decode=decode)
+    else:
+        out, new_cache = rglru.apply_rglru(p["mixer"], h, cfg, cache=cache,
+                                           decode=decode)
+    if cfg.post_norms:
+        out = rms_norm(out, p["ln1_post"], cfg.norm_eps)
+    x = x + out
+
+    if "ffn" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe and ffn_override != "dense":
+            out, aux = moe_lib.apply_moe(p["ffn"], h, cfg)
+        else:
+            out = common.apply_mlp(p["ffn"], h, cfg)
+        if cfg.post_norms:
+            out = rms_norm(out, p["ln2_post"], cfg.norm_eps)
+        x = x + out
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+class DecoderLM:
+    """Functional decoder LM; params are plain pytrees, methods are pure."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- init ---------------------------------------------------------------
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, len(cfg.segments) + 2)
+        params = {"embed": common.init_embed(keys[0], cfg),
+                  "ln_f": jnp.zeros((cfg.d_model,), cfg.param_dtype)}
+        for s, (pattern, reps) in enumerate(cfg.segments):
+            seg_key = keys[s + 1]
+
+            def init_rep(k):
+                kk = jax.random.split(k, len(pattern))
+                return tuple(
+                    init_block(kk[i], cfg, kind)
+                    for i, kind in enumerate(pattern)
+                )
+
+            rep_keys = jax.random.split(seg_key, reps)
+            params[f"seg{s}"] = jax.vmap(init_rep)(rep_keys)
+        return params
+
+    def init_caches(self, batch: int, length: int):
+        cfg = self.cfg
+        caches = []
+        for pattern, reps in cfg.segments:
+            def one(_):
+                return tuple(
+                    init_block_cache(cfg, kind, batch, length)
+                    for kind in pattern
+                )
+            stacked = jax.vmap(one)(jnp.arange(reps))
+            caches.append(stacked)
+        return tuple(caches)
+
+    # -- forward ------------------------------------------------------------
+
+    def forward(
+        self,
+        params,
+        tokens: jax.Array,                 # (B, L_text)
+        positions: jax.Array,              # (B, L)
+        patch_embeds: Optional[jax.Array] = None,   # (B, n_vis, d) vlm stub
+        caches=None,
+        cache_index=None,
+        decode: bool = False,
+    ):
+        """Returns (hidden (B, L, d), new_caches, aux)."""
+        cfg = self.cfg
+        x = common.embed_tokens(params["embed"], tokens, cfg)
+        if patch_embeds is not None:
+            x = jnp.concatenate([patch_embeds.astype(cfg.dtype), x], axis=1)
+        x = constrain_batch(x, cfg.sharding_profile)
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = []
+
+        for s, (pattern, reps) in enumerate(cfg.segments):
+            seg_params = params[f"seg{s}"]
+            seg_cache = caches[s] if caches is not None else None
+
+            def body(carry, xs, _pattern=pattern):
+                xc, aux_c = carry
+                p_rep, c_rep = xs
+                out_caches = []
+                for i, kind in enumerate(_pattern):
+                    cache_i = c_rep[i] if c_rep is not None else None
+                    xc, nc, aux_i = apply_block(
+                        p_rep[i], xc, positions, cfg, kind,
+                        cache=cache_i, cache_index=cache_index, decode=decode)
+                    xc = constrain_batch(xc, cfg.sharding_profile)
+                    out_caches.append(nc)
+                    aux_c = aux_c + aux_i
+                return (xc, aux_c), tuple(out_caches)
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+
+            xs = (seg_params, seg_cache)
+            (x, aux_total), seg_new = jax.lax.scan(
+                body, (x, aux_total), xs)
+            new_caches.append(seg_new)
+
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return x, (tuple(new_caches) if caches is not None else None), aux_total
+
+    def logits(self, params, hidden):
+        return common.unembed(params["embed"], hidden, self.cfg)

@@ -1,0 +1,22 @@
+"""VLM frontend STUB (llava-next anyres tiling).
+
+Per the assignment, [vlm] entries specify the transformer BACKBONE only; the
+modality frontend supplies precomputed patch embeddings via input_specs.
+This module documents the contract and provides the synthetic-embedding
+helper tests/examples use.
+
+Real anyres tiling (llava-1.6): the image is split into up to 5 tiles
+(best-fit aspect grid + a downscaled overview), each encoded by CLIP-ViT-L
+336px -> 24x24 = 576 patch embeddings, then projected to d_model by a 2-layer
+MLP.  5 x 576 = 2880 = ModelConfig.vision_tokens.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def synthetic_patch_embeds(key, batch: int, n_tokens: int, d_model: int,
+                           dtype=jnp.bfloat16) -> jax.Array:
+    """Stand-in for the frozen vision tower's projected output."""
+    return (jax.random.normal(key, (batch, n_tokens, d_model)) * 0.02).astype(dtype)

@@ -1,0 +1,293 @@
+"""PartitionSpec rules for every parameter/batch/cache tensor, per profile.
+
+Profiles (ModelConfig.sharding_profile):
+  * ``dp``      — params/opt replicated; batch over (pod, data).
+  * ``tp``      — Megatron-style: attention heads / ffn / vocab / experts
+                  over ``model``; batch over (pod, data).
+  * ``fsdp_tp`` — tp PLUS parameter/optimizer sharding over ``data``
+                  (the fsdp axis); XLA inserts all-gathers at use sites and
+                  reduce-scatters in the backward pass.
+
+Rules are name+shape based and *divisibility-safe*: any axis that does not
+evenly divide the corresponding mesh axis is dropped (replicated) rather
+than crashing — e.g. smollm's 9 heads or whisper's 51865 vocab on a 16-way
+model axis.  Specs are defined for the trailing dims of each named tensor
+and left-padded with None, so stacked-scan leading dims are automatically
+replicated.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# tensor-name -> trailing-dim spec (profile-dependent axes filled in below).
+# 'M' = model axis, 'F' = fsdp axis (data; only in fsdp_tp), None = replicate.
+_RULES = {
+    # embeddings: vocab-sharded ONLY.  Sharding d over the fsdp axis makes
+    # every chunked-CE contraction emit partial sums -> an all-reduce of
+    # the (chunk, V/model) logits over 'data' per chunk (~240 GB/device/
+    # step measured) — far costlier than replicating d (+0.2-0.7 GB args).
+    "table": ("M", None),            # (V, d)
+    "unembed": (None, "M"),          # (d, V)
+    # attention
+    "wq": ("F", "M", None),          # (d, H, hd)
+    "wk": ("F", "M", None),          # (d, KV, hd)
+    "wv": ("F", "M", None),
+    "wo": ("M", None, "F"),          # (H, hd, d)
+    # MLA
+    "w_dq": ("F", "M"),              # (d, q_lora)
+    "w_uq": (None, "M", None),       # (q_lora|d, H, nope+rope)
+    "w_dkv": ("F", "M"),             # (d, kv_lora)
+    "w_krope": ("F", None),          # (d, rope_hd)
+    "w_uk": (None, "M", None),       # (kv_lora, H, nope)
+    "w_uv": (None, "M", None),       # (kv_lora, H, vh)
+    # mlp
+    "wi": ("F", "M"),                # (d, ff)
+    "wg": ("F", "M"),
+    # (ff, d) handled by name wo above for attn; mlp out uses 'wo' too —
+    # disambiguated by ndim in _spec_for.
+    # moe
+    "router": (None, None),          # (d, E) replicated (tiny, fp32)
+    # ssm
+    "in_proj": ("F", "M"),           # (d, 2*di+2GN+H)
+    "out_proj": ("M", "F"),          # (di, d)
+    "conv_w": (None, "M"),           # (K, convdim)
+    "conv_b": ("M",),
+    "A_log": (None,),
+    "D": (None,),
+    "dt_bias": (None,),
+    # rglru
+    "w_rec_in": ("F", "M"),          # (d, dr)
+    "w_gate_in": ("F", "M"),
+    "w_a": ("M", None, None),        # (nb, drb, drb) block-diagonal
+    "w_x": ("M", None, None),
+    "b_a": ("M",),
+    "b_x": ("M",),
+    "lam": ("M",),
+    "w_out": ("M", "F"),             # (dr, d)
+}
+
+# names whose MoE 3-D variants get an expert-parallel leading axis
+_MOE_3D = {"wi": ("M", "F", None), "wg": ("M", "F", None),
+           "wo": ("M", None, "F")}
+# mlp/attn 'wo' 2-D: (ff, d)
+_WO_2D = ("M", "F")
+
+
+def _resolve(axis: Optional[str], profile: str):
+    if axis == "M":
+        return "model" if profile in ("tp", "fsdp_tp") else None
+    if axis == "F":
+        return "data" if profile == "fsdp_tp" else None
+    return None
+
+
+def _spec_for(name: str, ndim: int, profile: str) -> Tuple:
+    base = _RULES.get(name)
+    if base is None:
+        return ()
+    return tuple(_resolve(a, profile) for a in base)
+
+
+def _fit(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Left-pad to ndim; axes that don't divide their dim are RELOCATED to
+    the largest unassigned dim they do divide (e.g. qwen2-moe's 60 experts
+    can't take the 16-way model axis — it moves to the ffn dim), and
+    dropped only if nowhere fits."""
+    spec = (None,) * (len(shape) - len(spec)) + tuple(spec)
+    spec = spec[-len(shape):] if shape else ()
+    out: list = []
+    homeless: list = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in (
+            ax if isinstance(ax, tuple) else (ax,))]))
+        if dim % size == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+            homeless.append((ax, size))
+    for ax, size in homeless:
+        cands = [i for i, cur in enumerate(out)
+                 if cur is None and shape[i] % size == 0 and shape[i] >= size]
+        if cands:
+            best = max(cands, key=lambda i: shape[i])
+            out[best] = ax
+    return P(*out)
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if isinstance(p, jax.tree_util.DictKey):
+            return str(p.key)
+        if isinstance(p, jax.tree_util.GetAttrKey):
+            return p.name
+    return ""
+
+
+def param_shardings(params_struct, mesh: Mesh, profile: str):
+    """Pytree of NamedSharding matching ``params_struct`` (eval_shape ok).
+
+    For ndim disambiguation, stacked scan params have extra LEADING dims;
+    ``wo`` with trailing shape (ff, d) vs (H, hd, d) is separated by whether
+    the mlp ('ffn') or attention ('mixer') subtree owns it.
+    """
+    def assign(path, leaf):
+        name = _leaf_name(path)
+        ndim = len(leaf.shape)
+        if name in ("wi", "wg", "wo") and _is_moe_expert(path, ndim):
+            base = _MOE_3D[name]                       # (E, ., .) expert-par
+            spec = tuple(_resolve(a, profile) for a in base)
+        elif name == "wo" and _in_subtree(path, ("ffn", "mlp", "shared")):
+            spec = tuple(_resolve(a, profile) for a in _WO_2D)  # (ff, d)
+        else:
+            spec = _spec_for(name, ndim, profile)
+        return NamedSharding(mesh, _fit(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, params_struct)
+
+
+def _in_subtree(path, names) -> bool:
+    return any(
+        isinstance(p, jax.tree_util.DictKey) and str(p.key) in names
+        for p in path)
+
+
+def _is_moe_expert(path, ndim: int) -> bool:
+    """MoE expert tensors live directly under 'ffn' (never 'shared'/'mixer')
+    and carry an expert dim: stacked (reps, E, ., .) = 4-D.  Stacked dense
+    mlp tensors under 'ffn' are 3-D, so ndim >= 4 disambiguates."""
+    keys = [str(p.key) for p in path if isinstance(p, jax.tree_util.DictKey)]
+    return ("ffn" in keys and "shared" not in keys and "mixer" not in keys
+            and ndim >= 4)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / activation specs
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh, profile: str = "tp") -> Tuple[str, ...]:
+    """Axes the batch dim shards over.  Pure-DP profiles fold the (otherwise
+    idle) model axis into the batch so all chips hold distinct data."""
+    names = ("pod", "data", "model") if profile == "dp" else ("pod", "data")
+    return tuple(a for a in names if a in mesh.shape)
+
+
+def _dividing_prefix(dim: int, axes: Tuple[str, ...], mesh: Mesh) -> Tuple[str, ...]:
+    """Longest prefix of ``axes`` whose product divides ``dim``."""
+    out = []
+    size = 1
+    for a in axes:
+        nxt = size * mesh.shape[a]
+        if dim % nxt != 0:
+            break
+        out.append(a)
+        size = nxt
+    return tuple(out)
+
+
+def data_shardings(batch_struct, mesh: Mesh, profile: str = "tp"):
+    """Shard dim0 (batch) of every input over the longest dividing prefix
+    of the DP axes (a batch of 32 on a 16x16 dp mesh still gets 16-way
+    data sharding instead of replication)."""
+    axes = batch_axes(mesh, profile)
+
+    def assign(leaf):
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        prefix = _dividing_prefix(leaf.shape[0], axes, mesh)
+        if prefix:
+            return NamedSharding(
+                mesh, P(prefix, *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+
+    return jax.tree.map(assign, batch_struct)
+
+
+def cache_shardings(cache_struct, mesh: Mesh, profile: str):
+    """KV/state caches: batch over (pod,data) when divisible; else shard the
+    head/feature axis over model when divisible (long_500k's batch=1)."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    msize = mesh.shape.get("model", 1)
+
+    def assign(leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        spec: list = [None] * len(shape)
+        # caches are stacked over layer repeats: (reps, B, ...); batch is
+        # dim1 (dim0 for the rare unstacked leaf).  Shard batch over the
+        # longest dividing prefix of (pod, data) …
+        bdim = None
+        for cand in (1, 0):
+            if cand < len(shape):
+                prefix = _dividing_prefix(shape[cand], dp_axes, mesh)
+                if prefix:
+                    spec[cand] = prefix if len(prefix) > 1 else prefix[0]
+                    bdim = cand
+                    break
+        # … then put 'model' on the largest remaining divisible dim (the
+        # sequence axis of a 32k KV cache, typically) — this is what makes
+        # decode_32k/long_500k fit: flash-decoding-style sequence sharding.
+        if msize > 1:
+            cands = [i for i in range(1, len(shape))
+                     if i != bdim and shape[i] % msize == 0
+                     and shape[i] >= msize]
+            if cands:
+                best = max(cands, key=lambda i: shape[i])
+                spec[best] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(assign, cache_struct)
+
+
+def _norm_path(path) -> Tuple:
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            out.append(f"#{p.idx}")
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            out.append(p.name)
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def opt_shardings(opt_struct, params_shardings, mesh: Mesh, profile: str):
+    """Optimizer state mirrors param shardings; scalars/factored vectors
+    replicate or inherit the matching prefix of the param spec."""
+    pshard_by_path = {
+        _norm_path(path): s
+        for path, s in jax.tree_util.tree_flatten_with_path(params_shardings)[0]
+    }
+
+    def assign(path, leaf):
+        if len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        # opt trees are {'m': params-tree, 'v': params-tree, ...}: strip the
+        # leading state key; adafactor leaves add a trailing 'v'/'vr'/'vc'.
+        norm = _norm_path(path)
+        spec = pshard_by_path.get(norm[1:]) or pshard_by_path.get(norm[1:-1])
+        if spec is None:
+            return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+        if len(spec.spec) == len(leaf.shape):
+            return spec
+        # factored adafactor state: reuse the compatible spec prefix,
+        # re-checking divisibility on the reduced shape
+        partial = [a for a, _ in zip(spec.spec, leaf.shape)]
+        fixed = []
+        for dim, ax in zip(leaf.shape, partial):
+            size = 1 if ax is None else int(np.prod(
+                [mesh.shape[a] for a in (ax if isinstance(ax, tuple)
+                                         else (ax,))]))
+            fixed.append(ax if ax is not None and dim % size == 0 else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree_util.tree_map_with_path(assign, opt_struct)

@@ -1,0 +1,305 @@
+"""Three-term roofline from the compiled dry-run artifact (no hardware).
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_wire_bytes / (chips x link_bw)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes (the partitioned
+per-device module — we multiply back by chips to get program totals, then
+divide per the formulas, i.e. the terms are per-device seconds);
+``compiled.as_text()`` parsed for every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, with wire bytes modeled
+per op from buffer size and the replica-group size S:
+
+    all-reduce        2 (S-1)/S x bytes     (ring: reduce-scatter+all-gather)
+    all-gather        (S-1)/S x bytes
+    reduce-scatter    (S-1)/S x bytes
+    all-to-all        (S-1)/S x bytes
+    collective-permute  1.0 x bytes
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+V5E = {
+    "peak_flops": 197e12,      # bf16 per chip
+    "hbm_bw": 819e9,           # bytes/s per chip
+    "ici_bw": 50e9,            # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda s: 2.0 * (s - 1) / s,
+    "all-gather": lambda s: (s - 1) / s,
+    "reduce-scatter": lambda s: (s - 1) / s,
+    "all-to-all": lambda s: (s - 1) / s,
+    "collective-permute": lambda s: 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACES_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    by_op: Dict[str, float]
+    by_op_count: Dict[str, int]
+    buffer_bytes: float            # sum of output buffer bytes (per device)
+    wire_bytes: float              # wire-factor-weighted bytes (per device)
+
+    def row(self):
+        return {
+            "buffer_bytes": self.buffer_bytes,
+            "wire_bytes": self.wire_bytes,
+            **{f"{k}_bytes": v for k, v in self.by_op.items()},
+            **{f"{k}_count": v for k, v in self.by_op_count.items()},
+        }
+
+
+def collective_stats(hlo_text: str, default_group: int = 16) -> CollectiveStats:
+    by_op: Dict[str, float] = {}
+    by_count: Dict[str, int] = {}
+    buffer_total = 0.0
+    wire_total = 0.0
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        shape_text, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        nbytes = _shape_bytes(shape_text)
+        if nbytes == 0:
+            continue
+        s = _group_size(line, default_group)
+        wire = _WIRE_FACTOR[op](max(s, 1)) * nbytes
+        by_op[op] = by_op.get(op, 0.0) + wire
+        by_count[op] = by_count.get(op, 0) + 1
+        buffer_total += nbytes
+        wire_total += wire
+    return CollectiveStats(by_op, by_count, buffer_total, wire_total)
+
+
+# ---------------------------------------------------------------------------
+# model FLOPs (the "useful work" denominator)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg) -> Tuple[float, float]:
+    """(total, active) parameter counts from the config (analytic)."""
+    d, V = cfg.d_model, cfg.vocab_size
+    embed = V * d * (1 if cfg.tie_embeddings else 2)
+
+    def attn_params():
+        if cfg.use_mla:
+            q = (d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.n_heads *
+                 (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+                 if cfg.q_lora_rank else
+                 d * cfg.n_heads * (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim))
+            kv = d * cfg.kv_lora_rank + d * cfg.qk_rope_head_dim
+            up = cfg.kv_lora_rank * cfg.n_heads * (
+                cfg.qk_nope_head_dim + cfg.v_head_dim)
+            o = cfg.n_heads * cfg.v_head_dim * d
+            return q + kv + up + o
+        hd = cfg.head_dim_
+        return d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+
+    def mlp_params(ff):
+        return 3 * d * ff if cfg.act in ("silu", "gelu") and True else 2 * d * ff
+
+    def ssm_params():
+        di = cfg.ssm_expand * d
+        H = di // cfg.ssm_head_dim
+        N = cfg.ssm_state
+        return d * (2 * di + 2 * N + H) + di * d
+
+    def rec_params():
+        dr = cfg.d_rnn
+        return 2 * d * dr + 2 * dr * dr + dr * d
+
+    total = embed
+    active = embed
+    for pattern, reps in cfg.segments:
+        for kind in pattern:
+            mixer = kind.split(":")[0]
+            dense_ffn = kind.endswith(":dense")
+            if mixer in ("global", "local"):
+                total += attn_params() * reps
+                active += attn_params() * reps
+            elif mixer == "ssm":
+                total += ssm_params() * reps
+                active += ssm_params() * reps
+            else:
+                total += rec_params() * reps
+                active += rec_params() * reps
+            if cfg.moe and not dense_ffn:
+                expert = 3 * d * cfg.moe_d_ff
+                shared = 3 * d * cfg.moe_d_ff * cfg.n_shared_experts
+                total += (cfg.n_experts * expert + shared) * reps
+                active += (cfg.top_k * expert + shared) * reps
+            elif cfg.d_ff > 0:
+                gated = not cfg.encoder_decoder
+                per = (3 if gated else 2) * d * cfg.d_ff
+                total += per * reps
+                active += per * reps
+    if cfg.encoder_decoder:
+        # encoder self-attn + mlp, decoder adds cross-attn
+        enc = (attn_params() + 2 * d * cfg.d_ff) * cfg.n_encoder_layers
+        cross = attn_params() * cfg.n_layers
+        total += enc + cross
+        active += enc + cross
+    return float(total), float(active)
+
+
+def model_flops(cfg, cell) -> float:
+    """6·N_active·D for train, 2·N_active·D for inference, plus the
+    attention O(S²) term (not captured by N·D)."""
+    total, active = count_params(cfg)
+    if cell.kind == "train":
+        tokens = cell.batch * cell.seq
+        mult = 6.0
+    elif cell.kind == "prefill":
+        tokens = cell.batch * cell.seq
+        mult = 2.0
+    else:                                   # decode: one token per sequence
+        tokens = cell.batch
+        mult = 2.0
+
+    flops = mult * active * tokens
+
+    # attention score/value FLOPs
+    attn_layers = 0
+    local_layers = 0
+    for pattern, reps in cfg.segments:
+        for kind in pattern:
+            mixer = kind.split(":")[0]
+            if mixer == "global":
+                attn_layers += reps
+            elif mixer == "local":
+                local_layers += reps
+    hd = cfg.v_head_dim if cfg.use_mla else cfg.head_dim_
+    H = cfg.n_heads
+    if cell.kind in ("train", "prefill"):
+        fwd = 2 * 2 * cell.batch * H * hd * (
+            attn_layers * cell.seq ** 2 / 2
+            + local_layers * cell.seq * min(cfg.window, cell.seq))
+        flops += fwd * (3 if cell.kind == "train" else 1)
+    else:
+        flops += 2 * 2 * cell.batch * H * hd * (
+            attn_layers * cell.seq
+            + local_layers * min(cfg.window, cell.seq))
+    return float(flops)
+
+
+# ---------------------------------------------------------------------------
+# the three terms
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_total: float
+    hlo_bytes_total: float
+    wire_bytes_per_dev: float
+    model_flops: float
+    useful_ratio: float
+    bottleneck: str
+
+    def row(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_from_hlo(hc, n_chips: int, mflops: float, hw: dict = V5E) -> Roofline:
+    """Roofline terms from the trip-count-aware HLO cost (hlo_cost.HLOCost).
+    All hc numbers are per-device."""
+    compute_s = hc.flops / hw["peak_flops"]
+    memory_s = hc.bytes_accessed / hw["hbm_bw"]
+    collective_s = hc.coll_wire_bytes / hw["ici_bw"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    total_flops = hc.flops * n_chips
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        hlo_flops_total=total_flops,
+        hlo_bytes_total=hc.bytes_accessed * n_chips,
+        wire_bytes_per_dev=hc.coll_wire_bytes,
+        model_flops=mflops,
+        useful_ratio=mflops / total_flops if total_flops else 0.0,
+        bottleneck=bottleneck,
+    )
+
+
+def roofline(
+    cost: dict,
+    coll: CollectiveStats,
+    n_chips: int,
+    mflops: float,
+    hw: dict = V5E,
+) -> Roofline:
+    """cost = compiled.cost_analysis() of the PARTITIONED (per-device)
+    module; totals are per-device x chips."""
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops_dev / hw["peak_flops"]
+    memory_s = bytes_dev / hw["hbm_bw"]
+    collective_s = coll.wire_bytes / hw["ici_bw"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    total_flops = flops_dev * n_chips
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        hlo_flops_total=total_flops,
+        hlo_bytes_total=bytes_dev * n_chips,
+        wire_bytes_per_dev=coll.wire_bytes,
+        model_flops=mflops,
+        useful_ratio=mflops / total_flops if total_flops else 0.0,
+        bottleneck=bottleneck,
+    )

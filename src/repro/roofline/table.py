@@ -1,0 +1,78 @@
+"""Render the §Dry-run / §Roofline tables for EXPERIMENTS.md from the
+per-cell JSON records the dry-run writes.
+
+    PYTHONPATH=src python -m repro.roofline.table [--mesh pod16x16] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+DEF_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh_dir: str) -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(mesh_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 9))
+    return recs
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    return f"{x:.2e}"
+
+
+def render(recs: List[dict], md: bool = True) -> str:
+    hdr = ["arch", "shape", "status", "mem/dev GB", "compute s", "memory s",
+           "collective s", "bottleneck", "MODEL_FLOPS", "HLO_FLOPs",
+           "useful", "note"]
+    rows = []
+    for r in recs:
+        if r["status"] != "ok":
+            note = r.get("reason", r.get("error", ""))[:60]
+            rows.append([r["arch"], r["shape"], r["status"], "-", "-", "-",
+                         "-", "-", "-", "-", "-", note])
+            continue
+        rl = r["roofline"]
+        rows.append([
+            r["arch"], r["shape"], "ok",
+            f"{r['memory']['peak_per_device_gb']:.2f}",
+            fmt_s(rl["compute_s"]), fmt_s(rl["memory_s"]),
+            fmt_s(rl["collective_s"]), rl["bottleneck"],
+            fmt_s(rl["model_flops"]), fmt_s(rl["hlo_flops_total"]),
+            f"{rl['useful_ratio']:.2f}", "",
+        ])
+    if md:
+        out = ["| " + " | ".join(hdr) + " |",
+               "|" + "---|" * len(hdr)]
+        for row in rows:
+            out.append("| " + " | ".join(str(c) for c in row) + " |")
+        return "\n".join(out)
+    return "\n".join(",".join(str(c) for c in row) for row in [hdr] + rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=DEF_DIR)
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    recs = load(os.path.join(args.dir, args.mesh))
+    print(render(recs, md=not args.csv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Serving substrate: KV-cache engine with batched prefill/decode."""

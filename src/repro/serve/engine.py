@@ -1,0 +1,73 @@
+"""Batched serving engine: prefill + greedy/temperature decode over the
+Task API, with per-sequence completion tracking (continuous-batching lite:
+finished sequences keep decoding pad tokens until the wave drains — slot
+reuse across waves is the host scheduler's job).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class GenerateConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0       # 0 = greedy
+    eos_id: Optional[int] = None
+    pad_id: int = 0
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, task, params):
+        self.task = task
+        self.params = params
+        self._prefill = jax.jit(task.prefill)
+        self._decode = jax.jit(task.decode_step)
+
+    def generate(self, prompts: np.ndarray, gcfg: GenerateConfig,
+                 extra_batch: Optional[dict] = None) -> np.ndarray:
+        """prompts: (B, L_prompt) int32 (already padded).  Returns
+        (B, max_new_tokens) generated ids."""
+        B, Lp = prompts.shape
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if extra_batch:
+            batch.update(extra_batch)
+        caches, logits = self._prefill(self.params, batch)
+
+        n_vis = getattr(self.task.cfg, "vision_tokens", 0)
+        if extra_batch and "patch_embeds" in (extra_batch or {}):
+            pos0 = Lp + n_vis
+        else:
+            pos0 = Lp
+
+        key = jax.random.PRNGKey(gcfg.seed)
+        out = np.zeros((B, gcfg.max_new_tokens), np.int32)
+        done = np.zeros((B,), bool)
+        tok = self._sample(logits[:, -1], gcfg, key)
+
+        for t in range(gcfg.max_new_tokens):
+            out[:, t] = np.where(done, gcfg.pad_id, np.asarray(tok))
+            if gcfg.eos_id is not None:
+                done |= np.asarray(tok) == gcfg.eos_id
+                if done.all():
+                    break
+            step_batch = {
+                "tokens": jnp.asarray(tok)[:, None].astype(jnp.int32),
+                "pos": jnp.asarray(pos0 + t, jnp.int32),
+            }
+            logits, caches = self._decode(self.params, step_batch, caches)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits[:, -1], gcfg, sub)
+        return out
+
+    @staticmethod
+    def _sample(logits: jax.Array, gcfg: GenerateConfig, key) -> jax.Array:
+        if gcfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / gcfg.temperature, axis=-1).astype(jnp.int32)

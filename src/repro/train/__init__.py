@@ -1,0 +1,2 @@
+"""Training substrate: optimizers, losses, loop, checkpointing, fault
+tolerance."""

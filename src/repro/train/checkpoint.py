@@ -1,0 +1,180 @@
+"""Checkpointing: atomic, async, mesh-elastic.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json, written to a ``.tmp``
+sibling then ``os.rename``d — a crash mid-write can never leave a
+half-readable "latest" checkpoint (restore scans only committed dirs).
+
+Elasticity: arrays are saved as full logical values with their tree paths;
+``restore`` device_puts each leaf with whatever sharding the *current* mesh
+prescribes — a job checkpointed on a (16,16) pod restores onto (2,16,16),
+(8,8), or a single host without conversion (DESIGN.md §4).
+
+Async: ``save_async`` snapshots to host memory synchronously (cheap,
+device->host DMA) and does the disk I/O on a daemon thread, so the train
+loop loses only the transfer time, not the serialization time.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _path_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return p.name
+    return str(p)
+
+
+def save(
+    ckpt_dir: str,
+    step: int,
+    params,
+    opt_state=None,
+    extra: Optional[Dict[str, Any]] = None,
+    keep: int = 3,
+) -> str:
+    """Synchronous atomic save.  Returns the committed directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    arrays = {}
+    for name, tree in (("params", params), ("opt", opt_state)):
+        if tree is None:
+            continue
+        for k, v in _flatten_with_paths(tree).items():
+            arrays[f"{name}::{k}"] = v
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "extra": extra or {},
+        "has_opt": opt_state is not None,
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _cleanup(ckpt_dir, keep)
+    return final
+
+
+class AsyncSaver:
+    """Snapshot-to-host synchronously, write-to-disk on a daemon thread."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def save_async(self, ckpt_dir, step, params, opt_state=None,
+                   extra=None, keep: int = 3):
+        self.wait()                                   # one in flight at a time
+        host_params = jax.tree.map(
+            lambda x: np.asarray(jax.device_get(x)), params)
+        host_opt = (
+            jax.tree.map(lambda x: np.asarray(jax.device_get(x)), opt_state)
+            if opt_state is not None else None)
+
+        def run():
+            try:
+                save(ckpt_dir, step, host_params, host_opt, extra, keep)
+            except BaseException as e:                # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+
+def _cleanup(ckpt_dir: str, keep: int):
+    steps = sorted(
+        d for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))
+    ]
+    return max(steps) if steps else None
+
+
+def restore(
+    ckpt_dir: str,
+    step: Optional[int] = None,
+    params_template=None,
+    opt_template=None,
+    shardings=None,
+    opt_shardings=None,
+) -> Tuple[int, Any, Any, Dict[str, Any]]:
+    """Restore (step, params, opt_state, extra).
+
+    Templates give the pytree structure (e.g. from ``jax.eval_shape``);
+    ``shardings`` (same structure) re-shards onto the current mesh.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    z = np.load(os.path.join(d, "arrays.npz"))
+
+    def rebuild(template, prefix, shard_tree):
+        if template is None:
+            return None
+        paths = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        shard_leaves = (
+            jax.tree.leaves(shard_tree) if shard_tree is not None
+            else [None] * len(paths[0]))
+        for (path, leaf), sh in zip(paths[0], shard_leaves):
+            key = f"{prefix}::" + "/".join(_path_str(p) for p in path)
+            arr = z[key]
+            arr = arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr
+            if sh is not None:
+                arr = jax.device_put(arr, sh)
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), leaves)
+
+    params = rebuild(params_template, "params", shardings)
+    opt = rebuild(opt_template, "opt", opt_shardings) if manifest["has_opt"] else None
+    return step, params, opt, manifest["extra"]

@@ -1,0 +1,92 @@
+"""Loss functions.
+
+``chunked_cross_entropy`` is the memory-critical one: a 256k-vocab model at
+1M tokens/step would materialize ~0.5 TB of logits if computed naively.  We
+scan over token chunks, computing (chunk, V) logits inside a rematerialized
+scan body, so peak live logits are (ce_chunk, V) regardless of sequence
+length — and the backward pass recomputes them per chunk instead of saving.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+IGNORE = -100
+
+
+def _chunk_loss(hidden_c, labels_c, unembed_fn):
+    """hidden (C, d), labels (C,) -> (sum_nll, n_valid).
+
+    The gold logit is extracted with an iota-mask sum, NOT take_along_axis:
+    under a vocab-sharded unembedding the gather would make GSPMD
+    all-reduce the FULL (C, V) logits per chunk (measured: ~234 GB/device
+    per step on recurrentgemma-9b — EXPERIMENTS.md §Perf); the masked sum
+    reduces over the sharded vocab dim locally and all-reduces only (C,)
+    scalars."""
+    logits = unembed_fn(hidden_c)                       # (C, V) fp32
+    valid = labels_c != IGNORE
+    safe = jnp.where(valid, labels_c, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    gold = jnp.sum(
+        jnp.where(vocab_iota == safe[:, None], logits, 0.0), axis=1)
+    nll = (lse - gold) * valid.astype(jnp.float32)
+    return jnp.sum(nll), jnp.sum(valid.astype(jnp.float32))
+
+
+def chunked_cross_entropy(
+    hidden: jax.Array,         # (B, L, d)
+    labels: jax.Array,         # (B, L) int32, IGNORE(-100) masked out
+    unembed_fn: Callable,      # (N, d) -> (N, V) fp32 logits
+    chunk: int = 2048,
+) -> jax.Array:
+    """Mean next-token NLL over valid labels, vocab never fully live.
+
+    Chunks run along the SEQUENCE dim, keeping the batch dim intact: the
+    batch is the data-sharded axis, so every chunk stays spread across all
+    data shards.  (Chunking the flattened token stream puts each chunk on
+    ONE shard and GSPMD replicates the vocab matmul everywhere — measured
+    as a 16x CE-FLOP blow-up on gemma2-9b, EXPERIMENTS.md §Perf.)
+    Live logits per step: (B, chunk, V) sharded over batch x vocab."""
+    B, L, d = hidden.shape
+    chunk = min(chunk, L)
+    pad = (-L) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=IGNORE)
+    n = hidden.shape[1] // chunk
+    h = hidden.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)   # (n,B,c,d)
+    y = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        hc, yc = xs
+        s, cnt = _chunk_loss(
+            hc.reshape(B * chunk, d), yc.reshape(B * chunk), unembed_fn)
+        return (carry[0] + s, carry[1] + cnt), None
+
+    body = jax.checkpoint(body)
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (h, y)
+    )
+    return total / jnp.maximum(count, 1.0)
+
+
+def full_cross_entropy(hidden, labels, unembed_fn):
+    """Reference (unchunked) implementation for tests."""
+    B, L, d = hidden.shape
+    s, n = _chunk_loss(hidden.reshape(-1, d), labels.reshape(-1), unembed_fn)
+    return s / jnp.maximum(n, 1.0)
+
+
+def shift_labels(tokens: jax.Array, pad_id: Optional[int] = None) -> jax.Array:
+    """Next-token labels: labels[t] = tokens[t+1]; last position ignored."""
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((tokens.shape[0], 1), IGNORE, tokens.dtype)],
+        axis=1,
+    )
+    if pad_id is not None:
+        labels = jnp.where(labels == pad_id, IGNORE, labels)
+    return labels

@@ -1,0 +1,161 @@
+"""Optimizers, from scratch (no optax in this container): SGD(+momentum),
+AdamW, and Adafactor (factored second moments — the memory lever that gets
+deepseek-v2-236b's optimizer state under the per-chip HBM line, see
+EXPERIMENTS.md §Perf).
+
+All are pure pytree transforms; state shardings mirror param shardings
+(parallel/sharding.py), so FSDP covers optimizer state for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # 'sgd' | 'adamw' | 'adafactor'
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    momentum: float = 0.9          # sgd only
+    grad_clip: float = 1.0         # global-norm clip; 0 disables
+    # adafactor
+    decay_rate: float = 0.8
+    factored_min_dim: int = 128
+
+
+def lr_at(step: jax.Array, cfg: OptConfig) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * warm * scale
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads, jnp.zeros(())
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+# ---------------------------------------------------------------------------
+
+def _factored(shape, min_dim) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
+
+
+def init(params, cfg: OptConfig):
+    step = jnp.zeros((), jnp.int32)
+    if cfg.name == "sgd":
+        mom = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"step": step, "m": mom}
+    if cfg.name == "adamw":
+        return {
+            "step": step,
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+    if cfg.name == "adafactor":
+        def make(p):
+            if _factored(p.shape, cfg.factored_min_dim):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"step": step, "v": jax.tree.map(
+            make, params, is_leaf=lambda x: isinstance(x, jax.Array)
+            or hasattr(x, "shape"))}
+    raise ValueError(f"unknown optimizer {cfg.name!r}")
+
+
+def apply(params, grads, state, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics-dict)."""
+    step = state["step"] + 1
+    lr = lr_at(step, cfg)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+
+    if cfg.name == "sgd":
+        m = jax.tree.map(
+            lambda mm, g: cfg.momentum * mm + g.astype(jnp.float32),
+            state["m"], grads)
+        new = jax.tree.map(
+            lambda p, mm: (p.astype(jnp.float32) - lr * mm).astype(p.dtype),
+            params, m)
+        return new, {"step": step, "m": m}, {"lr": lr, "grad_norm": gnorm}
+
+    if cfg.name == "adamw":
+        m = jax.tree.map(
+            lambda mm, g: cfg.b1 * mm + (1 - cfg.b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree.map(
+            lambda vv, g: cfg.b2 * vv
+            + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - cfg.b1 ** t
+        bc2 = 1 - cfg.b2 ** t
+
+        def upd(p, mm, vv):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            step_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            p32 = p.astype(jnp.float32)
+            if p.ndim >= 2:   # decoupled weight decay on matrices only
+                p32 = p32 * (1 - lr * cfg.weight_decay)
+            return (p32 - lr * step_).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, m, v)
+        return new, {"step": step, "m": m, "v": v}, {"lr": lr, "grad_norm": gnorm}
+
+    if cfg.name == "adafactor":
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-cfg.decay_rate)
+
+        def upd(p, g, v):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + 1e-30
+            if "vr" in v:
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+                vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vhat = beta * v["v"] + (1 - beta) * g2
+                new_v = {"v": vhat}
+            update = g32 / jnp.sqrt(vhat + 1e-30)
+            # RMS-clip the update (Adafactor's d=1.0)
+            rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+            update = update / jnp.maximum(1.0, rms)
+            p32 = p.astype(jnp.float32)
+            if p.ndim >= 2:
+                p32 = p32 * (1 - lr * cfg.weight_decay)
+            return (p32 - lr * update).astype(p.dtype), new_v
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_v = tree.flatten_up_to(state["v"])
+        outs = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new = tree.unflatten([o[0] for o in outs])
+        new_v = tree.unflatten([o[1] for o in outs])
+        return new, {"step": step, "v": new_v}, {"lr": lr, "grad_norm": gnorm}
+
+    raise ValueError(cfg.name)

@@ -1,0 +1,35 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the 1 real CPU device; multi-device semantics are
+tested via subprocesses (tests/helpers/)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def tiny_kg():
+    from repro.data import kg as kg_lib
+
+    return kg_lib.synthetic_kg(0, n_entities=300, n_relations=6, n_triplets=2500)
+
+
+@pytest.fixture(scope="session")
+def tiny_tcfg(tiny_kg):
+    from repro.core import transe
+
+    return transe.TransEConfig(
+        n_entities=tiny_kg.n_entities,
+        n_relations=tiny_kg.n_relations,
+        dim=16,
+        margin=1.0,
+        norm="l1",
+        learning_rate=0.05,
+    )

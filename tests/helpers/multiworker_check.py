@@ -1,0 +1,145 @@
+"""Subprocess helper: real multi-device semantics checks.
+
+Run with 8 forced host devices (the parent test sets XLA_FLAGS).  Asserts:
+  1. shard_map SGD epoch (psum Reduce)      == vmap SGD epoch (stacked Reduce)
+  2. shard_map SGD epoch (allgather Reduce) == vmap SGD epoch
+  3. shard_map BGD epoch                    == vmap BGD epoch
+  4. cross-pod local_sgd outer_merge: average/compressed/liveness semantics
+Exit code 0 on success.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import local_sgd, mapreduce, negative, transe
+from repro.data import kg as kg_lib
+
+W = 8
+assert len(jax.devices()) == W, f"expected {W} devices, got {len(jax.devices())}"
+
+
+def check_engine():
+    kg = kg_lib.synthetic_kg(0, n_entities=200, n_relations=5, n_triplets=2000)
+    tcfg = transe.TransEConfig(
+        n_entities=kg.n_entities, n_relations=kg.n_relations, dim=8,
+        learning_rate=0.05,
+    )
+    mesh = jax.make_mesh((W,), ("workers",))
+    part = kg_lib.partition_balanced(0, kg.train, W)
+    pos = jnp.asarray(kg_lib.epoch_batches(0, 0, part, 16))
+    neg = negative.make_negatives(jax.random.PRNGKey(1), pos, tcfg.n_entities)
+    params = transe.init_params(jax.random.PRNGKey(2), tcfg)
+    mk = jax.random.PRNGKey(3)
+
+    for strategy in ("average", "miniloss_perkey", "miniloss_global", "random"):
+        cfg_v = mapreduce.MapReduceConfig(
+            n_workers=W, strategy=strategy, backend="vmap", batch_size=16)
+        ref, ref_loss = mapreduce.sgd_epoch_vmap(params, pos, neg, cfg_v, tcfg, mk)
+        for impl in ("psum", "allgather"):
+            cfg_s = mapreduce.MapReduceConfig(
+                n_workers=W, strategy=strategy, reduce_impl=impl,
+                backend="shard_map", batch_size=16)
+            with mesh:
+                got, got_loss = mapreduce.sgd_epoch_shard(
+                    params, pos, neg, cfg_s, tcfg, mk, mesh)
+            for k in ("ent", "rel"):
+                np.testing.assert_allclose(
+                    np.asarray(got[k]), np.asarray(ref[k]), rtol=1e-4, atol=1e-5,
+                    err_msg=f"SGD {strategy}/{impl} table {k}",
+                )
+            np.testing.assert_allclose(
+                float(got_loss), float(ref_loss), rtol=1e-4,
+                err_msg=f"{strategy}/{impl} loss")
+        print(f"sgd {strategy}: shard_map(psum & allgather) == vmap  OK")
+
+    cfg_v = mapreduce.MapReduceConfig(
+        n_workers=W, paradigm="bgd", backend="vmap", batch_size=16)
+    ref, _ = mapreduce.bgd_epoch_vmap(params, pos, neg, cfg_v, tcfg)
+    cfg_s = mapreduce.MapReduceConfig(
+        n_workers=W, paradigm="bgd", backend="shard_map", batch_size=16)
+    got, _ = mapreduce.bgd_epoch_shard(params, pos, neg, cfg_s, tcfg, mesh)
+    np.testing.assert_allclose(
+        np.asarray(got["ent"]), np.asarray(ref["ent"]), rtol=1e-4, atol=1e-5)
+    print("bgd: shard_map == vmap  OK")
+
+
+def check_outer_merge():
+    mesh = jax.make_mesh((4, 2), ("pod", "data"))
+    rng = np.random.default_rng(0)
+    per_pod = jnp.asarray(rng.normal(size=(4, 6, 3)).astype(np.float32))
+    anchor = jnp.asarray(rng.normal(size=(6, 3)).astype(np.float32))
+    losses = jnp.asarray(np.array([0.5, 0.2, 0.9, 0.4], np.float32))
+    live = jnp.asarray(np.array([1.0, 1.0, 0.0, 1.0], np.float32))
+
+    def run(strategy, compress, use_liveness):
+        cfg = local_sgd.OuterConfig(strategy=strategy, compress=compress)
+
+        def f(p, loss, lv):
+            st = local_sgd.OuterState(anchor=anchor, momentum=None)
+            merged, _ = local_sgd.outer_merge(
+                p[0], st, cfg, local_loss=loss[0],
+                key=jax.random.PRNGKey(0),
+                liveness=lv[0] if use_liveness else None,
+            )
+            return merged[None]
+
+        out = jax.jit(jax.shard_map(
+            f, mesh=mesh,
+            in_specs=(P("pod"), P("pod"), P("pod")),
+            out_specs=P("pod"), check_vma=False,
+        ))(per_pod, losses, live)
+        return np.asarray(out)
+
+    # average, uncompressed, all live: anchor + mean(delta)
+    out = run("average", "none", False)
+    expect = np.asarray(anchor) + np.mean(np.asarray(per_pod) - np.asarray(anchor), 0)
+    for pod in range(4):
+        np.testing.assert_allclose(out[pod], expect, rtol=1e-5)
+    print("outer average OK")
+
+    # average with liveness mask: dead pod 2 excluded
+    out = run("average", "none", True)
+    deltas = np.asarray(per_pod) - np.asarray(anchor)
+    expect = np.asarray(anchor) + deltas[[0, 1, 3]].mean(axis=0)
+    np.testing.assert_allclose(out[0], expect, rtol=1e-5)
+    print("outer average + liveness OK")
+
+    # int8 compression: close to uncompressed (quantization tolerance)
+    out_q = run("average", "int8", False)
+    expect = np.asarray(anchor) + deltas.mean(axis=0)
+    err = np.abs(out_q[0] - expect).max()
+    scale = np.abs(deltas).max() / 127.0
+    assert err <= 4 * scale + 1e-6, (err, scale)
+    print(f"outer int8 average OK (max err {err:.2e} <= 4*lsb {4*scale:.2e})")
+
+    # miniloss_global: pod 1 (loss .2) wins everywhere
+    out = run("miniloss_global", "none", False)
+    np.testing.assert_allclose(out[0], np.asarray(per_pod)[1], rtol=1e-5)
+    print("outer miniloss_global OK")
+
+    # miniloss_global + liveness: among live pods only
+    out = run("miniloss_global", "none", True)
+    np.testing.assert_allclose(out[0], np.asarray(per_pod)[1], rtol=1e-5)
+    print("outer miniloss_global + liveness OK")
+
+    # random: result equals some pod's params, same on every pod
+    out = run("random", "none", False)
+    assert any(np.allclose(out[0], np.asarray(per_pod)[w]) for w in range(4))
+    for pod in range(1, 4):
+        np.testing.assert_allclose(out[pod], out[0])
+    print("outer random OK")
+
+
+if __name__ == "__main__":
+    check_engine()
+    check_outer_merge()
+    print("ALL MULTIDEVICE CHECKS PASSED")

@@ -1,0 +1,97 @@
+"""The flash-blocked attention path must equal the dense reference exactly
+(same math, different blocking), for every mask kind and GQA grouping."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention
+from repro.models.common import ModelConfig
+
+
+def mk_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128,
+                dtype=jnp.float32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("kind,causal", [
+    ("global", True), ("local", True), ("global", False)])
+@pytest.mark.parametrize("H,KV", [(4, 4), (4, 2), (4, 1)])
+def test_flash_equals_dense(kind, causal, H, KV):
+    cfg = mk_cfg(n_heads=H, n_kv_heads=KV, window=48,
+                 attn_softcap=None)
+    B, Lq, Lk, hd = 2, 96, 96, 16
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Lq, H, hd))
+    k = jax.random.normal(ks[1], (B, Lk, KV, hd))
+    v = jax.random.normal(ks[2], (B, Lk, KV, hd))
+    pos = jnp.broadcast_to(jnp.arange(Lq)[None], (B, Lq))
+
+    dense_mask = attention.make_mask(pos, pos, kind, cfg.window, causal)
+    want = attention._sdpa_dense(q, k, v, dense_mask, cfg, 0.25)
+    # force the flash path by shrinking its thresholds
+    old_q, old_k = attention.Q_BLOCK, attention.KV_BLOCK
+    attention.Q_BLOCK, attention.KV_BLOCK = 32, 24
+    try:
+        got = attention._sdpa_flash(q, k, v, pos, pos, kind, causal, cfg, 0.25)
+    finally:
+        attention.Q_BLOCK, attention.KV_BLOCK = old_q, old_k
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_with_softcap_and_ragged_lengths():
+    cfg = mk_cfg(attn_softcap=30.0)
+    B, Lq, Lk, H, hd = 1, 50, 70, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, Lq, H, hd))
+    k = jax.random.normal(ks[1], (B, Lk, 2, hd))
+    v = jax.random.normal(ks[2], (B, Lk, 2, hd))
+    qpos = jnp.broadcast_to(jnp.arange(20, 20 + Lq)[None], (B, Lq))
+    kpos = jnp.broadcast_to(jnp.arange(Lk)[None], (B, Lk))
+    dense_mask = attention.make_mask(qpos, kpos, "global", 0, True)
+    want = attention._sdpa_dense(q, k, v, dense_mask, cfg, 0.25)
+    old_q, old_k = attention.Q_BLOCK, attention.KV_BLOCK
+    attention.Q_BLOCK, attention.KV_BLOCK = 16, 32
+    try:
+        got = attention._sdpa_flash(q, k, v, qpos, kpos, "global", True,
+                                    cfg, 0.25)
+    finally:
+        attention.Q_BLOCK, attention.KV_BLOCK = old_q, old_k
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_gradients_match_dense():
+    cfg = mk_cfg()
+    B, L, H, hd = 1, 64, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, L, H, hd))
+    k = jax.random.normal(ks[1], (B, L, 2, hd))
+    v = jax.random.normal(ks[2], (B, L, 2, hd))
+    pos = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+
+    def f_dense(q, k, v):
+        m = attention.make_mask(pos, pos, "global", 0, True)
+        return jnp.sum(attention._sdpa_dense(q, k, v, m, cfg, 0.25) ** 2)
+
+    def f_flash(q, k, v):
+        old = attention.Q_BLOCK, attention.KV_BLOCK
+        attention.Q_BLOCK, attention.KV_BLOCK = 16, 16
+        try:
+            return jnp.sum(attention._sdpa_flash(
+                q, k, v, pos, pos, "global", True, cfg, 0.25) ** 2)
+        finally:
+            attention.Q_BLOCK, attention.KV_BLOCK = old
+
+    gd = jax.grad(f_dense, argnums=(0, 1, 2))(q, k, v)
+    gf = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gd, gf):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=5e-4, atol=1e-5)

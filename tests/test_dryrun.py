@@ -1,0 +1,86 @@
+"""Dry-run machinery integration: the real 512-device lower+compile path
+(subprocess — keeps this process at 1 device) for one representative cell
+per mesh, plus unit tests for the trip-count-aware HLO cost analyzer."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.roofline import hlo_cost
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("flags", [[], ["--multi-pod"]])
+def test_dryrun_cell_subprocess(flags, tmp_path):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)          # dryrun.py sets its own
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "smollm-135m", "--shape", "train_4k",
+         "--out", str(tmp_path)] + flags,
+        env=env, capture_output=True, text=True, timeout=1200,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    mesh = "pod2x16x16" if flags else "pod16x16"
+    rec = json.load(open(tmp_path / mesh / "smollm-135m__train_4k.json"))
+    assert rec["status"] == "ok", rec
+    assert rec["memory"]["peak_per_device_gb"] < 16.0
+    assert rec["roofline"]["model_flops"] > 0
+    assert rec["hlo_cost"]["flops"] > 0
+
+
+class TestHLOCostAnalyzer:
+    def test_scan_trip_count_multiplies(self):
+        def scanned(w, x):
+            def body(c, wi):
+                return jnp.tanh(c @ wi), None
+            y, _ = jax.lax.scan(body, x, w)
+            return y.sum()
+
+        ws = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+        xs = jax.ShapeDtypeStruct((32, 128), jnp.float32)
+        txt = jax.jit(scanned).lower(ws, xs).compile().as_text()
+        cost = hlo_cost.analyze(txt)
+        want = 10 * 2 * 32 * 128 * 128
+        assert abs(cost.flops - want) / want < 0.01
+
+    def test_nested_scan(self):
+        def nested(w, x):
+            def outer(c, wi):
+                def inner(ci, _):
+                    return jnp.tanh(ci @ wi), None
+                c2, _ = jax.lax.scan(inner, c, None, length=3)
+                return c2, None
+            y, _ = jax.lax.scan(outer, x, w)
+            return y.sum()
+
+        ws = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+        xs = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+        txt = jax.jit(nested).lower(ws, xs).compile().as_text()
+        cost = hlo_cost.analyze(txt)
+        want = 5 * 3 * 2 * 16 * 64 * 64
+        assert abs(cost.flops - want) / want < 0.01
+
+    def test_shape_bytes(self):
+        assert hlo_cost._shape_numel_bytes("f32[4,8]{1,0}") == 128
+        assert hlo_cost._shape_numel_bytes("bf16[10]") == 20
+        assert hlo_cost._shape_numel_bytes("(f32[2], s32[3])") == 20
+
+    def test_collective_wire_factors(self):
+        hlo = """
+ENTRY %main (p: f32[16]) -> f32[16] {
+  %p = f32[16]{0} parameter(0)
+  ROOT %ar = f32[16]{0} all-reduce(%p), replica_groups=[16,16]<=[256], to_apply=%add
+}
+"""
+        cost = hlo_cost.analyze(hlo)
+        # all-reduce of 64B in groups of 16: wire = 2*(15/16)*64
+        assert abs(cost.coll_wire_bytes - 2 * 15 / 16 * 64) < 1e-6

@@ -1,0 +1,137 @@
+"""Unit + property tests for the Reduce-phase merge strategies (paper §3.1.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import merge
+
+
+def mk(W=3, N=5, k=4, seed=0):
+    rng = np.random.default_rng(seed)
+    stacked = jnp.asarray(rng.normal(size=(W, N, k)).astype(np.float32))
+    counts = jnp.asarray(rng.integers(0, 4, size=(W, N)).astype(np.float32))
+    losses = jnp.asarray(rng.uniform(0, 2, size=(W, N)).astype(np.float32) * counts)
+    worker_loss = jnp.asarray(rng.uniform(0.1, 1.0, size=(W,)).astype(np.float32))
+    return stacked, counts, losses, worker_loss
+
+
+class TestAverage:
+    def test_average_all_is_plain_mean(self):
+        stacked, counts, losses, wl = mk()
+        out = merge.merge_stacked("average_all", stacked, counts, losses, wl)
+        np.testing.assert_allclose(out, np.mean(np.asarray(stacked), axis=0), rtol=1e-6)
+
+    def test_average_weights_by_touch_count(self):
+        stacked = jnp.asarray(
+            np.stack([np.full((2, 3), 1.0), np.full((2, 3), 5.0)]).astype(np.float32)
+        )
+        counts = jnp.asarray(np.array([[3.0, 0.0], [1.0, 0.0]], np.float32))
+        losses = jnp.zeros_like(counts)
+        wl = jnp.zeros((2,))
+        out = np.asarray(merge.merge_stacked("average", stacked, counts, losses, wl))
+        # key 0: (3*1 + 1*5)/4 = 2 ; key 1 untouched -> plain mean = 3
+        np.testing.assert_allclose(out[0], 2.0, rtol=1e-6)
+        np.testing.assert_allclose(out[1], 3.0, rtol=1e-6)
+
+
+class TestMiniLoss:
+    def test_global_picks_min_loss_worker(self):
+        stacked, counts, losses, _ = mk()
+        wl = jnp.asarray(np.array([0.5, 0.1, 0.9], np.float32))
+        out = merge.merge_stacked("miniloss_global", stacked, counts, losses, wl)
+        np.testing.assert_allclose(out, stacked[1])
+
+    def test_perkey_picks_min_mean_loss_toucher(self):
+        W, N, k = 2, 2, 3
+        stacked = jnp.asarray(np.stack(
+            [np.full((N, k), 1.0), np.full((N, k), 2.0)]).astype(np.float32))
+        counts = jnp.asarray(np.array([[1.0, 1.0], [1.0, 1.0]], np.float32))
+        # key 0: worker1 lower loss; key 1: worker0 lower loss
+        losses = jnp.asarray(np.array([[0.9, 0.1], [0.2, 0.8]], np.float32))
+        wl = jnp.zeros((2,))
+        out = np.asarray(
+            merge.merge_stacked("miniloss_perkey", stacked, counts, losses, wl)
+        )
+        np.testing.assert_allclose(out[0], 2.0)
+        np.testing.assert_allclose(out[1], 1.0)
+
+    def test_perkey_ignores_untouched_workers(self):
+        stacked = jnp.asarray(np.stack(
+            [np.full((1, 2), 7.0), np.full((1, 2), 9.0)]).astype(np.float32))
+        counts = jnp.asarray(np.array([[0.0], [2.0]], np.float32))
+        losses = jnp.asarray(np.array([[0.0], [5.0]], np.float32))  # toucher has loss
+        out = np.asarray(merge.merge_stacked(
+            "miniloss_perkey", stacked, counts, losses, jnp.zeros((2,))))
+        np.testing.assert_allclose(out[0], 9.0)   # only worker 1 touched
+
+
+class TestRandom:
+    def test_selects_a_toucher(self):
+        stacked, counts, losses, wl = mk(W=4, N=64, k=2, seed=3)
+        out = np.asarray(merge.merge_stacked(
+            "random", stacked, counts, losses, wl, key=jax.random.PRNGKey(0)))
+        s, c = np.asarray(stacked), np.asarray(counts)
+        for n in range(64):
+            touchers = np.where(c[:, n] > 0)[0]
+            cands = touchers if len(touchers) else np.arange(4)
+            match = any(np.allclose(out[n], s[w, n]) for w in cands)
+            assert match, f"key {n}: merged row is not any toucher's row"
+
+    def test_deterministic_given_key(self):
+        stacked, counts, losses, wl = mk(W=4, N=32, k=2, seed=5)
+        a = merge.merge_stacked("random", stacked, counts, losses, wl,
+                                key=jax.random.PRNGKey(7))
+        b = merge.merge_stacked("random", stacked, counts, losses, wl,
+                                key=jax.random.PRNGKey(7))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_needs_key(self):
+        stacked, counts, losses, wl = mk()
+        with pytest.raises(ValueError):
+            merge.merge_stacked("random", stacked, counts, losses, wl)
+
+
+class TestProperties:
+    @given(
+        W=st.integers(2, 5), N=st.integers(1, 12), k=st.integers(1, 6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_average_between_min_and_max(self, W, N, k, seed):
+        rng = np.random.default_rng(seed)
+        stacked = jnp.asarray(rng.normal(size=(W, N, k)).astype(np.float32))
+        counts = jnp.asarray(rng.integers(0, 3, size=(W, N)).astype(np.float32))
+        out = np.asarray(merge.merge_stacked(
+            "average", stacked, counts, jnp.zeros((W, N)), jnp.zeros((W,))))
+        s = np.asarray(stacked)
+        assert np.all(out <= s.max(axis=0) + 1e-5)
+        assert np.all(out >= s.min(axis=0) - 1e-5)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_identical_workers_merge_to_same(self, seed):
+        """All strategies are the identity when worker copies agree."""
+        rng = np.random.default_rng(seed)
+        row = rng.normal(size=(6, 3)).astype(np.float32)
+        stacked = jnp.asarray(np.stack([row] * 4))
+        counts = jnp.asarray(rng.integers(0, 3, size=(4, 6)).astype(np.float32))
+        losses = jnp.asarray(rng.uniform(size=(4, 6)).astype(np.float32))
+        wl = jnp.asarray(rng.uniform(size=(4,)).astype(np.float32))
+        for strat in merge.STRATEGIES:
+            out = merge.merge_stacked(strat, stacked, counts, losses, wl,
+                                      key=jax.random.PRNGKey(0))
+            np.testing.assert_allclose(np.asarray(out), row, rtol=1e-5,
+                                       err_msg=strat)
+
+    @given(perm_seed=st.integers(0, 1000))
+    @settings(max_examples=15, deadline=None)
+    def test_average_worker_permutation_invariant(self, perm_seed):
+        stacked, counts, losses, wl = mk(W=4, N=8, k=3, seed=11)
+        perm = np.random.default_rng(perm_seed).permutation(4)
+        a = merge.merge_stacked("average", stacked, counts, losses, wl)
+        b = merge.merge_stacked(
+            "average", stacked[perm], counts[perm], losses[perm], wl[perm]
+        )
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)

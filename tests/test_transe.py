@@ -1,0 +1,161 @@
+"""Unit tests for the TransE model layer (paper §2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import negative, transe
+
+
+def make_cfg(**kw):
+    base = dict(n_entities=50, n_relations=5, dim=8, margin=1.0, norm="l1",
+                learning_rate=0.1)
+    base.update(kw)
+    return transe.TransEConfig(**base)
+
+
+class TestInit:
+    def test_shapes_and_bounds(self):
+        cfg = make_cfg()
+        p = transe.init_params(jax.random.PRNGKey(0), cfg)
+        assert p["ent"].shape == (50, 8)
+        assert p["rel"].shape == (5, 8)
+        bound = 6.0 / np.sqrt(8)
+        assert np.all(np.abs(p["ent"]) <= bound)
+
+    def test_relations_normalized_at_init(self):
+        cfg = make_cfg()
+        p = transe.init_params(jax.random.PRNGKey(0), cfg)
+        norms = np.linalg.norm(p["rel"], axis=1)
+        np.testing.assert_allclose(norms, 1.0, rtol=1e-5)
+
+    def test_bad_norm_rejected(self):
+        with pytest.raises(ValueError):
+            make_cfg(norm="l3")
+
+
+class TestEnergy:
+    def test_perfect_translation_has_zero_energy(self):
+        p = {
+            "ent": jnp.array([[0.0, 0.0], [1.0, 2.0]]),
+            "rel": jnp.array([[1.0, 2.0]]),
+        }
+        trip = jnp.array([[0, 0, 1]])
+        for norm in ("l1", "l2"):
+            d = transe.energy(p, trip, norm)
+            assert float(d[0]) < 1e-5
+
+    def test_l1_vs_l2(self):
+        p = {
+            "ent": jnp.array([[0.0, 0.0], [1.0, 1.0]]),
+            "rel": jnp.array([[0.0, 0.0]]),
+        }
+        trip = jnp.array([[0, 0, 1]])
+        assert float(transe.energy(p, trip, "l1")[0]) == pytest.approx(2.0)
+        assert float(transe.energy(p, trip, "l2")[0]) == pytest.approx(
+            np.sqrt(2.0), rel=1e-4
+        )
+
+    def test_batch_shape(self):
+        cfg = make_cfg()
+        p = transe.init_params(jax.random.PRNGKey(0), cfg)
+        trip = jnp.zeros((7, 3), jnp.int32)
+        assert transe.energy(p, trip, "l1").shape == (7,)
+
+
+class TestLoss:
+    def test_hinge_zero_when_margin_satisfied(self):
+        d_pos = jnp.array([0.0])
+        d_neg = jnp.array([5.0])
+        assert float(transe.pairwise_hinge(d_pos, d_neg, 1.0)[0]) == 0.0
+
+    def test_hinge_positive_when_violated(self):
+        assert float(
+            transe.pairwise_hinge(jnp.array([2.0]), jnp.array([1.0]), 1.0)[0]
+        ) == pytest.approx(2.0)
+
+    def test_gradient_zero_for_satisfied_pairs(self):
+        """If every pair satisfies the margin, the loss is flat -> zero grad."""
+        p = {
+            "ent": jnp.array([[0.0, 0.0], [1.0, 0.0], [10.0, 10.0]]),
+            "rel": jnp.array([[1.0, 0.0]]),
+        }
+        pos = jnp.array([[0, 0, 1]])   # d = 0
+        neg = jnp.array([[0, 0, 2]])   # d large
+        g = jax.grad(transe.margin_loss)(p, pos, neg, margin=1.0, norm="l1")
+        assert float(jnp.abs(g["ent"]).max()) == 0.0
+
+
+class TestTraining:
+    def test_sgd_step_reduces_violation(self):
+        cfg = make_cfg(norm="l2", learning_rate=0.05, normalize="none")
+        p = transe.init_params(jax.random.PRNGKey(1), cfg)
+        pos = jnp.array([[0, 0, 1], [2, 1, 3]], jnp.int32)
+        neg = jnp.array([[0, 0, 7], [9, 1, 3]], jnp.int32)
+        l0 = transe.margin_loss(p, pos, neg, margin=cfg.margin, norm=cfg.norm)
+        for _ in range(60):
+            p, _ = transe.sgd_step(p, pos, neg, cfg)
+        l1 = transe.margin_loss(p, pos, neg, margin=cfg.margin, norm=cfg.norm)
+        assert float(l1) < float(l0)
+
+    def test_normalize_entities_unit_norm(self):
+        cfg = make_cfg()
+        p = transe.init_params(jax.random.PRNGKey(0), cfg)
+        p = transe.normalize_entities(p)
+        np.testing.assert_allclose(
+            np.linalg.norm(p["ent"], axis=1), 1.0, rtol=1e-5
+        )
+
+    def test_run_epoch_stats_counts(self):
+        """Touch counts must equal the number of pos+neg occurrences."""
+        cfg = make_cfg(normalize="none")
+        p = transe.init_params(jax.random.PRNGKey(0), cfg)
+        pos = jnp.array([[[0, 0, 1], [2, 1, 3]]], jnp.int32)  # (S=1, B=2, 3)
+        neg = jnp.array([[[4, 0, 1], [2, 1, 5]]], jnp.int32)
+        _, stats = transe.run_epoch(p, pos, neg, cfg)
+        cnt = np.asarray(stats.ent_count)
+        # pos heads 0,2; pos tails 1,3; neg heads 4,2; neg tails 1,5
+        assert cnt[0] == 1 and cnt[2] == 2 and cnt[1] == 2
+        assert cnt[3] == 1 and cnt[4] == 1 and cnt[5] == 1
+        assert np.asarray(stats.rel_count)[0] == 1
+        assert np.asarray(stats.rel_count)[1] == 1
+
+    def test_bgd_matches_manual_gradient(self):
+        cfg = make_cfg(normalize="none")
+        p = transe.init_params(jax.random.PRNGKey(0), cfg)
+        pos = jnp.array([[0, 0, 1]], jnp.int32)
+        neg = jnp.array([[0, 0, 2]], jnp.int32)
+        loss, grads = transe.batch_gradients(p, pos, neg, cfg)
+        p2 = transe.apply_gradients(p, grads, cfg.learning_rate)
+        manual = jax.tree.map(
+            lambda a, g: a - cfg.learning_rate * g, p, grads
+        )
+        np.testing.assert_allclose(p2["ent"], manual["ent"])
+
+
+class TestNegativeSampling:
+    def test_corruption_changes_exactly_one_side(self):
+        trip = jnp.tile(jnp.array([[3, 1, 7]], jnp.int32), (256, 1))
+        neg = negative.corrupt_unif(jax.random.PRNGKey(0), trip, 50)
+        neg = np.asarray(neg)
+        head_changed = neg[:, 0] != 3
+        tail_changed = neg[:, 2] != 7
+        assert np.all(head_changed ^ tail_changed)     # exactly one side
+        assert np.all(neg[:, 1] == 1)                  # relation untouched
+
+    def test_replacement_never_equals_original(self):
+        trip = jnp.tile(jnp.array([[3, 1, 7]], jnp.int32), (512, 1))
+        neg = np.asarray(negative.corrupt_unif(jax.random.PRNGKey(1), trip, 50))
+        assert not np.any((neg[:, 0] == 3) & (neg[:, 2] == 7))
+
+    def test_bern_stats(self):
+        trips = np.array([[0, 0, 1], [0, 0, 2], [0, 0, 3], [5, 1, 6]], np.int32)
+        probs = negative.bernoulli_stats(trips, 2)
+        # relation 0: 1 head, 3 tails -> tph=3, hpt=1 -> P(corrupt head)=0.75
+        assert probs[0] == pytest.approx(0.75)
+        assert probs[1] == pytest.approx(0.5)
+
+    def test_make_negatives_stacked_shapes(self):
+        pos = jnp.zeros((4, 3, 8, 3), jnp.int32)
+        neg = negative.make_negatives(jax.random.PRNGKey(0), pos, 50)
+        assert neg.shape == pos.shape
