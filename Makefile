@@ -1,0 +1,14 @@
+# Single source of truth for how the suite is invoked: `make test` here,
+# local runs, and future CI all use the tier-1 command from ROADMAP.md.
+PY ?= python
+
+.PHONY: test test-fast quickstart
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+test-fast:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
+
+quickstart:
+	PYTHONPATH=src $(PY) examples/quickstart.py

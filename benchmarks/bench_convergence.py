@@ -1,33 +1,33 @@
 """Paper §5 discussion: SGD-MapReduce vs BGD-MapReduce convergence (loss vs
-epoch at fixed W), plus the sync-period sensitivity of the cross-pod outer
-loop (H in {1, 4, 16} epochs of local work between Reduces — the knob that
-divides cross-pod traffic at 1000-node scale)."""
+epoch at fixed W) via the `repro.kg` facade — model-agnostic
+(``run(model="distmult")``), TransE by default.  Also the sync-period
+sensitivity of the cross-pod outer loop lives in core/local_sgd.py."""
 from __future__ import annotations
 
-from repro.core import mapreduce, transe
+from repro import kg as kg_api
 from repro.data import kg as kg_lib
 
 EPOCHS = 30
 W = 4
 
 
-def run(verbose: bool = True):
-    kg = kg_lib.synthetic_kg(2, n_entities=1000, n_relations=10,
-                             n_triplets=10000)
-    tcfg = transe.TransEConfig(
-        n_entities=kg.n_entities, n_relations=kg.n_relations, dim=32,
-        learning_rate=0.05)
+def run(verbose: bool = True, model: str = "transe"):
+    graph = kg_lib.synthetic_kg(2, n_entities=1000, n_relations=10,
+                                n_triplets=10000)
     rows = []
     for name, kw in [
         ("bgd", dict(paradigm="bgd")),
         ("sgd_avg_H1", dict(paradigm="sgd", strategy="average")),
         ("sgd_miniloss_H1", dict(paradigm="sgd", strategy="miniloss_perkey")),
     ]:
-        cfg = mapreduce.MapReduceConfig(n_workers=W, backend="vmap",
-                                        batch_size=256, **kw)
-        res = mapreduce.train(kg, tcfg, cfg, epochs=EPOCHS, seed=0)
+        paradigm = kw.pop("paradigm")
+        res = kg_api.fit(
+            graph, model=model, paradigm=paradigm,
+            n_workers=W, backend="vmap", batch_size=256,
+            dim=32, learning_rate=0.05, epochs=EPOCHS, seed=0, **kw)
         h = res.loss_history
-        row = {"setting": name,
+        row = {"model": model,
+               "setting": name,
                "loss_e1": round(h[0], 4),
                "loss_e10": round(h[9], 4),
                "loss_e30": round(h[-1], 4)}

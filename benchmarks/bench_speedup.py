@@ -1,4 +1,6 @@
-"""Paper Figure: training-speed scaling with the number of Map workers.
+"""Paper Figure: training-speed scaling with the number of Map workers,
+for any registered scoring model (configs built via `repro.kg.make_configs`;
+``run(model="transh")`` exercises the extra-table merge path).
 
 Two views (DESIGN.md §7 — this container has ONE physical core, so raw
 wall-clock cannot show real parallel speedup):
@@ -19,9 +21,12 @@ from __future__ import annotations
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mapreduce, negative, transe
+from repro import kg as kg_api
+from repro.core import mapreduce
+from repro.core.models import get_model
 from repro.data import kg as kg_lib
 from repro.roofline.analysis import V5E
 
@@ -30,29 +35,27 @@ DIM = 48
 
 
 def build():
-    kg = kg_lib.synthetic_kg(1, n_entities=1500, n_relations=12,
-                             n_triplets=15000)
-    tcfg = transe.TransEConfig(
-        n_entities=kg.n_entities, n_relations=kg.n_relations, dim=DIM,
-        learning_rate=0.05)
-    return kg, tcfg
+    return kg_lib.synthetic_kg(1, n_entities=1500, n_relations=12,
+                               n_triplets=15000)
 
 
-def measure_epoch_time(kg, tcfg, W, paradigm, strategy="average"):
-    cfg = mapreduce.MapReduceConfig(
-        n_workers=W, paradigm=paradigm, strategy=strategy, backend="vmap",
-        batch_size=256)
-    part = kg_lib.partition_balanced(0, kg.train, W)
-    epoch_fn = mapreduce.make_epoch_fn(cfg, tcfg)
-    import jax.numpy as jnp
+def measure_epoch_time(graph, W, paradigm, strategy="average",
+                       model="transe"):
+    kcfg, mcfg = kg_api.make_configs(
+        graph, model=model, paradigm=paradigm,
+        n_workers=W, strategy=strategy, backend="vmap", batch_size=256,
+        dim=DIM, learning_rate=0.05)
+    kgm = get_model(model)
+    part = kg_lib.partition_balanced(0, graph.train, W)
+    epoch_fn = mapreduce.make_epoch_fn(mcfg, kcfg, model=kgm)
 
     times = []
     key = jax.random.PRNGKey(0)
-    params = transe.init_params(key, tcfg)
+    params = kgm.init_params(key, kcfg)
     for epoch in range(EPOCHS + 1):
         pos = jnp.asarray(kg_lib.epoch_batches(0, epoch, part, 256))
         key, k_neg, k_m = jax.random.split(key, 3)
-        neg = negative.make_negatives(k_neg, pos, tcfg.n_entities)
+        neg = kgm.make_negatives(k_neg, pos, kcfg)
         t0 = time.time()
         params, loss = epoch_fn(params, pos, neg, k_m)
         jax.block_until_ready(loss)
@@ -61,31 +64,38 @@ def measure_epoch_time(kg, tcfg, W, paradigm, strategy="average"):
     return float(np.mean(times))
 
 
-def analytic_speedup(kg, tcfg, t1, W):
-    """T(W) = T1/W + T_reduce(W) on v5e: Reduce = psum of both tables
-    (2 full-table passes of the optimized Reduce) over ICI."""
-    table_bytes = (kg.n_entities + kg.n_relations) * DIM * 4
-    # optimized psum Reduce: 2 x O(N k) all-reduces (winner-select)
-    wire = 2 * table_bytes * 2.0 * (W - 1) / max(W, 1)
+def analytic_speedup(graph, t1, W, table_rows):
+    """T(W) = T1/W + T_reduce(W) on v5e: Reduce = one O(N k) all-reduce per
+    embedding table (the optimized winner-select psum) over ICI.
+    ``table_rows`` is each table's row count — entity-indexed tables carry
+    E rows, relation-indexed ones R (e.g. TransH adds an R-row normal
+    table, not another E+R)."""
+    wire_per_pass = sum(rows * DIM * 4 for rows in table_rows)
+    wire = wire_per_pass * 2.0 * (W - 1) / max(W, 1)
     t_reduce = wire / V5E["ici_bw"]
     return t1 / (t1 / W + t_reduce)
 
 
-def run(verbose: bool = True):
-    kg, tcfg = build()
+def run(verbose: bool = True, model: str = "transe"):
+    graph = build()
+    table_rows = [
+        graph.n_entities if role == "ent" else graph.n_relations
+        for role in get_model(model).param_roles().values()
+    ]
     rows = []
     t1 = {p: None for p in ("sgd", "bgd")}
     for paradigm in ("sgd", "bgd"):
         for W in (1, 2, 4, 8):
-            t = measure_epoch_time(kg, tcfg, W, paradigm)
+            t = measure_epoch_time(graph, W, paradigm, model=model)
             if W == 1:
                 t1[paradigm] = t
             row = {
+                "model": model,
                 "paradigm": paradigm,
                 "workers": W,
                 "epoch_s_1core_measured": round(t, 3),
                 "speedup_model_v5e": round(
-                    analytic_speedup(kg, tcfg, t1[paradigm], W), 2),
+                    analytic_speedup(graph, t1[paradigm], W, table_rows), 2),
             }
             rows.append(row)
             if verbose:

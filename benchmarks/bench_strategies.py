@@ -1,5 +1,7 @@
 """Paper Table: accuracy of the MapReduce Reduce strategies vs single-thread
-TransE (entity inference / relation prediction / triplet classification).
+training (entity inference / relation prediction / triplet classification),
+via the `repro.kg` facade — runs for any registered scoring model
+(``run(model="transh")``), TransE (the paper's) by default.
 
 The paper's success criterion (§Abstract, §4): parallel training should
 "retain the performance ... evaluated by the single-thread TransE".  We
@@ -18,7 +20,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import kg_eval, mapreduce, transe
+from repro import kg as kg_api
 from repro.data import kg as kg_lib
 
 EPOCHS = 60
@@ -27,17 +29,9 @@ WORKERS = 4
 BASE_LR = 0.05
 
 
-def build(lr: float = BASE_LR):
-    kg = kg_lib.synthetic_kg(0, n_entities=1500, n_relations=12,
-                             n_triplets=15000)
-    tcfg = transe.TransEConfig(
-        n_entities=kg.n_entities, n_relations=kg.n_relations, dim=DIM,
-        margin=1.0, norm="l1", learning_rate=lr)
-    return kg, tcfg
-
-
-def run(verbose: bool = True):
-    kg, _ = build()
+def run(verbose: bool = True, model: str = "transe"):
+    graph = kg_lib.synthetic_kg(0, n_entities=1500, n_relations=12,
+                                n_triplets=15000)
     rows = []
     settings = [("single-thread", dict(n_workers=1, paradigm="sgd",
                                        strategy="average"))]
@@ -50,16 +44,20 @@ def run(verbose: bool = True):
                               strategy=strat)))
 
     for name, kw in settings:
-        cfg = mapreduce.MapReduceConfig(backend="vmap", batch_size=256, **kw)
+        paradigm = kw.pop("paradigm")
         lr = BASE_LR * kw["n_workers"]           # linear-scaling rule
-        _, tcfg = build(lr)
         t0 = time.time()
-        res = mapreduce.train(kg, tcfg, cfg, epochs=EPOCHS, seed=0)
+        res = kg_api.fit(
+            graph, model=model, paradigm=paradigm,
+            backend="vmap", batch_size=256,
+            dim=DIM, margin=1.0, norm="l1", learning_rate=lr,
+            epochs=EPOCHS, seed=0, **kw)
         dt = time.time() - t0
-        metrics = kg_eval.evaluate_all(res.params, kg, norm=tcfg.norm)
+        metrics = kg_api.evaluate(res.params, model, graph)
         ef = metrics["entity_filtered"]
         rp = metrics["relation_prediction"]
         row = {
+            "model": model,
             "setting": name,
             "final_loss": round(res.loss_history[-1], 4),
             "ent_mean_rank_filt": round(ef["mean_rank"], 1),

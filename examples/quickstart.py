@@ -1,37 +1,45 @@
-"""Quickstart: single-thread TransE (paper §2) on a synthetic KG, then the
+"""Quickstart: the `repro.kg` facade — train any registered scoring model
+(TransE / TransH / DistMult) with the paper's MapReduce engine, then run the
 paper's full evaluation protocol.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--model transe]
 """
-import sys, os
+import argparse
+import os
+import sys
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import kg_eval, mapreduce, transe
+from repro import kg as kg_api
 from repro.data import kg as kg_lib
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="transe", choices=kg_api.models())
+    args = ap.parse_args()
+
     print("building synthetic planted-translation KG ...")
-    kg = kg_lib.synthetic_kg(0, n_entities=1000, n_relations=10,
-                             n_triplets=10000)
-    print(f"  entities={kg.n_entities} relations={kg.n_relations} "
-          f"train/valid/test={len(kg.train)}/{len(kg.valid)}/{len(kg.test)}")
+    graph = kg_lib.synthetic_kg(0, n_entities=1000, n_relations=10,
+                                n_triplets=10000)
+    print(f"  entities={graph.n_entities} relations={graph.n_relations} "
+          f"train/valid/test="
+          f"{len(graph.train)}/{len(graph.valid)}/{len(graph.test)}")
 
-    tcfg = transe.TransEConfig(
-        n_entities=kg.n_entities, n_relations=kg.n_relations,
-        dim=48, margin=1.0, norm="l1", learning_rate=0.05)
-    cfg = mapreduce.MapReduceConfig(n_workers=1, backend="vmap",
-                                    batch_size=256)
-
-    print("training single-thread TransE (Algorithm 1) ...")
-    res = mapreduce.train(
-        kg, tcfg, cfg, epochs=60, seed=0,
+    # n_workers=1 reproduces single-thread Algorithm 1 (the paper's baseline);
+    # bump n_workers / pick paradigm="bgd" for the parallel variants.
+    print(f"training single-thread {args.model} (Algorithm 1) ...")
+    res = kg_api.fit(
+        graph, model=args.model, paradigm="sgd",
+        n_workers=1, backend="vmap", batch_size=256,
+        dim=48, margin=1.0, norm="l1", learning_rate=0.05,
+        epochs=60, seed=0,
         callback=lambda e, l: (e + 1) % 10 == 0 and print(
             f"  epoch {e + 1}: loss={l:.4f}"))
 
     print("evaluating: entity inference / relation prediction / "
           "triplet classification ...")
-    m = kg_eval.evaluate_all(res.params, kg, norm=tcfg.norm)
+    m = kg_api.evaluate(res.params, args.model, graph)
     ef = m["entity_filtered"]
     print(f"  entity inference (filtered): mean_rank={ef['mean_rank']:.1f} "
           f"hits@10={ef['hits@10']:.3f}")

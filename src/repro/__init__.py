@@ -2,7 +2,9 @@
 reimplemented as a production-grade multi-pod JAX training/serving framework.
 
 Layers:
-  repro.core      the paper's technique (TransE + MapReduce SGD/BGD)
+  repro.kg        model-agnostic facade: kg.fit(graph, model=..., paradigm=...)
+  repro.core      the paper's technique (MapReduce SGD/BGD over a pluggable
+                  scoring-model registry: core.models)
   repro.data      KG triplet pipeline + LM token pipeline
   repro.models    the 10 assigned architectures (config-assembled)
   repro.configs   exact published configs

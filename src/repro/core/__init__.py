@@ -1,12 +1,15 @@
-"""The paper's primary contribution: TransE + its MapReduce parallelization
-(SGD Map with random/average/mini-loss Reduce strategies, and the BGD
-gradient-Reduce paradigm), plus the hierarchical cross-pod generalization
-(`local_sgd`) that makes the technique a first-class feature for every
-architecture in this framework."""
+"""The paper's primary contribution, generalized: a model-agnostic MapReduce
+KG-embedding engine (SGD Map with random/average/mini-loss Reduce strategies,
+and the BGD gradient-Reduce paradigm) over a pluggable scoring-model registry
+(`models`: transe / transh / distmult / yours), plus the hierarchical
+cross-pod generalization (`local_sgd`) that makes the technique a
+first-class feature for every architecture in this framework.  Most callers
+want the top-level `repro.kg` facade."""
 from repro.core import eval as kg_eval  # noqa: F401  (eval is a builtin name)
-from repro.core import local_sgd, mapreduce, merge, negative, transe  # noqa: F401
+from repro.core import local_sgd, mapreduce, merge, models, negative, transe  # noqa: F401
 
 __all__ = [
+    "models",
     "transe",
     "negative",
     "merge",

@@ -1,20 +1,28 @@
 """Evaluation protocol of the paper: entity inference, relation prediction,
-triplet classification.
+triplet classification — model-agnostic over the ``KGModel`` registry.
 
-This is the *reference* (pure-jnp batched) implementation.  The
+Every task scores candidates through the model's ``candidate_energies`` /
+``relation_energies`` / ``energy`` hooks (lower energy = truer), so TransE,
+TransH, DistMult and any future registered model share one protocol
+implementation.  ``model`` defaults to ``"transe"`` everywhere for
+backward compatibility.
+
+This is the *reference* (pure-jnp batched) implementation.  The TransE
 entity-inference hot loop also exists as a Pallas TPU kernel
 (``kernels/rank_topk.py``); tests cross-check the two.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import negative, transe
+from repro.core import negative
+from repro.core.models import KGModel, Params, get_model
 
 
 @dataclasses.dataclass
@@ -46,62 +54,46 @@ def _metrics_from_ranks(ranks: np.ndarray) -> RankMetrics:
     )
 
 
-@jax.jit
-def _tail_scores(ent: jax.Array, rel: jax.Array, h: jax.Array, r: jax.Array,
-                 norm_is_l1: bool) -> jax.Array:
-    """d(h, r, e) for all candidate tails e: (B, E)."""
-    q = ent[h] + rel[r]                                # (B, k)
-    diff = q[:, None, :] - ent[None, :, :]             # (B, E, k)
-    return jax.lax.cond(
-        norm_is_l1,
-        lambda d: jnp.sum(jnp.abs(d), axis=-1),
-        lambda d: jnp.sqrt(jnp.sum(d * d, axis=-1) + 1e-12),
-        diff,
-    )
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def _candidate_scores(
+    model: KGModel, params: Params, chunk: jax.Array, side: str, norm: str
+) -> jax.Array:
+    """d(candidate-substituted triplet) for all entities: (B, E).  Jitted per
+    (model, side, norm); model instances are registry singletons so the cache
+    stays small."""
+    return model.candidate_energies(params, chunk, side, norm)
 
 
-@jax.jit
-def _head_scores(ent: jax.Array, rel: jax.Array, r: jax.Array, t: jax.Array,
-                 norm_is_l1: bool) -> jax.Array:
-    """d(e, r, t) for all candidate heads e: (B, E)."""
-    q = ent[t] - rel[r]                                # t - r
-    diff = ent[None, :, :] - q[:, None, :]
-    return jax.lax.cond(
-        norm_is_l1,
-        lambda d: jnp.sum(jnp.abs(d), axis=-1),
-        lambda d: jnp.sqrt(jnp.sum(d * d, axis=-1) + 1e-12),
-        diff,
-    )
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def _relation_scores(
+    model: KGModel, params: Params, chunk: jax.Array, norm: str
+) -> jax.Array:
+    return model.relation_energies(params, chunk, norm)
 
 
 def entity_inference(
-    params: transe.Params,
+    params: Params,
     test: np.ndarray,
     norm: str = "l1",
     known: Optional[set] = None,
     batch: int = 128,
+    model: "str | KGModel" = "transe",
 ) -> Dict[str, RankMetrics]:
     """Link prediction: for every test triplet, rank the gold tail among all
     entities substituted as tail, and the gold head likewise.  Returns raw
     and (if ``known`` given) filtered metrics, averaged over both sides —
     the paper's 'entity inference' task."""
-    ent = params["ent"]
-    rel = params["rel"]
-    l1 = norm == "l1"
+    model = get_model(model)
     raw_ranks, filt_ranks = [], []
 
     for i in range(0, len(test), batch):
         chunk = test[i : i + batch]
-        h = jnp.asarray(chunk[:, 0])
-        r = jnp.asarray(chunk[:, 1])
-        t = jnp.asarray(chunk[:, 2])
+        jchunk = jnp.asarray(chunk)
         for side in ("tail", "head"):
-            if side == "tail":
-                scores = np.asarray(_tail_scores(ent, rel, h, r, l1))
-                gold = chunk[:, 2]
-            else:
-                scores = np.asarray(_head_scores(ent, rel, r, t, l1))
-                gold = chunk[:, 0]
+            scores = np.asarray(
+                _candidate_scores(model, params, jchunk, side, norm)
+            )
+            gold = chunk[:, 2] if side == "tail" else chunk[:, 0]
             gold_scores = scores[np.arange(len(chunk)), gold]
             raw = 1 + (scores < gold_scores[:, None]).sum(axis=1)
             raw_ranks.append(raw)
@@ -154,41 +146,40 @@ def _known_heads(known: set, r: int, t: int) -> list:
 
 
 def relation_prediction(
-    params: transe.Params,
+    params: Params,
     test: np.ndarray,
     norm: str = "l1",
     batch: int = 512,
+    model: "str | KGModel" = "transe",
 ) -> RankMetrics:
     """Rank the gold relation among all relations for each test (h, ?, t)."""
-    ent = params["ent"]
-    rel = np.asarray(params["rel"])
+    model = get_model(model)
     ranks = []
     for i in range(0, len(test), batch):
         chunk = test[i : i + batch]
-        h = np.asarray(ent)[chunk[:, 0]]
-        t = np.asarray(ent)[chunk[:, 2]]
-        diff = (h - t)[:, None, :] + rel[None, :, :]           # (B, R, k)
-        if norm == "l1":
-            scores = np.abs(diff).sum(-1)
-        else:
-            scores = np.sqrt((diff * diff).sum(-1) + 1e-12)
+        scores = np.asarray(
+            _relation_scores(model, params, jnp.asarray(chunk), norm)
+        )
         gold = scores[np.arange(len(chunk)), chunk[:, 1]]
         ranks.append(1 + (scores < gold[:, None]).sum(axis=1))
     return _metrics_from_ranks(np.concatenate(ranks))
 
 
 def triplet_classification(
-    params: transe.Params,
+    params: Params,
     valid: np.ndarray,
     test: np.ndarray,
     n_entities: int,
     norm: str = "l1",
     seed: int = 0,
+    model: "str | KGModel" = "transe",
 ) -> float:
     """Is <h,r,t> true?  Learn a per-relation energy threshold on valid
     (pos + corrupted neg), report accuracy on test (pos + corrupted neg) —
     the paper's 'triplet classification' task (protocol of Socher et al. /
-    Wang et al. 2014)."""
+    Wang et al. 2014).  Thresholds work for any real-valued energy, so
+    similarity models (negative energies) need no special casing."""
+    model = get_model(model)
     key = jax.random.PRNGKey(seed)
     k_v, k_t = jax.random.split(key)
     valid_neg = np.asarray(
@@ -199,7 +190,7 @@ def triplet_classification(
     )
 
     def scores(tr):
-        return np.asarray(transe.energy(params, jnp.asarray(tr), norm))
+        return np.asarray(model.energy(params, jnp.asarray(tr), norm))
 
     sv_pos, sv_neg = scores(valid), scores(valid_neg)
     st_pos, st_neg = scores(test), scores(test_neg)
@@ -242,16 +233,20 @@ def _best_threshold(scores: np.ndarray, labels: np.ndarray) -> float:
 
 
 def evaluate_all(
-    params: transe.Params,
+    params: Params,
     kg,
     norm: str = "l1",
     filtered: bool = True,
+    model: "str | KGModel" = "transe",
 ) -> Dict[str, object]:
-    """All three paper tasks in one call (used by benchmarks/examples)."""
+    """All three paper tasks in one call (used by ``repro.kg.evaluate``)."""
+    model = get_model(model)
     known = kg.known_set() if filtered else None
-    ent = entity_inference(params, kg.test, norm, known)
-    rp = relation_prediction(params, kg.test, norm)
-    tc = triplet_classification(params, kg.valid, kg.test, kg.n_entities, norm)
+    ent = entity_inference(params, kg.test, norm, known, model=model)
+    rp = relation_prediction(params, kg.test, norm, model=model)
+    tc = triplet_classification(
+        params, kg.valid, kg.test, kg.n_entities, norm, model=model
+    )
     out = {
         "entity_raw": ent["raw"].row(),
         "relation_prediction": rp.row(),

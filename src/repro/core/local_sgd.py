@@ -143,12 +143,16 @@ def outer_merge(
 
     if cfg.strategy in ("random", "miniloss_global"):
         idx = jax.lax.axis_index(ax).astype(jnp.float32)
-        W = jax.lax.axis_size(ax)
+        # jax.lax.axis_size is missing on older jax; psum(1) is the same size
+        W = (jax.lax.axis_size(ax) if hasattr(jax.lax, "axis_size")
+             else jax.lax.psum(1, ax))
         if cfg.strategy == "random":
             if key is None:
                 raise ValueError("'random' outer strategy needs a key")
-            pri = jax.random.uniform(key, ())  # same on all pods
-            pri = jax.random.uniform(jax.random.fold_in(key, jax.lax.axis_index(ax)), ())
+            # shared key + per-pod fold_in: distinct priorities, same winner
+            # computed on every pod
+            pri = jax.random.uniform(
+                jax.random.fold_in(key, jax.lax.axis_index(ax)), ())
         else:
             pri = -local_loss
         pri = jnp.where(live > 0, pri, -jnp.inf)

@@ -1,10 +1,21 @@
-"""The MapReduce TransE engine (paper §3).
+"""The model-agnostic MapReduce KG-embedding engine (paper §3).
+
+The paper parallelizes TransE; this engine parallelizes any registered
+``KGModel`` (``repro.core.models``: transe / transh / distmult / yours) —
+the Map/Reduce machinery never looks inside the scoring function.  Most
+callers should use the top-level facade instead of this module:
+
+    from repro import kg
+    result = kg.fit(my_kg, model="distmult", paradigm="bgd", epochs=50)
 
 Two paradigms, exactly as the paper structures them:
 
   * **SGD-based** (§3.1): Map = each worker runs a full local-SGD epoch on its
     balanced subset with a private copy of the embeddings; Reduce = merge the
-    W inconsistent copies per key (``core/merge.py`` strategies).
+    W inconsistent copies per key (``core/merge.py`` strategies).  The merges
+    are applied per embedding table, routed by the model's ``param_roles()``
+    (entity- vs relation-indexed touch stats) — extra tables like TransH's
+    hyperplane normals ride through with zero engine changes.
   * **BGD-based** (§3.2): Map = each worker computes the *gradient* of its
     subset batch; Reduce = sum gradients; one global update.  Conflict-free
     by construction — this is synchronous data-parallel training.
@@ -20,7 +31,7 @@ Two execution backends with identical math:
                     ``psum`` winner-select Reduce (see merge.py).
 
 The module-level ``train()`` drives epochs host-side (partitioning, negative
-sampling keys, loss history) and is what examples/ and benchmarks/ call.
+sampling keys, loss history) and is what ``repro.kg.fit`` calls.
 """
 from __future__ import annotations
 
@@ -30,14 +41,14 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import merge as merge_lib
-from repro.core import negative, transe
+from repro.core import negative
+from repro.core import models as kg_models
+from repro.core.models.base import EpochStats, KGConfig, KGModel, Params, apply_gradients
 from repro.data import kg as kg_lib
-
-Params = transe.Params
+from repro.parallel.util import shard_map as _shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +61,7 @@ class MapReduceConfig:
     batch_size: int = 256
     partition: str = "balanced"     # 'balanced' | 'stratified'
     axis_name: str = "workers"
+    model: str = "transe"           # kg_models registry name
 
     def __post_init__(self):
         if self.paradigm not in ("sgd", "bgd"):
@@ -58,25 +70,40 @@ class MapReduceConfig:
             raise ValueError(f"bad strategy {self.strategy!r}")
         if self.backend not in ("vmap", "shard_map"):
             raise ValueError(f"bad backend {self.backend!r}")
+        kg_models.get_model(self.model)      # raises on unknown name
+
+
+def _resolve(cfg: MapReduceConfig, model: Optional[KGModel]) -> KGModel:
+    return kg_models.get_model(model if model is not None else cfg.model)
 
 
 # ---------------------------------------------------------------------------
 # SGD paradigm
 # ---------------------------------------------------------------------------
 
+def _stats_for_role(stats: EpochStats, role: str):
+    if role == "ent":
+        return stats.ent_count, stats.ent_loss
+    return stats.rel_count, stats.rel_loss
+
+
 def _merge_tables_stacked(
-    strategy: str, stacked: Params, stats, merge_key: jax.Array
+    model: KGModel, strategy: str, stacked: Params, stats, merge_key: jax.Array
 ) -> Params:
-    k_ent, k_rel = jax.random.split(merge_key)
-    ent = merge_lib.merge_stacked(
-        strategy, stacked["ent"], stats.ent_count, stats.ent_loss,
-        stats.mean_loss, k_ent,
-    )
-    rel = merge_lib.merge_stacked(
-        strategy, stacked["rel"], stats.rel_count, stats.rel_loss,
-        stats.mean_loss, k_rel,
-    )
-    return {"ent": ent, "rel": rel}
+    """Reduce every table of the stacked (leading worker axis) params dict,
+    routed by the model's entity/relation roles.  Tables are merged in sorted
+    name order with per-table fold-out keys ('ent' then 'rel' for TransE —
+    the pre-refactor key-split order, kept bit-for-bit)."""
+    roles = model.param_roles()
+    names = sorted(stacked.keys())
+    keys = jax.random.split(merge_key, len(names))
+    out = {}
+    for name, key in zip(names, keys):
+        count, loss = _stats_for_role(stats, roles[name])
+        out[name] = merge_lib.merge_stacked(
+            strategy, stacked[name], count, loss, stats.mean_loss, key
+        )
+    return out
 
 
 def sgd_epoch_vmap(
@@ -84,13 +111,15 @@ def sgd_epoch_vmap(
     pos: jax.Array,              # (W, S, B, 3)
     neg: jax.Array,              # (W, S, B, 3)
     cfg: MapReduceConfig,
-    tcfg: transe.TransEConfig,
+    tcfg: KGConfig,
     merge_key: jax.Array,
+    model: Optional[KGModel] = None,
 ) -> tuple[Params, jax.Array]:
     """Map (vmapped local epochs from shared params) + Reduce (stacked)."""
-    run = functools.partial(transe.run_epoch, cfg=tcfg)
+    model = _resolve(cfg, model)
+    run = functools.partial(model.run_epoch, cfg=tcfg)
     stacked, stats = jax.vmap(run, in_axes=(None, 0, 0))(params, pos, neg)
-    merged = _merge_tables_stacked(cfg.strategy, stacked, stats, merge_key)
+    merged = _merge_tables_stacked(model, cfg.strategy, stacked, stats, merge_key)
     return merged, jnp.mean(stats.mean_loss)
 
 
@@ -99,30 +128,35 @@ def sgd_epoch_shard(
     pos: jax.Array,              # (W, S, B, 3), sharded on axis 0
     neg: jax.Array,
     cfg: MapReduceConfig,
-    tcfg: transe.TransEConfig,
+    tcfg: KGConfig,
     merge_key: jax.Array,
     mesh: Mesh,
+    model: Optional[KGModel] = None,
 ) -> tuple[Params, jax.Array]:
     """Map/Reduce over a real mesh axis via shard_map."""
+    model = _resolve(cfg, model)
     ax = cfg.axis_name
+    roles = model.param_roles()
 
     def worker(params, pos_w, neg_w):
         # pos_w: (1, S, B, 3) — this shard's subset
-        local, stats = transe.run_epoch(params, pos_w[0], neg_w[0], tcfg)
-        k_ent, k_rel = jax.random.split(merge_key)
+        local, stats = model.run_epoch(params, pos_w[0], neg_w[0], tcfg)
+        names = sorted(local.keys())
+        keys = jax.random.split(merge_key, len(names))
         mfn = (
             merge_lib.merge_collective
             if cfg.reduce_impl == "psum"
             else merge_lib.merge_allgather
         )
-        ent = mfn(cfg.strategy, local["ent"], stats.ent_count, stats.ent_loss,
-                  stats.mean_loss, ax, k_ent)
-        rel = mfn(cfg.strategy, local["rel"], stats.rel_count, stats.rel_loss,
-                  stats.mean_loss, ax, k_rel)
+        out = {}
+        for name, key in zip(names, keys):
+            count, loss = _stats_for_role(stats, roles[name])
+            out[name] = mfn(cfg.strategy, local[name], count, loss,
+                            stats.mean_loss, ax, key)
         loss = jax.lax.pmean(stats.mean_loss, ax)
-        return {"ent": ent, "rel": rel}, loss
+        return out, loss
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         worker,
         mesh=mesh,
         in_specs=(P(), P(ax), P(ax)),
@@ -141,13 +175,15 @@ def bgd_epoch_vmap(
     pos: jax.Array,              # (W, S, B, 3)
     neg: jax.Array,
     cfg: MapReduceConfig,
-    tcfg: transe.TransEConfig,
+    tcfg: KGConfig,
+    model: Optional[KGModel] = None,
 ) -> tuple[Params, jax.Array]:
     """Per step: Map = per-worker gradients, Reduce = mean, global update.
     Mathematically identical to single-thread minibatch SGD on the W·B-sized
-    union batch (tested in tests/test_mapreduce.py)."""
+    union batch (tested in tests/test_kg_api.py for every model)."""
+    model = _resolve(cfg, model)
     if tcfg.normalize == "epoch":
-        params = transe.normalize_entities(params)
+        params = model.normalize(params)
 
     pos_s = jnp.swapaxes(pos, 0, 1)   # (S, W, B, 3)
     neg_s = jnp.swapaxes(neg, 0, 1)
@@ -156,12 +192,12 @@ def bgd_epoch_vmap(
         params, loss_sum = carry
         pos_b, neg_b = batch          # (W, B, 3)
         losses, grads = jax.vmap(
-            lambda p, n: transe.batch_gradients(params, p, n, tcfg)
+            lambda p, n: model.batch_gradients(params, p, n, tcfg)
         )(pos_b, neg_b)
         grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
-        params = transe.apply_gradients(params, grads, tcfg.learning_rate)
+        params = apply_gradients(params, grads, tcfg.learning_rate)
         if tcfg.normalize == "step":
-            params = transe.normalize_entities(params)
+            params = model.normalize(params)
         return (params, loss_sum + jnp.mean(losses)), None
 
     (params, loss_sum), _ = jax.lax.scan(
@@ -175,23 +211,25 @@ def bgd_epoch_shard(
     pos: jax.Array,
     neg: jax.Array,
     cfg: MapReduceConfig,
-    tcfg: transe.TransEConfig,
+    tcfg: KGConfig,
     mesh: Mesh,
+    model: Optional[KGModel] = None,
 ) -> tuple[Params, jax.Array]:
+    model = _resolve(cfg, model)
     ax = cfg.axis_name
 
     def worker(params, pos_w, neg_w):
         if tcfg.normalize == "epoch":
-            params = transe.normalize_entities(params)
+            params = model.normalize(params)
 
         def step(carry, batch):
             params, loss_sum = carry
             pos_b, neg_b = batch
-            loss, grads = transe.batch_gradients(params, pos_b, neg_b, tcfg)
+            loss, grads = model.batch_gradients(params, pos_b, neg_b, tcfg)
             grads = jax.lax.pmean(grads, ax)          # the BGD Reduce
-            params = transe.apply_gradients(params, grads, tcfg.learning_rate)
+            params = apply_gradients(params, grads, tcfg.learning_rate)
             if tcfg.normalize == "step":
-                params = transe.normalize_entities(params)
+                params = model.normalize(params)
             return (params, loss_sum + jax.lax.pmean(loss, ax)), None
 
         (params, loss_sum), _ = jax.lax.scan(
@@ -199,7 +237,7 @@ def bgd_epoch_shard(
         )
         return params, loss_sum / pos_w.shape[1]
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         worker, mesh=mesh,
         in_specs=(P(), P(ax), P(ax)), out_specs=(P(), P()),
         check_vma=False,
@@ -212,21 +250,29 @@ def bgd_epoch_shard(
 # ---------------------------------------------------------------------------
 
 def make_epoch_fn(
-    cfg: MapReduceConfig, tcfg: transe.TransEConfig, mesh: Optional[Mesh] = None
+    cfg: MapReduceConfig,
+    tcfg: KGConfig,
+    mesh: Optional[Mesh] = None,
+    model: Optional[KGModel] = None,
 ) -> Callable:
     """Returns jitted ``epoch_fn(params, pos, neg, merge_key) -> (params, loss)``."""
+    model = _resolve(cfg, model)
     if cfg.backend == "shard_map":
         if mesh is None:
             raise ValueError("shard_map backend needs a mesh")
         if cfg.paradigm == "sgd":
-            fn = lambda p, pos, neg, k: sgd_epoch_shard(p, pos, neg, cfg, tcfg, k, mesh)
+            fn = lambda p, pos, neg, k: sgd_epoch_shard(
+                p, pos, neg, cfg, tcfg, k, mesh, model)
         else:
-            fn = lambda p, pos, neg, k: bgd_epoch_shard(p, pos, neg, cfg, tcfg, mesh)
+            fn = lambda p, pos, neg, k: bgd_epoch_shard(
+                p, pos, neg, cfg, tcfg, mesh, model)
     else:
         if cfg.paradigm == "sgd":
-            fn = lambda p, pos, neg, k: sgd_epoch_vmap(p, pos, neg, cfg, tcfg, k)
+            fn = lambda p, pos, neg, k: sgd_epoch_vmap(
+                p, pos, neg, cfg, tcfg, k, model)
         else:
-            fn = lambda p, pos, neg, k: bgd_epoch_vmap(p, pos, neg, cfg, tcfg)
+            fn = lambda p, pos, neg, k: bgd_epoch_vmap(
+                p, pos, neg, cfg, tcfg, model)
     return jax.jit(fn)
 
 
@@ -235,11 +281,12 @@ class TrainResult:
     params: Params
     loss_history: list
     epochs_run: int
+    model: str = "transe"
 
 
 def train(
     kg: kg_lib.KG,
-    tcfg: transe.TransEConfig,
+    tcfg: KGConfig,
     cfg: MapReduceConfig,
     *,
     epochs: int = 50,
@@ -247,25 +294,44 @@ def train(
     mesh: Optional[Mesh] = None,
     params: Optional[Params] = None,
     callback: Optional[Callable[[int, float], None]] = None,
+    model: Optional[KGModel] = None,
 ) -> TrainResult:
     """Host-side epoch driver: balanced partitioning, deterministic batches,
     negative sampling, Map/Reduce epoch, loss history.
 
     ``cfg.n_workers == 1`` with any backend reproduces single-thread
-    Algorithm 1 (the paper's baseline)."""
+    Algorithm 1 (the paper's baseline) for the chosen model."""
+    model = _resolve(cfg, model)
     part_fn = (
         kg_lib.partition_stratified
         if cfg.partition == "stratified"
         else kg_lib.partition_balanced
     )
     partitioned = part_fn(seed, kg.train, cfg.n_workers)
+    if partitioned.shape[1] < cfg.batch_size:
+        raise ValueError(
+            f"batch_size={cfg.batch_size} exceeds the "
+            f"{partitioned.shape[1]} triplets each of the {cfg.n_workers} "
+            "workers holds — zero steps per epoch; shrink batch_size or "
+            "n_workers")
+
+    head_prob = None
+    if tcfg.sampling == "bern":
+        head_prob = jnp.asarray(
+            negative.bernoulli_stats(kg.train, kg.n_relations)
+        )
 
     key = jax.random.PRNGKey(seed)
     if params is None:
         key, k_init = jax.random.split(key)
-        params = transe.init_params(k_init, tcfg)
+        params = model.init_params(k_init, tcfg)
+    elif set(params) != set(model.param_roles()):
+        raise ValueError(
+            f"resume params have tables {sorted(params)} but model "
+            f"{model.name!r} expects {sorted(model.param_roles())} — "
+            "params from a different model?")
 
-    epoch_fn = make_epoch_fn(cfg, tcfg, mesh)
+    epoch_fn = make_epoch_fn(cfg, tcfg, mesh, model)
 
     if cfg.backend == "shard_map":
         assert mesh is not None
@@ -278,7 +344,7 @@ def train(
         pos = kg_lib.epoch_batches(seed, epoch, partitioned, cfg.batch_size)
         key, k_neg, k_merge = jax.random.split(key, 3)
         pos = jnp.asarray(pos)
-        neg = negative.make_negatives(k_neg, pos, tcfg.n_entities, tcfg.sampling)
+        neg = model.make_negatives(k_neg, pos, tcfg, head_prob)
         if cfg.backend == "shard_map":
             pos = jax.device_put(pos, shard)
             neg = jax.device_put(neg, shard)
@@ -287,4 +353,7 @@ def train(
         history.append(loss)
         if callback is not None:
             callback(epoch, loss)
-    return TrainResult(params=params, loss_history=history, epochs_run=epochs)
+    return TrainResult(
+        params=params, loss_history=history, epochs_run=epochs,
+        model=model.name,
+    )

@@ -1,0 +1,331 @@
+"""The model-agnostic KG embedding interface the MapReduce engine trains.
+
+The paper parallelizes one scoring function (TransE), but its Map/Reduce
+machinery — balanced partitioning, local-SGD epochs, conflict-resolving
+merges, BGD gradient reduction — never looks inside the score.  ``KGModel``
+is the seam: a scoring model provides
+
+  * ``init_params``      — its embedding tables (a dict of ``(N, k)`` arrays),
+  * ``energy``           — d(h, r, t) for a batch of triplets (lower = truer),
+  * ``normalize``        — the per-epoch/step constraint projection,
+  * ``param_roles``      — which stats table ('ent' | 'rel') covers each
+                           param table, the touched-key bookkeeping the
+                           Reduce-phase merges need,
+  * ``candidate_energies`` / ``relation_energies`` — batched eval scoring
+                           (generic fallbacks provided; models override with
+                           closed forms),
+  * ``make_negatives``   — corrupted-triplet construction (Eq. 2 by default).
+
+Everything else — margin ranking loss, SGD steps, local-SGD epochs with
+per-key touch stats, BGD gradients — is shared engine math implemented once
+here, so a new scoring model is a ~100-line subclass (see transh.py /
+distmult.py), not a fork of the engine.
+
+Params are a plain dict ``{table_name: (N, k) array}``; triplets are int32
+``(..., 3)`` arrays of ``(h, r, t)`` ids.  All methods are pure and
+jit/vmap/shard_map friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import negative
+
+Params = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class KGConfig:
+    """Hyper-parameters shared by every registered scoring model
+    (single-thread training is paper Algorithm 1 with the model's energy)."""
+
+    n_entities: int
+    n_relations: int
+    dim: int = 50
+    margin: float = 1.0
+    norm: str = "l1"            # 'l1' | 'l2'  (Eq. 1 allows either)
+    learning_rate: float = 0.01
+    # 'epoch' applies the model's constraint projection at the start of each
+    # epoch (TransE); 'step' after every SGD step; 'none' disables.
+    normalize: str = "epoch"
+    # negative sampling: 'unif' (paper / TransE) or 'bern' (TransH-style)
+    sampling: str = "unif"
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if self.norm not in ("l1", "l2"):
+            raise ValueError(f"norm must be 'l1' or 'l2', got {self.norm!r}")
+        if self.normalize not in ("epoch", "step", "none"):
+            raise ValueError(f"bad normalize: {self.normalize!r}")
+
+
+def dissimilarity(x: jax.Array, norm: str) -> jax.Array:
+    if norm == "l1":
+        return jnp.sum(jnp.abs(x), axis=-1)
+    return jnp.sqrt(jnp.sum(x * x, axis=-1) + 1e-12)
+
+
+def unit_rows(x: jax.Array) -> jax.Array:
+    """Row-wise L2 normalization (the constraint projection primitive)."""
+    return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-12)
+
+
+def uniform_table(key: jax.Array, n: int, dim: int, dtype) -> jax.Array:
+    """Uniform(-6/sqrt(k), 6/sqrt(k)) init (TransE Algorithm 1, lines 1-4)."""
+    bound = 6.0 / jnp.sqrt(float(dim))
+    return jax.random.uniform(key, (n, dim), dtype, -bound, bound)
+
+
+def pairwise_hinge(
+    d_pos: jax.Array, d_neg: jax.Array, margin: float
+) -> jax.Array:
+    """[gamma + d(pos) - d(neg)]_+  (Eq. 3 summand)."""
+    return jnp.maximum(0.0, margin + d_pos - d_neg)
+
+
+def apply_gradients(params: Params, grads: Params, lr: float) -> Params:
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EpochStats:
+    """Bookkeeping one Map worker emits for the Reduce phase."""
+
+    mean_loss: jax.Array        # scalar, mean pair loss over the epoch
+    ent_count: jax.Array        # (E,) how many updates touched each entity
+    ent_loss: jax.Array         # (E,) summed pair loss attributed to entity
+    rel_count: jax.Array        # (R,)
+    rel_loss: jax.Array         # (R,)
+
+
+def _accumulate_touch(
+    stats: tuple, pos: jax.Array, neg: jax.Array, pair_loss: jax.Array, E: int, R: int
+) -> tuple:
+    ent_count, ent_loss, rel_count, rel_loss = stats
+    # keys touched by the update: h, t of pos AND the corrupted entity of neg.
+    heads = jnp.concatenate([pos[:, 0], neg[:, 0]])
+    tails = jnp.concatenate([pos[:, 2], neg[:, 2]])
+    l2 = jnp.concatenate([pair_loss, pair_loss])
+    ent_count = ent_count.at[heads].add(1.0).at[tails].add(1.0)
+    ent_loss = ent_loss.at[heads].add(l2).at[tails].add(l2)
+    rel_count = rel_count.at[pos[:, 1]].add(1.0)
+    rel_loss = rel_loss.at[pos[:, 1]].add(pair_loss)
+    return ent_count, ent_loss, rel_count, rel_loss
+
+
+class KGModel:
+    """Base class: subclass, fill in the model-specific pieces, register."""
+
+    name: str = "base"
+    # table name -> which touch-stats table governs its merge ('ent' | 'rel')
+    roles: Dict[str, str] = {"ent": "ent", "rel": "rel"}
+    # True iff kernels/ops.py has a fused Pallas scoring path for this model
+    supports_fused_kernel: bool = False
+
+    # -- model-specific interface ------------------------------------------
+
+    def init_params(self, key: jax.Array, cfg: KGConfig) -> Params:
+        raise NotImplementedError
+
+    def energy(
+        self, params: Params, triplets: jax.Array, norm: str = "l1"
+    ) -> jax.Array:
+        """d(h, r, t) for a batch of triplets ``(..., 3)`` -> ``(...,)``.
+        Lower = more plausible (similarity models negate their score)."""
+        raise NotImplementedError
+
+    def normalize(self, params: Params) -> Params:
+        """Constraint projection (default: unit-L2 entity rows)."""
+        out = dict(params)
+        out["ent"] = unit_rows(params["ent"])
+        return out
+
+    def param_roles(self) -> Dict[str, str]:
+        return dict(self.roles)
+
+    # -- eval scoring (generic fallbacks; override with closed forms) ------
+
+    def candidate_energies(
+        self, params: Params, triplets: jax.Array, side: str, norm: str = "l1"
+    ) -> jax.Array:
+        """Energies of every entity substituted as ``side`` ('tail'|'head')
+        of each triplet: ``(B, 3) -> (B, E)``.  Generic fallback substitutes
+        one entity at a time (vmapped); fine for tests, models override."""
+        if side not in ("tail", "head"):
+            raise ValueError(f"bad side {side!r}")
+        col = 2 if side == "tail" else 0
+        E = params["ent"].shape[0]
+
+        def one(e):
+            return self.energy(params, triplets.at[:, col].set(e), norm)
+
+        return jax.vmap(one)(jnp.arange(E)).T
+
+    def relation_energies(
+        self, params: Params, triplets: jax.Array, norm: str = "l1"
+    ) -> jax.Array:
+        """Energies of every relation substituted into each triplet:
+        ``(B, 3) -> (B, R)``."""
+        R = params["rel"].shape[0]
+
+        def one(r):
+            return self.energy(params, triplets.at[:, 1].set(r), norm)
+
+        return jax.vmap(one)(jnp.arange(R)).T
+
+    # -- fused-kernel hooks (kernels/ops.py dispatch) ------------------------
+
+    def fused_margin_loss(
+        self,
+        params: Params,
+        pos: jax.Array,
+        neg: jax.Array,
+        *,
+        margin: float,
+        norm: str,
+        interpret: bool | None = None,
+    ) -> jax.Array:
+        """Pallas-fused margin loss.  A model declaring
+        ``supports_fused_kernel = True`` MUST override this (and
+        ``fused_rank_counts``) with its own kernel — the dispatch in
+        kernels/ops.py calls it blindly."""
+        raise NotImplementedError(
+            f"{self.name!r} sets supports_fused_kernel but does not "
+            "implement fused_margin_loss")
+
+    def fused_rank_counts(
+        self,
+        params: Params,
+        triplets: jax.Array,
+        side: str,
+        *,
+        norm: str,
+        interpret: bool | None = None,
+    ) -> jax.Array:
+        """Pallas-fused entity-inference rank counts (see fused_margin_loss)."""
+        raise NotImplementedError(
+            f"{self.name!r} sets supports_fused_kernel but does not "
+            "implement fused_rank_counts")
+
+    # -- negative sampling --------------------------------------------------
+
+    def make_negatives(
+        self,
+        key: jax.Array,
+        pos_batches: jax.Array,
+        cfg: KGConfig,
+        head_prob_per_rel: jax.Array | None = None,
+    ) -> jax.Array:
+        """Corrupted counterparts of ``pos_batches`` (Eq. 2).  Models with a
+        bespoke corruption scheme override this."""
+        return negative.make_negatives(
+            key, pos_batches, cfg.n_entities, cfg.sampling, head_prob_per_rel
+        )
+
+    # -- shared engine math (identical for every model) ---------------------
+
+    def margin_loss(
+        self,
+        params: Params,
+        pos: jax.Array,
+        neg: jax.Array,
+        *,
+        margin: float,
+        norm: str,
+    ) -> jax.Array:
+        """Mean margin ranking loss over a batch of (pos, neg) triplet pairs.
+
+        The paper sums over the training set; we use the mean so the learning
+        rate is batch-size independent (equivalent up to lr rescaling)."""
+        d_pos = self.energy(params, pos, norm)
+        d_neg = self.energy(params, neg, norm)
+        return jnp.mean(pairwise_hinge(d_pos, d_neg, margin))
+
+    def per_pair_loss(
+        self,
+        params: Params,
+        pos: jax.Array,
+        neg: jax.Array,
+        *,
+        margin: float,
+        norm: str,
+    ) -> jax.Array:
+        """Hinge per (pos, neg) pair — per-key loss bookkeeping for the
+        mini-loss Reduce strategy."""
+        return pairwise_hinge(
+            self.energy(params, pos, norm), self.energy(params, neg, norm), margin
+        )
+
+    def sgd_step(
+        self, params: Params, pos: jax.Array, neg: jax.Array, cfg: KGConfig
+    ) -> tuple[Params, jax.Array]:
+        """One (mini-batch) SGD step of Algorithm 1's inner loop."""
+        loss, grads = jax.value_and_grad(self.margin_loss)(
+            params, pos, neg, margin=cfg.margin, norm=cfg.norm
+        )
+        params = jax.tree.map(
+            lambda p, g: p - cfg.learning_rate * g, params, grads
+        )
+        if cfg.normalize == "step":
+            params = self.normalize(params)
+        return params, loss
+
+    def run_epoch(
+        self,
+        params: Params,
+        pos_batches: jax.Array,     # (S, B, 3) minibatches of training triplets
+        neg_batches: jax.Array,     # (S, B, 3) corrupted counterparts
+        cfg: KGConfig,
+    ) -> tuple[Params, EpochStats]:
+        """One epoch of Algorithm 1 on one worker: constraint projection, then
+        scan SGD over the worker's minibatches, tracking the per-key stats
+        Reduce needs.  Pure; used by the vmap backend (vmapped over workers)
+        and inside shard_map (per shard)."""
+        if cfg.normalize == "epoch":
+            params = self.normalize(params)
+        E, R = cfg.n_entities, cfg.n_relations
+        zeros = (
+            jnp.zeros((E,), cfg.dtype),
+            jnp.zeros((E,), cfg.dtype),
+            jnp.zeros((R,), cfg.dtype),
+            jnp.zeros((R,), cfg.dtype),
+        )
+
+        def body(carry, batch):
+            params, stats, loss_sum = carry
+            pos, neg = batch
+            pair = self.per_pair_loss(
+                params, pos, neg, margin=cfg.margin, norm=cfg.norm
+            )
+            params, loss = self.sgd_step(params, pos, neg, cfg)
+            stats = _accumulate_touch(stats, pos, neg, pair, E, R)
+            return (params, stats, loss_sum + loss), None
+
+        (params, stats, loss_sum), _ = jax.lax.scan(
+            body,
+            (params, zeros, jnp.zeros((), cfg.dtype)),
+            (pos_batches, neg_batches),
+        )
+        n_steps = pos_batches.shape[0]
+        epoch_stats = EpochStats(
+            mean_loss=loss_sum / n_steps,
+            ent_count=stats[0],
+            ent_loss=stats[1],
+            rel_count=stats[2],
+            rel_loss=stats[3],
+        )
+        return params, epoch_stats
+
+    def batch_gradients(
+        self, params: Params, pos: jax.Array, neg: jax.Array, cfg: KGConfig
+    ) -> tuple[jax.Array, Params]:
+        """Loss and gradients for the BGD Map phase (§3.2.1): the worker emits
+        gradients, never touching its local params."""
+        return jax.value_and_grad(self.margin_loss)(
+            params, pos, neg, margin=cfg.margin, norm=cfg.norm
+        )

@@ -1,0 +1,69 @@
+"""DistMult (Yang et al., 2015) — the canonical non-translational model.
+
+Bilinear-diagonal score ``s(h, r, t) = <h, r, t> = sum_i h_i r_i t_i``
+(higher = truer).  The engine minimizes energies (lower = truer), so the
+energy is the negated score; the margin ranking loss then matches Yang et
+al.'s training objective exactly.  ``norm`` is meaningless for a bilinear
+score and is ignored.
+
+Existence proof for the ``KGModel`` abstraction: nothing in the MapReduce
+engine assumes translation — a similarity model with negative energies runs
+through both paradigms, every merge strategy, and the eval protocol with no
+special cases.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.models import base
+from repro.core.models.base import KGConfig, Params, unit_rows
+
+
+class DistMult(base.KGModel):
+    name = "distmult"
+    roles = {"ent": "ent", "rel": "rel"}
+
+    def init_params(self, key: jax.Array, cfg: KGConfig) -> Params:
+        k_ent, k_rel = jax.random.split(key)
+        ent = base.uniform_table(k_ent, cfg.n_entities, cfg.dim, cfg.dtype)
+        rel = base.uniform_table(k_rel, cfg.n_relations, cfg.dim, cfg.dtype)
+        return {"ent": ent, "rel": rel}
+
+    def energy(
+        self, params: Params, triplets: jax.Array, norm: str = "l1"
+    ) -> jax.Array:
+        del norm                       # bilinear score has no norm choice
+        h = params["ent"][triplets[..., 0]]
+        r = params["rel"][triplets[..., 1]]
+        t = params["ent"][triplets[..., 2]]
+        return -jnp.sum(h * r * t, axis=-1)
+
+    def normalize(self, params: Params) -> Params:
+        """Unit entity rows (Yang et al. renormalize entities each epoch)."""
+        out = dict(params)
+        out["ent"] = unit_rows(params["ent"])
+        return out
+
+    def candidate_energies(
+        self, params: Params, triplets: jax.Array, side: str, norm: str = "l1"
+    ) -> jax.Array:
+        """Closed form: one (B, k) x (k, E) matmul — the bilinear score is
+        symmetric in h and t, so both sides share it."""
+        ent, rel = params["ent"], params["rel"]
+        r = rel[triplets[:, 1]]
+        if side == "tail":
+            fixed = ent[triplets[:, 0]]
+        elif side == "head":
+            fixed = ent[triplets[:, 2]]
+        else:
+            raise ValueError(f"bad side {side!r}")
+        return -(fixed * r) @ ent.T                        # (B, E)
+
+    def relation_energies(
+        self, params: Params, triplets: jax.Array, norm: str = "l1"
+    ) -> jax.Array:
+        ent, rel = params["ent"], params["rel"]
+        h = ent[triplets[:, 0]]
+        t = ent[triplets[:, 2]]
+        return -(h * t) @ rel.T                            # (B, R)

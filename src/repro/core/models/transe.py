@@ -1,0 +1,109 @@
+"""TransE (Bordes et al., 2013) — the scoring model the paper parallelizes.
+
+Entities and relations are ``k``-dim vectors; a true triplet ``<h, r, t>``
+should satisfy ``h + r ≈ t``.  Energy (Eq. 1 of the paper):
+
+    d(h, r, t) = || h + r - t ||_{1 or 2}
+
+Registered as ``"transe"``; it is the reference model for the fused Pallas
+scoring kernel (``kernels/transe_score.py``), and the engine reproduces the
+pre-refactor single-model code path bit-for-bit (tests/test_kg_api.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.models import base
+from repro.core.models.base import KGConfig, Params, dissimilarity
+
+
+class TransE(base.KGModel):
+    name = "transe"
+    roles = {"ent": "ent", "rel": "rel"}
+    supports_fused_kernel = True
+
+    def init_params(self, key: jax.Array, cfg: KGConfig) -> Params:
+        """Uniform(-6/sqrt(k), 6/sqrt(k)) init; relations L2-normalized once
+        (TransE Algorithm 1, lines 1-4 of the paper)."""
+        k_ent, k_rel = jax.random.split(key)
+        ent = base.uniform_table(k_ent, cfg.n_entities, cfg.dim, cfg.dtype)
+        rel = base.uniform_table(k_rel, cfg.n_relations, cfg.dim, cfg.dtype)
+        rel = rel / (jnp.linalg.norm(rel, axis=-1, keepdims=True) + 1e-12)
+        return {"ent": ent, "rel": rel}
+
+    def energy(
+        self, params: Params, triplets: jax.Array, norm: str = "l1"
+    ) -> jax.Array:
+        h = params["ent"][triplets[..., 0]]
+        r = params["rel"][triplets[..., 1]]
+        t = params["ent"][triplets[..., 2]]
+        return dissimilarity(h + r - t, norm)
+
+    def normalize(self, params: Params) -> Params:
+        """e <- e / ||e||_2 for every entity (per-epoch constraint)."""
+        ent = params["ent"]
+        ent = ent / (jnp.linalg.norm(ent, axis=-1, keepdims=True) + 1e-12)
+        return {"ent": ent, "rel": params["rel"]}
+
+    def candidate_energies(
+        self, params: Params, triplets: jax.Array, side: str, norm: str = "l1"
+    ) -> jax.Array:
+        """Closed form: one (B, E, k) broadcast instead of E substitutions."""
+        ent, rel = params["ent"], params["rel"]
+        h, r, t = triplets[:, 0], triplets[:, 1], triplets[:, 2]
+        if side == "tail":
+            q = ent[h] + rel[r]                            # (B, k)
+            diff = q[:, None, :] - ent[None, :, :]         # (B, E, k)
+        elif side == "head":
+            q = ent[t] - rel[r]                            # t - r
+            diff = ent[None, :, :] - q[:, None, :]
+        else:
+            raise ValueError(f"bad side {side!r}")
+        return dissimilarity(diff, norm)
+
+    def relation_energies(
+        self, params: Params, triplets: jax.Array, norm: str = "l1"
+    ) -> jax.Array:
+        ent, rel = params["ent"], params["rel"]
+        h = ent[triplets[:, 0]]
+        t = ent[triplets[:, 2]]
+        diff = (h - t)[:, None, :] + rel[None, :, :]       # (B, R, k)
+        return dissimilarity(diff, norm)
+
+    # -- fused Pallas kernels (late imports: kernels/ops imports this pkg) --
+
+    def fused_margin_loss(
+        self, params, pos, neg, *, margin, norm, interpret=None
+    ):
+        from repro.kernels import ops
+
+        return ops.transe_margin_loss(
+            params, pos, neg, margin=margin, norm=norm, interpret=interpret
+        )
+
+    def fused_rank_counts(
+        self, params, triplets, side, *, norm, interpret=None
+    ):
+        """Streaming rank-count kernel: q = h + r (tail) / t - r (head),
+        count entities strictly closer than the gold."""
+        from repro.kernels import ops, rank_topk
+
+        if interpret is None:
+            interpret = ops._default_interpret()
+        ent, rel = params["ent"], params["rel"]
+        h = ent[triplets[:, 0]]
+        r = rel[triplets[:, 1]]
+        t = ent[triplets[:, 2]]
+        if side == "tail":
+            q = h + r
+            gold = t
+        elif side == "head":
+            q = t - r
+            gold = h
+        else:
+            raise ValueError(f"bad side {side!r}")
+        gold_d = dissimilarity(q - gold, norm)
+        return rank_topk.rank_counts(
+            q, ent, gold_d, norm=norm, interpret=interpret
+        )

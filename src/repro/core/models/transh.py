@@ -1,0 +1,80 @@
+"""TransH (Wang et al., 2014) — translation on relation-specific hyperplanes.
+
+Each relation gets a translation vector ``d_r`` and a hyperplane normal
+``w_r``; entities are projected onto the hyperplane before translating:
+
+    d(h, r, t) = || (h - w_r^T h w_r) + d_r - (t - w_r^T t w_r) ||_{1 or 2}
+
+The extra ``(R, k)`` normal table rides through the MapReduce engine
+untouched: ``roles`` marks it relation-indexed, so the Reduce-phase merges
+use the relation touch stats for it — no engine change needed, which is the
+point of the ``KGModel`` abstraction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.models import base
+from repro.core.models.base import KGConfig, Params, dissimilarity, unit_rows
+
+
+def _project(x: jax.Array, w_unit: jax.Array) -> jax.Array:
+    """x minus its component along the (unit) hyperplane normal."""
+    return x - jnp.sum(x * w_unit, axis=-1, keepdims=True) * w_unit
+
+
+class TransH(base.KGModel):
+    name = "transh"
+    roles = {"ent": "ent", "rel": "rel", "norm": "rel"}
+
+    def init_params(self, key: jax.Array, cfg: KGConfig) -> Params:
+        k_ent, k_rel, k_w = jax.random.split(key, 3)
+        ent = base.uniform_table(k_ent, cfg.n_entities, cfg.dim, cfg.dtype)
+        rel = unit_rows(
+            base.uniform_table(k_rel, cfg.n_relations, cfg.dim, cfg.dtype)
+        )
+        w = unit_rows(
+            base.uniform_table(k_w, cfg.n_relations, cfg.dim, cfg.dtype)
+        )
+        return {"ent": ent, "rel": rel, "norm": w}
+
+    def energy(
+        self, params: Params, triplets: jax.Array, norm: str = "l1"
+    ) -> jax.Array:
+        h = params["ent"][triplets[..., 0]]
+        r = params["rel"][triplets[..., 1]]
+        t = params["ent"][triplets[..., 2]]
+        # re-unitize inside the energy so the score is well defined even
+        # between constraint projections (gradients flow through).
+        w = unit_rows(params["norm"][triplets[..., 1]])
+        return dissimilarity(_project(h, w) + r - _project(t, w), norm)
+
+    def normalize(self, params: Params) -> Params:
+        """Unit entities and unit hyperplane normals (TransH constraints)."""
+        out = dict(params)
+        out["ent"] = unit_rows(params["ent"])
+        out["norm"] = unit_rows(params["norm"])
+        return out
+
+    def candidate_energies(
+        self, params: Params, triplets: jax.Array, side: str, norm: str = "l1"
+    ) -> jax.Array:
+        """Closed form: project all entities against each triplet's normal."""
+        ent = params["ent"]
+        r = params["rel"][triplets[:, 1]]                  # (B, k)
+        w = unit_rows(params["norm"][triplets[:, 1]])      # (B, k)
+        # every entity projected onto every triplet's hyperplane: (B, E, k)
+        proj_all = ent[None, :, :] - (
+            jnp.sum(ent[None, :, :] * w[:, None, :], axis=-1, keepdims=True)
+            * w[:, None, :]
+        )
+        if side == "tail":
+            hp = _project(ent[triplets[:, 0]], w)          # (B, k)
+            diff = (hp + r)[:, None, :] - proj_all
+        elif side == "head":
+            tp = _project(ent[triplets[:, 2]], w)
+            diff = proj_all + (r - tp)[:, None, :]
+        else:
+            raise ValueError(f"bad side {side!r}")
+        return dissimilarity(diff, norm)

@@ -7,6 +7,11 @@ For each training triplet we corrupt EITHER the head OR the tail:
  - 'bern': per-relation Bernoulli using head/tail multiplicity statistics
    (TransH; reduces false negatives for 1-to-N / N-to-1 relations).  Included
    because the paper's successors it cites use it; benchmarks default 'unif'.
+
+The corruption scheme is model-pluggable: the engine calls
+``KGModel.make_negatives`` (``core/models/base.py``), whose default routes
+here with the config's ``sampling`` choice — a model overrides that method
+to swap in its own scheme.
 """
 from __future__ import annotations
 

@@ -1,222 +1,68 @@
-"""TransE (Bordes et al., 2013) — the knowledge-embedding model the paper
-parallelizes.
+"""Deprecation shim — TransE now lives in ``repro.core.models.transe``.
 
-Entities and relations are ``k``-dim vectors; a true triplet ``<h, r, t>``
-should satisfy ``h + r ≈ t``.  Energy (Eq. 1 of the paper):
+The model-agnostic engine math (margin loss, SGD steps, local-SGD epochs,
+BGD gradients) moved to ``repro.core.models.base.KGModel`` so every scoring
+model shares it; TransE is just the first registered model.  This module
+keeps the original single-model API working:
 
-    d(h, r, t) = || h + r - t ||_{1 or 2}
+    from repro.core import transe
+    transe.TransEConfig(...)          # alias of models.base.KGConfig
+    transe.init_params / energy / margin_loss / run_epoch / ...
 
-Training minimizes the margin ranking loss (Eq. 3) between training triplets
-and corrupted triplets (Eq. 2), with entity embeddings re-normalized each
-epoch (see DESIGN.md §2 on the draft's re-init typo).
+New code should use the ``repro.kg`` facade or the registry directly:
 
-Everything here is pure and jit/vmap/shard_map friendly: params are a plain
-dict ``{"ent": (E, k), "rel": (R, k)}``; triplets are int32 ``(..., 3)``
-arrays of ``(h, r, t)`` ids.
+    from repro.core.models import get_model
+    model = get_model("transe")
+
+Every function here delegates to the registered TransE instance with
+identical math — the pre-refactor loss histories reproduce bit-for-bit
+(tests/test_kg_api.py::test_transe_shim_bit_for_bit).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Dict
-
 import jax
-import jax.numpy as jnp
 
-Params = Dict[str, jax.Array]
+from repro.core.models import base as _base
+from repro.core.models import get_model as _get_model
 
+_MODEL = _get_model("transe")
 
-@dataclasses.dataclass(frozen=True)
-class TransEConfig:
-    """Hyper-parameters of single-thread TransE (paper Algorithm 1)."""
-
-    n_entities: int
-    n_relations: int
-    dim: int = 50
-    margin: float = 1.0
-    norm: str = "l1"            # 'l1' | 'l2'  (Eq. 1 allows either)
-    learning_rate: float = 0.01
-    # 'epoch' renormalizes entities at the start of each epoch (TransE);
-    # 'step' after every SGD step; 'none' disables.
-    normalize: str = "epoch"
-    # negative sampling: 'unif' (paper / TransE) or 'bern' (TransH-style)
-    sampling: str = "unif"
-    dtype: Any = jnp.float32
-
-    def __post_init__(self):
-        if self.norm not in ("l1", "l2"):
-            raise ValueError(f"norm must be 'l1' or 'l2', got {self.norm!r}")
-        if self.normalize not in ("epoch", "step", "none"):
-            raise ValueError(f"bad normalize: {self.normalize!r}")
+# Aliases of the now-shared types (same objects, old names).
+TransEConfig = _base.KGConfig
+Params = _base.Params
+EpochStats = _base.EpochStats
+pairwise_hinge = _base.pairwise_hinge
+apply_gradients = _base.apply_gradients
+_dissimilarity = _base.dissimilarity
 
 
 def init_params(key: jax.Array, cfg: TransEConfig) -> Params:
-    """Uniform(-6/sqrt(k), 6/sqrt(k)) init; relations L2-normalized once
-    (TransE Algorithm 1, lines 1-4 of the paper)."""
-    bound = 6.0 / jnp.sqrt(float(cfg.dim))
-    k_ent, k_rel = jax.random.split(key)
-    ent = jax.random.uniform(
-        k_ent, (cfg.n_entities, cfg.dim), cfg.dtype, -bound, bound
-    )
-    rel = jax.random.uniform(
-        k_rel, (cfg.n_relations, cfg.dim), cfg.dtype, -bound, bound
-    )
-    rel = rel / (jnp.linalg.norm(rel, axis=-1, keepdims=True) + 1e-12)
-    return {"ent": ent, "rel": rel}
+    return _MODEL.init_params(key, cfg)
 
 
 def normalize_entities(params: Params) -> Params:
-    """e <- e / ||e||_2 for every entity (per-epoch constraint)."""
-    ent = params["ent"]
-    ent = ent / (jnp.linalg.norm(ent, axis=-1, keepdims=True) + 1e-12)
-    return {"ent": ent, "rel": params["rel"]}
-
-
-def _dissimilarity(x: jax.Array, norm: str) -> jax.Array:
-    if norm == "l1":
-        return jnp.sum(jnp.abs(x), axis=-1)
-    return jnp.sqrt(jnp.sum(x * x, axis=-1) + 1e-12)
+    return _MODEL.normalize(params)
 
 
 def energy(params: Params, triplets: jax.Array, norm: str = "l1") -> jax.Array:
-    """d(h, r, t) for a batch of triplets ``(..., 3)`` -> ``(...,)``."""
-    h = params["ent"][triplets[..., 0]]
-    r = params["rel"][triplets[..., 1]]
-    t = params["ent"][triplets[..., 2]]
-    return _dissimilarity(h + r - t, norm)
+    return _MODEL.energy(params, triplets, norm)
 
 
-def pairwise_hinge(
-    d_pos: jax.Array, d_neg: jax.Array, margin: float
-) -> jax.Array:
-    """[gamma + d(pos) - d(neg)]_+  (Eq. 3 summand)."""
-    return jnp.maximum(0.0, margin + d_pos - d_neg)
+def margin_loss(params, pos, neg, *, margin: float, norm: str) -> jax.Array:
+    return _MODEL.margin_loss(params, pos, neg, margin=margin, norm=norm)
 
 
-def margin_loss(
-    params: Params,
-    pos: jax.Array,
-    neg: jax.Array,
-    *,
-    margin: float,
-    norm: str,
-) -> jax.Array:
-    """Mean margin ranking loss over a batch of (pos, neg) triplet pairs.
-
-    The paper sums over the training set; we use the mean so the learning
-    rate is batch-size independent (equivalent up to lr rescaling).
-    """
-    d_pos = energy(params, pos, norm)
-    d_neg = energy(params, neg, norm)
-    return jnp.mean(pairwise_hinge(d_pos, d_neg, margin))
+def per_pair_loss(params, pos, neg, *, margin: float, norm: str) -> jax.Array:
+    return _MODEL.per_pair_loss(params, pos, neg, margin=margin, norm=norm)
 
 
-def per_pair_loss(
-    params: Params, pos: jax.Array, neg: jax.Array, *, margin: float, norm: str
-) -> jax.Array:
-    """Hinge per (pos, neg) pair — used for per-key loss bookkeeping that the
-    mini-loss Reduce strategy needs."""
-    return pairwise_hinge(energy(params, pos, norm), energy(params, neg, norm), margin)
+def sgd_step(params, pos, neg, cfg: TransEConfig):
+    return _MODEL.sgd_step(params, pos, neg, cfg)
 
 
-def sgd_step(
-    params: Params,
-    pos: jax.Array,
-    neg: jax.Array,
-    cfg: TransEConfig,
-) -> tuple[Params, jax.Array]:
-    """One (mini-batch) SGD step of Algorithm 1's inner loop.
-
-    ``pos``/``neg``: (B, 3).  B = 1 reproduces the paper's per-triplet SGD.
-    Returns (new_params, mean batch loss).
-    """
-    loss, grads = jax.value_and_grad(margin_loss)(
-        params, pos, neg, margin=cfg.margin, norm=cfg.norm
-    )
-    params = jax.tree.map(lambda p, g: p - cfg.learning_rate * g, params, grads)
-    if cfg.normalize == "step":
-        params = normalize_entities(params)
-    return params, loss
+def run_epoch(params, pos_batches, neg_batches, cfg: TransEConfig):
+    return _MODEL.run_epoch(params, pos_batches, neg_batches, cfg)
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class EpochStats:
-    """Bookkeeping one Map worker emits for the Reduce phase."""
-
-    mean_loss: jax.Array        # scalar, mean pair loss over the epoch
-    ent_count: jax.Array        # (E,) how many updates touched each entity
-    ent_loss: jax.Array         # (E,) summed pair loss attributed to entity
-    rel_count: jax.Array        # (R,)
-    rel_loss: jax.Array         # (R,)
-
-
-def _accumulate_touch(
-    stats: tuple, pos: jax.Array, neg: jax.Array, pair_loss: jax.Array, E: int, R: int
-) -> tuple:
-    ent_count, ent_loss, rel_count, rel_loss = stats
-    # keys touched by the update: h, t of pos AND the corrupted entity of neg.
-    heads = jnp.concatenate([pos[:, 0], neg[:, 0]])
-    tails = jnp.concatenate([pos[:, 2], neg[:, 2]])
-    l2 = jnp.concatenate([pair_loss, pair_loss])
-    ent_count = ent_count.at[heads].add(1.0).at[tails].add(1.0)
-    ent_loss = ent_loss.at[heads].add(l2).at[tails].add(l2)
-    rel_count = rel_count.at[pos[:, 1]].add(1.0)
-    rel_loss = rel_loss.at[pos[:, 1]].add(pair_loss)
-    return ent_count, ent_loss, rel_count, rel_loss
-
-
-def run_epoch(
-    params: Params,
-    pos_batches: jax.Array,     # (S, B, 3) minibatches of training triplets
-    neg_batches: jax.Array,     # (S, B, 3) corrupted counterparts
-    cfg: TransEConfig,
-) -> tuple[Params, EpochStats]:
-    """One epoch of Algorithm 1 on one worker: normalize entities, then scan
-    SGD over the worker's minibatches, tracking the per-key stats Reduce
-    needs.  Pure; used by the vmap backend (vmapped over workers) and inside
-    shard_map (per shard)."""
-    if cfg.normalize == "epoch":
-        params = normalize_entities(params)
-    E, R = cfg.n_entities, cfg.n_relations
-    zeros = (
-        jnp.zeros((E,), cfg.dtype),
-        jnp.zeros((E,), cfg.dtype),
-        jnp.zeros((R,), cfg.dtype),
-        jnp.zeros((R,), cfg.dtype),
-    )
-
-    def body(carry, batch):
-        params, stats, loss_sum = carry
-        pos, neg = batch
-        pair = per_pair_loss(params, pos, neg, margin=cfg.margin, norm=cfg.norm)
-        params, loss = sgd_step(params, pos, neg, cfg)
-        stats = _accumulate_touch(stats, pos, neg, pair, E, R)
-        return (params, stats, loss_sum + loss), None
-
-    (params, stats, loss_sum), _ = jax.lax.scan(
-        body, (params, zeros, jnp.zeros((), cfg.dtype)), (pos_batches, neg_batches)
-    )
-    n_steps = pos_batches.shape[0]
-    epoch_stats = EpochStats(
-        mean_loss=loss_sum / n_steps,
-        ent_count=stats[0],
-        ent_loss=stats[1],
-        rel_count=stats[2],
-        rel_loss=stats[3],
-    )
-    return params, epoch_stats
-
-
-def batch_gradients(
-    params: Params, pos: jax.Array, neg: jax.Array, cfg: TransEConfig
-) -> tuple[jax.Array, Params]:
-    """Loss and gradients for the BGD Map phase (§3.2.1): the worker emits
-    gradients, never touching its local params."""
-    return jax.value_and_grad(margin_loss)(
-        params, pos, neg, margin=cfg.margin, norm=cfg.norm
-    )
-
-
-def apply_gradients(params: Params, grads: Params, lr: float) -> Params:
-    return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+def batch_gradients(params, pos, neg, cfg: TransEConfig):
+    return _MODEL.batch_gradients(params, pos, neg, cfg)

@@ -1,4 +1,4 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""jit'd public wrappers around the Pallas kernels + model-aware dispatch.
 
 ``interpret`` defaults to "am I NOT on TPU?" — interpret=True executes the
 kernel bodies in Python/XLA on CPU for correctness work (this container);
@@ -9,6 +9,12 @@ forward; the backward is closed-form (TransE gradients are ±sign/±unit
 vectors scatter-added into the tables) and implemented with segment-sum
 scatters — so training can use the fused forward without a hand-written
 scatter kernel.
+
+The ``kg_margin_loss`` / ``entity_rank_counts`` entry points dispatch on the
+``KGModel``: models with a fused Pallas path (``supports_fused_kernel``,
+currently TransE) hit the kernels; every other registered model falls back
+to its pure-jnp energy — same semantics, no kernel required to plug in a
+new scoring model.
 """
 from __future__ import annotations
 
@@ -17,7 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import rank_topk, ref, transe_score
+from repro.core.models import get_model
+from repro.kernels import ref, transe_score
 
 
 def _default_interpret() -> bool:
@@ -120,6 +127,29 @@ def transe_margin_loss(
     )
 
 
+def kg_margin_loss(
+    model,
+    params,
+    pos: jax.Array,
+    neg: jax.Array,
+    *,
+    margin: float = 1.0,
+    norm: str = "l1",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Model-dispatched margin loss: models declaring
+    ``supports_fused_kernel`` provide their own Pallas path via
+    ``fused_margin_loss`` (TransE wraps ``transe_margin_loss`` below);
+    everything else falls back to the model's pure-jnp energy.  Both paths
+    are differentiable."""
+    model = get_model(model)
+    if model.supports_fused_kernel:
+        return model.fused_margin_loss(
+            params, pos, neg, margin=margin, norm=norm, interpret=interpret
+        )
+    return model.margin_loss(params, pos, neg, margin=margin, norm=norm)
+
+
 # ---------------------------------------------------------------------------
 # Entity-inference ranking (evaluation path)
 # ---------------------------------------------------------------------------
@@ -131,31 +161,24 @@ def entity_rank_counts(
     *,
     norm: str = "l1",
     interpret: bool | None = None,
+    model="transe",
 ) -> jax.Array:
-    """rank-1 counts (entities strictly closer than gold) per test triplet,
-    computed by the streaming Pallas kernel.  rank = 1 + returned count."""
-    if interpret is None:
-        interpret = _default_interpret()
-    ent, rel = params["ent"], params["rel"]
-    h = ent[triplets[:, 0]]
-    r = rel[triplets[:, 1]]
-    t = ent[triplets[:, 2]]
-    if side == "tail":
-        q = h + r
-        gold = t
-    elif side == "head":
-        q = t - r
-        gold = h
-    else:
-        raise ValueError(f"bad side {side!r}")
-    diff = q - gold
-    if norm == "l1":
-        gold_d = jnp.sum(jnp.abs(diff), axis=-1)
-    else:
-        gold_d = jnp.sqrt(jnp.sum(diff * diff, axis=-1) + 1e-12)
-    return rank_topk.rank_counts(
-        q, ent, gold_d, norm=norm, interpret=interpret
-    )
+    """rank-1 counts (entities strictly closer than gold) per test triplet.
+    rank = 1 + returned count.  Fused-kernel models stream entity tiles
+    through their own Pallas kernel (``fused_rank_counts``); others score
+    candidates with the model's batched pure-jnp path."""
+    model = get_model(model)
+    if model.supports_fused_kernel:
+        return model.fused_rank_counts(
+            params, triplets, side, norm=norm, interpret=interpret
+        )
+    scores = model.candidate_energies(params, triplets, side, norm)
+    # gold score read out of the SAME matrix (as core/eval.py does) — a
+    # recompute via model.energy can differ in the last ulp and make the
+    # gold entity count itself.
+    gold = triplets[:, 2] if side == "tail" else triplets[:, 0]
+    gold_d = scores[jnp.arange(scores.shape[0]), gold]
+    return jnp.sum(scores < gold_d[:, None], axis=1).astype(jnp.int32)
 
 
 # Re-export oracles for tests/benchmarks

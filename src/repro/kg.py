@@ -1,0 +1,123 @@
+"""Top-level model-agnostic KG embedding API.
+
+One import, two calls — train any registered scoring model with the paper's
+MapReduce engine and run the full three-task evaluation protocol:
+
+    from repro import kg
+    from repro.data import kg as kg_lib
+
+    graph = kg_lib.synthetic_kg(0)
+    result = kg.fit(graph, model="distmult", paradigm="bgd", epochs=50)
+    metrics = kg.evaluate(result.params, "distmult", graph)
+
+``model`` is any name in ``kg.models()`` (transe / transh / distmult / your
+plugin — see ``repro.core.models``); ``paradigm`` is the paper's 'sgd'
+(local epochs + conflict-resolving Reduce) or 'bgd' (gradient Reduce);
+``backend`` is 'vmap' (simulated workers, single device) or 'shard_map'
+(real mesh axis, pass ``mesh=``).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.core import eval as kg_eval
+from repro.core import mapreduce
+from repro.core.models import KGConfig, KGModel, available, get_model
+
+TrainResult = mapreduce.TrainResult
+
+
+def models() -> tuple:
+    """Names of all registered scoring models."""
+    return available()
+
+
+def make_configs(
+    kg,
+    model: "str | KGModel" = "transe",
+    paradigm: str = "sgd",
+    *,
+    dim: int = 50,
+    margin: float = 1.0,
+    norm: str = "l1",
+    learning_rate: float = 0.01,
+    normalize: str = "epoch",
+    sampling: str = "unif",
+    n_workers: int = 4,
+    strategy: str = "average",
+    reduce_impl: str = "psum",
+    backend: str = "vmap",
+    batch_size: int = 256,
+    partition: str = "balanced",
+) -> tuple[KGConfig, mapreduce.MapReduceConfig]:
+    """Build the (model hyperparams, engine) config pair ``fit`` uses —
+    exposed separately for benchmarks that drive epochs by hand."""
+    model = get_model(model)
+    kcfg = KGConfig(
+        n_entities=kg.n_entities,
+        n_relations=kg.n_relations,
+        dim=dim,
+        margin=margin,
+        norm=norm,
+        learning_rate=learning_rate,
+        normalize=normalize,
+        sampling=sampling,
+    )
+    mcfg = mapreduce.MapReduceConfig(
+        n_workers=n_workers,
+        paradigm=paradigm,
+        strategy=strategy,
+        reduce_impl=reduce_impl,
+        backend=backend,
+        batch_size=batch_size,
+        partition=partition,
+        model=model.name,
+    )
+    return kcfg, mcfg
+
+
+def fit(
+    kg,
+    model: "str | KGModel" = "transe",
+    paradigm: str = "sgd",
+    *,
+    epochs: int = 50,
+    seed: int = 0,
+    mesh=None,
+    params=None,
+    callback: Optional[Callable[[int, float], None]] = None,
+    **config_kw,
+) -> TrainResult:
+    """Train ``model`` on ``kg`` with the MapReduce engine.
+
+    ``config_kw`` forwards to :func:`make_configs` (dim, margin, norm,
+    learning_rate, n_workers, strategy, backend, batch_size, ...).
+    Returns a :class:`TrainResult` with params, loss_history, and the
+    resolved model name.
+
+    ``model`` may be a registry name or a ``KGModel`` instance; an instance
+    is used as-is (it shadows any registry entry sharing its name — custom
+    subclasses train with their own overrides).  Instances with a name the
+    registry doesn't know must be ``register()``-ed first."""
+    model = get_model(model)
+    kcfg, mcfg = make_configs(kg, model, paradigm, **config_kw)
+    return mapreduce.train(
+        kg, kcfg, mcfg,
+        epochs=epochs, seed=seed, mesh=mesh, params=params, callback=callback,
+        model=model,
+    )
+
+
+def evaluate(
+    params,
+    model: "str | KGModel",
+    kg,
+    *,
+    norm: str = "l1",
+    filtered: bool = True,
+) -> dict:
+    """All three paper tasks (entity inference, relation prediction, triplet
+    classification) for any registered model."""
+    return kg_eval.evaluate_all(
+        params, kg, norm=norm, filtered=filtered, model=model
+    )

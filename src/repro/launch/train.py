@@ -3,6 +3,11 @@
     PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --reduced \
         --steps 50 --batch 8 --seq 128
 
+KG embedding runs route through the model-agnostic `repro.kg` facade:
+
+    PYTHONPATH=src python -m repro.launch.train --kg distmult \
+        --kg-paradigm bgd --kg-workers 4 --kg-epochs 30
+
 On real hardware the same entry point runs the full config on the
 production mesh (--mesh pod|single); on this CPU container use --reduced.
 For multi-host TPU, initialize jax.distributed before calling main() (the
@@ -25,15 +30,45 @@ from repro.models import registry
 from repro.train import loop as loop_lib, optimizer as opt_lib
 
 
+def _run_kg(args) -> None:
+    """KG-embedding path: any registered scoring model on the synthetic KG."""
+    from repro import kg as kg_api
+    from repro.data import kg as kg_lib
+
+    graph = kg_lib.synthetic_kg(
+        args.seed, n_entities=args.kg_entities, n_relations=15,
+        n_triplets=args.kg_triplets)
+    res = kg_api.fit(
+        graph, model=args.kg, paradigm=args.kg_paradigm,
+        n_workers=args.kg_workers, strategy=args.kg_strategy,
+        backend="vmap", batch_size=256, dim=48,
+        learning_rate=args.lr if args.lr is not None else 5e-2,
+        epochs=args.kg_epochs, seed=args.seed,
+        callback=lambda e, l: print(f"epoch {e + 1}: loss={l:.4f}", flush=True))
+    print(f"[{res.model}/{args.kg_paradigm}] final loss: "
+          f"{res.loss_history[-1]:.4f} (start {res.loss_history[0]:.4f})")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list(configs.ARCH_IDS))
+    ap.add_argument("--arch", choices=list(configs.ARCH_IDS),
+                    help="LM architecture (required unless --kg)")
+    ap.add_argument("--kg", default=None, metavar="MODEL",
+                    help="train a KG embedding model (transe|transh|distmult)"
+                         " via repro.kg.fit instead of an LM arch")
+    ap.add_argument("--kg-paradigm", default="sgd", choices=["sgd", "bgd"])
+    ap.add_argument("--kg-workers", type=int, default=4)
+    ap.add_argument("--kg-strategy", default="average")
+    ap.add_argument("--kg-epochs", type=int, default=30)
+    ap.add_argument("--kg-entities", type=int, default=2000)
+    ap.add_argument("--kg-triplets", type=int, default=20000)
     ap.add_argument("--reduced", action="store_true",
                     help="CPU-sized config of the same family")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--lr", type=float, default=None,
+                    help="default 3e-3 for LM archs, 5e-2 for --kg")
     ap.add_argument("--optimizer", default="adamw",
                     choices=["sgd", "adamw", "adafactor"])
     ap.add_argument("--microbatches", type=int, default=1)
@@ -44,6 +79,12 @@ def main(argv=None):
                     help="'none' = local devices unsharded")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.kg:
+        _run_kg(args)
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --kg is given")
 
     cfg = configs.get_config(args.arch, reduced=args.reduced)
     task = registry.make_task(cfg)
@@ -66,7 +107,8 @@ def main(argv=None):
         vocab_size=cfg.vocab_size, seq_len=args.seq,
         global_batch=args.batch, seed=args.seed))
     opt_cfg = opt_lib.OptConfig(
-        name=args.optimizer, learning_rate=args.lr,
+        name=args.optimizer,
+        learning_rate=args.lr if args.lr is not None else 3e-3,
         warmup_steps=max(args.steps // 20, 1), decay_steps=args.steps)
     tcfg = loop_lib.TrainConfig(
         steps=args.steps, microbatches=args.microbatches,

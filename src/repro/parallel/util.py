@@ -16,6 +16,24 @@ from jax.sharding import PartitionSpec as P
 AxisLike = Union[None, str, Tuple[str, ...]]
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-compat ``shard_map``: the top-level ``jax.shard_map`` (with
+    ``check_vma``) where it exists, else the ``jax.experimental`` one (whose
+    equivalent knob is ``check_rep``).  Keeps the engine importable across
+    the jax versions this repo meets (0.4.x containers through current)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
 def _ambient_mesh():
     try:
         m = jax.sharding.get_abstract_mesh()

@@ -1,10 +1,21 @@
 """Pallas rank_topk kernel vs oracle, plus cross-check against the batched
-eval reference in core/eval.py."""
+eval reference in core/eval.py.
+
+``hypothesis`` is an optional test dep: when absent the property-based test
+is skipped (``pytest.importorskip`` semantics, applied per-test so the rest
+of the file still collects) and a parametrized fixed-seed fallback covers
+the same check path.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import kg_eval, transe
 from repro.kernels import ops, ref
@@ -47,15 +58,27 @@ def test_dtype_sweep(dtype):
     assert np.all(diff <= tol), diff
 
 
-@given(seed=st.integers(0, 2**31 - 1), norm=st.sampled_from(["l1", "l2"]))
-@settings(max_examples=15, deadline=None)
-def test_property_count_bounds(seed, norm):
+def _check_count_bounds(seed, norm):
     q, tab, gold = make(9, 70, 12, seed=seed)
     got = np.asarray(rank_counts(q, tab, gold, norm=norm, tb=4, te=16,
                                  interpret=True))
     assert np.all(got >= 0) and np.all(got <= 70)
     want = np.asarray(ref.rank_counts_ref(q, tab, gold, norm))
     np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("norm", ["l1", "l2"])
+@pytest.mark.parametrize("seed", [0, 7, 123, 2**31 - 1])
+def test_count_bounds_fixed_seeds(seed, norm):
+    """Non-hypothesis fallback: always runs, fixed corpus of instances."""
+    _check_count_bounds(seed, norm)
+
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 2**31 - 1), norm=st.sampled_from(["l1", "l2"]))
+    @settings(max_examples=15, deadline=None)
+    def test_property_count_bounds(seed, norm):
+        _check_count_bounds(seed, norm)
 
 
 def test_end_to_end_ranks_match_eval_reference(tiny_kg, tiny_tcfg):

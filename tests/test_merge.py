@@ -1,9 +1,17 @@
-"""Unit + property tests for the Reduce-phase merge strategies (paper §3.1.2)."""
+"""Unit + property tests for the Reduce-phase merge strategies (paper §3.1.2).
+
+``hypothesis`` is optional: without it the property tests are skipped and
+fixed-seed parametrized fallbacks run the same checks."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import merge
 
@@ -93,45 +101,75 @@ class TestRandom:
             merge.merge_stacked("random", stacked, counts, losses, wl)
 
 
-class TestProperties:
-    @given(
-        W=st.integers(2, 5), N=st.integers(1, 12), k=st.integers(1, 6),
-        seed=st.integers(0, 2**31 - 1),
+def _check_average_between_min_and_max(W, N, k, seed):
+    rng = np.random.default_rng(seed)
+    stacked = jnp.asarray(rng.normal(size=(W, N, k)).astype(np.float32))
+    counts = jnp.asarray(rng.integers(0, 3, size=(W, N)).astype(np.float32))
+    out = np.asarray(merge.merge_stacked(
+        "average", stacked, counts, jnp.zeros((W, N)), jnp.zeros((W,))))
+    s = np.asarray(stacked)
+    assert np.all(out <= s.max(axis=0) + 1e-5)
+    assert np.all(out >= s.min(axis=0) - 1e-5)
+
+
+def _check_identical_workers_merge_to_same(seed):
+    """All strategies are the identity when worker copies agree."""
+    rng = np.random.default_rng(seed)
+    row = rng.normal(size=(6, 3)).astype(np.float32)
+    stacked = jnp.asarray(np.stack([row] * 4))
+    counts = jnp.asarray(rng.integers(0, 3, size=(4, 6)).astype(np.float32))
+    losses = jnp.asarray(rng.uniform(size=(4, 6)).astype(np.float32))
+    wl = jnp.asarray(rng.uniform(size=(4,)).astype(np.float32))
+    for strat in merge.STRATEGIES:
+        out = merge.merge_stacked(strat, stacked, counts, losses, wl,
+                                  key=jax.random.PRNGKey(0))
+        np.testing.assert_allclose(np.asarray(out), row, rtol=1e-5,
+                                   err_msg=strat)
+
+
+def _check_average_worker_permutation_invariant(perm_seed):
+    stacked, counts, losses, wl = mk(W=4, N=8, k=3, seed=11)
+    perm = np.random.default_rng(perm_seed).permutation(4)
+    a = merge.merge_stacked("average", stacked, counts, losses, wl)
+    b = merge.merge_stacked(
+        "average", stacked[perm], counts[perm], losses[perm], wl[perm]
     )
-    @settings(max_examples=25, deadline=None)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+class TestPropertiesFallback:
+    """Non-hypothesis fallbacks: always run, fixed corpus of instances."""
+
+    @pytest.mark.parametrize(
+        "W,N,k,seed", [(2, 1, 1, 0), (3, 5, 4, 7), (5, 12, 6, 2**31 - 1)])
     def test_average_between_min_and_max(self, W, N, k, seed):
-        rng = np.random.default_rng(seed)
-        stacked = jnp.asarray(rng.normal(size=(W, N, k)).astype(np.float32))
-        counts = jnp.asarray(rng.integers(0, 3, size=(W, N)).astype(np.float32))
-        out = np.asarray(merge.merge_stacked(
-            "average", stacked, counts, jnp.zeros((W, N)), jnp.zeros((W,))))
-        s = np.asarray(stacked)
-        assert np.all(out <= s.max(axis=0) + 1e-5)
-        assert np.all(out >= s.min(axis=0) - 1e-5)
+        _check_average_between_min_and_max(W, N, k, seed)
 
-    @given(seed=st.integers(0, 2**31 - 1))
-    @settings(max_examples=25, deadline=None)
+    @pytest.mark.parametrize("seed", [0, 42, 2**31 - 1])
     def test_identical_workers_merge_to_same(self, seed):
-        """All strategies are the identity when worker copies agree."""
-        rng = np.random.default_rng(seed)
-        row = rng.normal(size=(6, 3)).astype(np.float32)
-        stacked = jnp.asarray(np.stack([row] * 4))
-        counts = jnp.asarray(rng.integers(0, 3, size=(4, 6)).astype(np.float32))
-        losses = jnp.asarray(rng.uniform(size=(4, 6)).astype(np.float32))
-        wl = jnp.asarray(rng.uniform(size=(4,)).astype(np.float32))
-        for strat in merge.STRATEGIES:
-            out = merge.merge_stacked(strat, stacked, counts, losses, wl,
-                                      key=jax.random.PRNGKey(0))
-            np.testing.assert_allclose(np.asarray(out), row, rtol=1e-5,
-                                       err_msg=strat)
+        _check_identical_workers_merge_to_same(seed)
 
-    @given(perm_seed=st.integers(0, 1000))
-    @settings(max_examples=15, deadline=None)
+    @pytest.mark.parametrize("perm_seed", [0, 13, 1000])
     def test_average_worker_permutation_invariant(self, perm_seed):
-        stacked, counts, losses, wl = mk(W=4, N=8, k=3, seed=11)
-        perm = np.random.default_rng(perm_seed).permutation(4)
-        a = merge.merge_stacked("average", stacked, counts, losses, wl)
-        b = merge.merge_stacked(
-            "average", stacked[perm], counts[perm], losses[perm], wl[perm]
+        _check_average_worker_permutation_invariant(perm_seed)
+
+
+if HAVE_HYPOTHESIS:
+    class TestProperties:
+        @given(
+            W=st.integers(2, 5), N=st.integers(1, 12), k=st.integers(1, 6),
+            seed=st.integers(0, 2**31 - 1),
         )
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+        @settings(max_examples=25, deadline=None)
+        def test_average_between_min_and_max(self, W, N, k, seed):
+            _check_average_between_min_and_max(W, N, k, seed)
+
+        @given(seed=st.integers(0, 2**31 - 1))
+        @settings(max_examples=25, deadline=None)
+        def test_identical_workers_merge_to_same(self, seed):
+            _check_identical_workers_merge_to_same(seed)
+
+        @given(perm_seed=st.integers(0, 1000))
+        @settings(max_examples=15, deadline=None)
+        def test_average_worker_permutation_invariant(self, perm_seed):
+            _check_average_worker_permutation_invariant(perm_seed)
