@@ -2,7 +2,7 @@
 # local runs, and future CI all use the tier-1 command from ROADMAP.md.
 PY ?= python
 
-.PHONY: test test-fast quickstart
+.PHONY: test test-fast quickstart bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -12,3 +12,8 @@ test-fast:
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py
+
+# Recorded perf trajectory: writes BENCH_pipeline.json (host vs device
+# pipeline epochs/sec, W in {1,2,4,8}, both paradigms).
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run_all

@@ -9,29 +9,41 @@ import sys
 import time
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
-                    choices=["strategies", "speedup", "kernels", "convergence"])
-    args = ap.parse_args()
+# static so --help / bad-flag errors don't pay the jax import chain
+SUITE_NAMES = ("kernels", "convergence", "speedup", "strategies", "pipeline")
 
-    from benchmarks import (bench_convergence, bench_kernels, bench_speedup,
-                            bench_strategies)
 
-    suites = {
+def suites() -> dict:
+    """Name -> run callable for every benchmark module (the single registry
+    run_all.py reuses)."""
+    from benchmarks import (bench_convergence, bench_kernels, bench_pipeline,
+                            bench_speedup, bench_strategies)
+
+    return {
         "kernels": bench_kernels.run,
         "convergence": bench_convergence.run,
         "speedup": bench_speedup.run,
         "strategies": bench_strategies.run,
+        "pipeline": bench_pipeline.run,
     }
-    if args.only:
-        suites = {args.only: suites[args.only]}
 
-    for name, fn in suites.items():
-        print(f"== bench:{name} ==", flush=True)
-        t0 = time.time()
-        fn(verbose=True)
-        print(f"== bench:{name} done ({time.time()-t0:.0f}s) ==", flush=True)
+
+def run_suite(name: str, fn) -> None:
+    print(f"== bench:{name} ==", flush=True)
+    t0 = time.time()
+    fn(verbose=True)
+    print(f"== bench:{name} done ({time.time()-t0:.0f}s) ==", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(SUITE_NAMES))
+    args = ap.parse_args()
+
+    all_suites = suites()
+    selected = {args.only: all_suites[args.only]} if args.only else all_suites
+    for name, fn in selected.items():
+        run_suite(name, fn)
 
 
 if __name__ == '__main__':

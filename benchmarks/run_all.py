@@ -1,0 +1,65 @@
+"""Recorded benchmark runner: executes the perf-trajectory benches and
+writes JSON artifacts at the repo root so the numbers accumulate across PRs.
+
+    PYTHONPATH=src python -m benchmarks.run_all [--model transe] [--full]
+
+Always runs the pipeline bench (host vs device epochs/sec, W in {1,2,4,8},
+both paradigms) and writes ``BENCH_pipeline.json``.  ``--full`` additionally
+runs the printed-only suites (strategies / speedup / kernels / convergence)
+via ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="transe")
+    ap.add_argument("--out", default="BENCH_pipeline.json")
+    ap.add_argument("--full", action="store_true",
+                    help="also run the printed-only benchmark suites")
+    args = ap.parse_args()
+
+    import jax
+
+    from benchmarks import bench_pipeline
+
+    print("== bench:pipeline ==", flush=True)
+    t0 = time.time()
+    rows = bench_pipeline.run(verbose=True, model=args.model)
+    print(f"== bench:pipeline done ({time.time() - t0:.0f}s) ==", flush=True)
+
+    payload = {
+        "bench": "pipeline",
+        "date": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "jax": jax.__version__,
+        "devices": [str(d) for d in jax.devices()],
+        "platform": platform.platform(),
+        "config": {
+            "epochs_per_cell": bench_pipeline.EPOCHS,
+            "dim": bench_pipeline.DIM,
+            "batch_size": bench_pipeline.BATCH,
+            "graph": "synthetic_kg(1, n_entities=1000, n_relations=10, "
+                     "n_triplets=4000)",
+        },
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}", flush=True)
+
+    if args.full:
+        from benchmarks import run as run_mod
+
+        for name, fn in run_mod.suites().items():
+            if name != "pipeline":            # already ran (recorded) above
+                run_mod.run_suite(name, fn)
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,17 @@ def main():
     ap.add_argument("--entities", type=int, default=2000)
     ap.add_argument("--triplets", type=int, default=20000)
     ap.add_argument("--dim", type=int, default=50)
+    ap.add_argument("--pipeline", default="host", choices=["host", "device"],
+                    help="'device' = scan-over-epochs engine (on-device "
+                         "batching + negative sampling, one dispatch per run)")
+    ap.add_argument("--merge-every", type=int, default=1,
+                    help="device pipeline, sgd settings: local epochs "
+                         "between Reduce merges")
     args = ap.parse_args()
+
+    pipeline_kw = {}
+    if args.pipeline == "device":
+        pipeline_kw = dict(pipeline="device", block_epochs=args.epochs)
 
     graph = kg_lib.synthetic_kg(0, n_entities=args.entities, n_relations=15,
                                 n_triplets=args.triplets)
@@ -44,6 +54,9 @@ def main():
          dict(n_workers=args.workers, paradigm="sgd", strategy="random")),
     ]:
         paradigm = kw.pop("paradigm")
+        kw.update(pipeline_kw)
+        if paradigm == "sgd" and args.pipeline == "device":
+            kw["merge_every"] = args.merge_every
         t0 = time.time()
         res = kg_api.fit(
             graph, model=args.model, paradigm=paradigm,

@@ -30,17 +30,46 @@ Two execution backends with identical math:
                     paper-literal ``allgather`` Reduce or the optimized
                     ``psum`` winner-select Reduce (see merge.py).
 
-The module-level ``train()`` drives epochs host-side (partitioning, negative
-sampling keys, loss history) and is what ``repro.kg.fit`` calls.
+Two **data pipelines**, selected by ``MapReduceConfig.pipeline``:
+
+  * ``host``   — the original per-epoch loop: numpy batch permutations
+                 (``data/kg.epoch_batches``), one H2D transfer, one jit
+                 dispatch, and one blocking ``float(loss)`` sync per epoch.
+                 Kept as the reference path (the ``repro.core.transe`` shim
+                 reproduces it bit-for-bit) — but dispatch overhead, not the
+                 Map/Reduce math, dominates small-to-medium graphs.
+  * ``device`` — the **scanned driver** (``make_block_fn``): the partitioned
+                 triplets are placed on device once at ``train()`` start, and
+                 a whole block of epochs runs as ONE compiled
+                 ``jax.lax.scan``.  Per-epoch batching (permutations from
+                 ``fold_in(seed, epoch)`` keys), negative sampling, and the
+                 Reduce merge keys are all folded into the scanned epoch
+                 body, so no per-epoch host work remains; the loss history
+                 comes back as a device array per block and callbacks fire at
+                 block boundaries only.
+
+Epoch scheduling (``EpochSchedule``, device pipeline only):
+
+  * ``block_epochs``  — epochs per compiled scan block (one jit dispatch per
+                        block; results are bit-identical for any block size).
+  * ``merge_every=K`` — SGD workers run K local epochs between Reduces
+                        (touch stats accumulate across the K epochs); a
+                        beyond-paper schedule the scanned driver makes nearly
+                        free, trading merge traffic for local drift.
+
+The module-level ``train()`` drives blocks (device) or epochs (host)
+host-side and is what ``repro.kg.fit`` calls.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import merge as merge_lib
@@ -49,6 +78,31 @@ from repro.core import models as kg_models
 from repro.core.models.base import EpochStats, KGConfig, KGModel, Params, apply_gradients
 from repro.data import kg as kg_lib
 from repro.parallel.util import shard_map as _shard_map
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochSchedule:
+    """How the device pipeline groups epochs (see the module docstring).
+
+    ``block_epochs`` epochs run as one compiled ``lax.scan`` (one jit
+    dispatch per block — any block size gives bit-identical results);
+    every ``merge_every`` epochs the SGD Reduce runs, so K > 1 lets each
+    Map worker take K local epochs between merges.  ``block_epochs`` must
+    be a multiple of ``merge_every`` (blocks end on a merge boundary)."""
+
+    block_epochs: int = 1
+    merge_every: int = 1
+
+    def __post_init__(self):
+        if self.block_epochs < 1:
+            raise ValueError(f"block_epochs must be >= 1, got {self.block_epochs}")
+        if self.merge_every < 1:
+            raise ValueError(f"merge_every must be >= 1, got {self.merge_every}")
+        if self.block_epochs % self.merge_every != 0:
+            raise ValueError(
+                f"block_epochs={self.block_epochs} must be a multiple of "
+                f"merge_every={self.merge_every} so every block ends on a "
+                "Reduce boundary")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +116,10 @@ class MapReduceConfig:
     partition: str = "balanced"     # 'balanced' | 'stratified'
     axis_name: str = "workers"
     model: str = "transe"           # kg_models registry name
+    pipeline: str = "host"          # 'host' | 'device' (see module docstring)
+    schedule: EpochSchedule = EpochSchedule()
+    # raise instead of warn when batch_size doesn't divide the worker split
+    strict_batching: bool = False
 
     def __post_init__(self):
         if self.paradigm not in ("sgd", "bgd"):
@@ -70,6 +128,19 @@ class MapReduceConfig:
             raise ValueError(f"bad strategy {self.strategy!r}")
         if self.backend not in ("vmap", "shard_map"):
             raise ValueError(f"bad backend {self.backend!r}")
+        if self.pipeline not in ("host", "device"):
+            raise ValueError(f"bad pipeline {self.pipeline!r}")
+        if self.pipeline == "host" and (
+            self.schedule.block_epochs != 1 or self.schedule.merge_every != 1
+        ):
+            raise ValueError(
+                "EpochSchedule with block_epochs/merge_every != 1 needs "
+                "pipeline='device' — the host loop drives one epoch at a "
+                "time with a Reduce per epoch")
+        if self.schedule.merge_every > 1 and self.paradigm != "sgd":
+            raise ValueError(
+                "merge_every > 1 is an SGD-paradigm schedule (BGD has no "
+                "Reduce merge to defer)")
         kg_models.get_model(self.model)      # raises on unknown name
 
 
@@ -123,6 +194,35 @@ def sgd_epoch_vmap(
     return merged, jnp.mean(stats.mean_loss)
 
 
+def _merge_tables_collective(
+    model: KGModel,
+    cfg: MapReduceConfig,
+    local: Params,
+    stats,
+    worker_loss: jax.Array,
+    merge_key: jax.Array,
+) -> Params:
+    """The shard_map analogue of ``_merge_tables_stacked``: Reduce every
+    table of this shard's params via collectives, routed by the model's
+    roles — same sorted-name order and per-table fold-out keys, so the two
+    paths make bit-identical choices given the same key.  Must run inside
+    shard_map over ``cfg.axis_name``."""
+    roles = model.param_roles()
+    names = sorted(local.keys())
+    keys = jax.random.split(merge_key, len(names))
+    mfn = (
+        merge_lib.merge_collective
+        if cfg.reduce_impl == "psum"
+        else merge_lib.merge_allgather
+    )
+    out = {}
+    for name, key in zip(names, keys):
+        count, loss = _stats_for_role(stats, roles[name])
+        out[name] = mfn(cfg.strategy, local[name], count, loss,
+                        worker_loss, cfg.axis_name, key)
+    return out
+
+
 def sgd_epoch_shard(
     params: Params,
     pos: jax.Array,              # (W, S, B, 3), sharded on axis 0
@@ -136,23 +236,12 @@ def sgd_epoch_shard(
     """Map/Reduce over a real mesh axis via shard_map."""
     model = _resolve(cfg, model)
     ax = cfg.axis_name
-    roles = model.param_roles()
 
     def worker(params, pos_w, neg_w):
         # pos_w: (1, S, B, 3) — this shard's subset
         local, stats = model.run_epoch(params, pos_w[0], neg_w[0], tcfg)
-        names = sorted(local.keys())
-        keys = jax.random.split(merge_key, len(names))
-        mfn = (
-            merge_lib.merge_collective
-            if cfg.reduce_impl == "psum"
-            else merge_lib.merge_allgather
-        )
-        out = {}
-        for name, key in zip(names, keys):
-            count, loss = _stats_for_role(stats, roles[name])
-            out[name] = mfn(cfg.strategy, local[name], count, loss,
-                            stats.mean_loss, ax, key)
+        out = _merge_tables_collective(
+            model, cfg, local, stats, stats.mean_loss, merge_key)
         loss = jax.lax.pmean(stats.mean_loss, ax)
         return out, loss
 
@@ -206,6 +295,38 @@ def bgd_epoch_vmap(
     return params, loss_sum / pos_s.shape[0]
 
 
+def _bgd_epoch_collective(
+    model: KGModel,
+    cfg: MapReduceConfig,
+    tcfg: KGConfig,
+    params: Params,
+    pos: jax.Array,              # (S, B, 3) this shard's epoch batches
+    neg: jax.Array,
+) -> tuple[Params, jax.Array]:
+    """One BGD epoch on this shard: per-step pmean-Reduced gradients and a
+    global update.  The single definition of the shard-side BGD update rule
+    — used by the per-epoch driver and the scanned block driver.  Must run
+    inside shard_map over ``cfg.axis_name``."""
+    ax = cfg.axis_name
+    if tcfg.normalize == "epoch":
+        params = model.normalize(params)
+
+    def step(carry, batch):
+        params, loss_sum = carry
+        pos_b, neg_b = batch
+        loss, grads = model.batch_gradients(params, pos_b, neg_b, tcfg)
+        grads = jax.lax.pmean(grads, ax)              # the BGD Reduce
+        params = apply_gradients(params, grads, tcfg.learning_rate)
+        if tcfg.normalize == "step":
+            params = model.normalize(params)
+        return (params, loss_sum + jax.lax.pmean(loss, ax)), None
+
+    (params, loss_sum), _ = jax.lax.scan(
+        step, (params, jnp.zeros((), tcfg.dtype)), (pos, neg)
+    )
+    return params, loss_sum / pos.shape[0]
+
+
 def bgd_epoch_shard(
     params: Params,
     pos: jax.Array,
@@ -219,23 +340,8 @@ def bgd_epoch_shard(
     ax = cfg.axis_name
 
     def worker(params, pos_w, neg_w):
-        if tcfg.normalize == "epoch":
-            params = model.normalize(params)
-
-        def step(carry, batch):
-            params, loss_sum = carry
-            pos_b, neg_b = batch
-            loss, grads = model.batch_gradients(params, pos_b, neg_b, tcfg)
-            grads = jax.lax.pmean(grads, ax)          # the BGD Reduce
-            params = apply_gradients(params, grads, tcfg.learning_rate)
-            if tcfg.normalize == "step":
-                params = model.normalize(params)
-            return (params, loss_sum + jax.lax.pmean(loss, ax)), None
-
-        (params, loss_sum), _ = jax.lax.scan(
-            step, (params, jnp.zeros((), tcfg.dtype)), (pos_w[0], neg_w[0])
-        )
-        return params, loss_sum / pos_w.shape[1]
+        return _bgd_epoch_collective(
+            model, cfg, tcfg, params, pos_w[0], neg_w[0])
 
     fn = _shard_map(
         worker, mesh=mesh,
@@ -243,6 +349,181 @@ def bgd_epoch_shard(
         check_vma=False,
     )
     return fn(params, pos, neg)
+
+
+# ---------------------------------------------------------------------------
+# Scanned block driver (the 'device' pipeline)
+# ---------------------------------------------------------------------------
+
+# fold_in tag separating the device pipeline's (data, negative, merge) key
+# streams from the init key derived from the same seed.
+_DEVICE_STREAM_TAG = 0xD417A
+
+
+def _device_keys(seed: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-purpose base keys for the device pipeline; every per-epoch key is
+    ``fold_in(base, epoch)`` (and per-worker keys fold the worker index on
+    top), so all randomness is a pure function of (seed, epoch, worker) —
+    which is exactly what makes block size irrelevant to the results."""
+    root = jax.random.fold_in(jax.random.PRNGKey(seed), _DEVICE_STREAM_TAG)
+    k_data, k_neg, k_merge = jax.random.split(root, 3)
+    return k_data, k_neg, k_merge
+
+
+def _zero_stats(tcfg: KGConfig, lead: tuple = ()) -> EpochStats:
+    E, R = tcfg.n_entities, tcfg.n_relations
+    return EpochStats(
+        mean_loss=jnp.zeros(lead, tcfg.dtype),
+        ent_count=jnp.zeros(lead + (E,), tcfg.dtype),
+        ent_loss=jnp.zeros(lead + (E,), tcfg.dtype),
+        rel_count=jnp.zeros(lead + (R,), tcfg.dtype),
+        rel_loss=jnp.zeros(lead + (R,), tcfg.dtype),
+    )
+
+
+def make_block_fn(
+    cfg: MapReduceConfig,
+    tcfg: KGConfig,
+    partitioned: jax.Array,      # (W, N_w, 3) on device (sharded for shard_map)
+    *,
+    mesh: Optional[Mesh] = None,
+    model: Optional[KGModel] = None,
+    head_prob: Optional[jax.Array] = None,
+    seed: int = 0,
+) -> Callable:
+    """Returns jitted ``block_fn(params, epoch_ids) -> (params, losses)``.
+
+    ``epoch_ids`` is a ``(L,)`` int32 array of absolute epoch indices with
+    ``L % schedule.merge_every == 0``; the whole block runs as one compiled
+    scan with on-device batching, negative sampling, and (SGD) Reduce merges
+    every ``merge_every`` epochs — zero per-epoch host work.  ``losses`` is
+    the ``(L,)`` per-epoch mean loss, returned as a device array (callers
+    decide when to sync).  Epoch results are bit-identical for any block
+    split because every key is ``fold_in``-derived from (seed, epoch).
+
+    The vmap and shard_map backends derive identical per-worker keys (vmapped
+    ``fold_in(·, w)`` vs ``fold_in(·, axis_index)``), so the two backends see
+    the same batches and negatives."""
+    model = _resolve(cfg, model)
+    W, B, K = cfg.n_workers, cfg.batch_size, cfg.schedule.merge_every
+    ax = cfg.axis_name
+    k_data, k_neg, k_merge = _device_keys(seed)
+    run = functools.partial(model.run_epoch, cfg=tcfg)
+
+    def worker_epoch_data(e: jax.Array, w: jax.Array, part_w: jax.Array):
+        """(pos, neg) for worker ``w`` at epoch ``e`` (the shard_map per-
+        worker path).  Key contract shared with ``epoch_data`` below — both
+        fold (epoch, then worker) — so the backends match bit-for-bit."""
+        kb = jax.random.fold_in(jax.random.fold_in(k_data, e), w)
+        pos = kg_lib.device_worker_batches(kb, part_w, B)
+        kn = jax.random.fold_in(jax.random.fold_in(k_neg, e), w)
+        neg = model.make_negatives(kn, pos, tcfg, head_prob)
+        return pos, neg
+
+    def epoch_data(e: jax.Array):
+        """Stacked (W, S, B, 3) pos/neg for the vmap backend, batched via
+        the data layer's ``device_epoch_batches`` (which folds the worker
+        index exactly like ``worker_epoch_data``)."""
+        pos = kg_lib.device_epoch_batches(
+            jax.random.fold_in(k_data, e), partitioned, B)
+        kn = jax.random.fold_in(k_neg, e)
+        neg = jax.vmap(
+            lambda pos_w, w: model.make_negatives(
+                jax.random.fold_in(kn, w), pos_w, tcfg, head_prob)
+        )(pos, jnp.arange(W))
+        return pos, neg
+
+    # -- vmap backend -------------------------------------------------------
+
+    def _broadcast(params: Params) -> Params:
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (W,) + x.shape), params)
+
+    def sgd_block_vmap(params: Params, epoch_ids: jax.Array):
+        def round_body(stacked, eids):           # eids: (K,) one merge round
+            def local_epoch(carry, e):
+                stacked, acc = carry
+                pos, neg = epoch_data(e)
+                stacked, stats = jax.vmap(run)(stacked, pos, neg)
+                acc = jax.tree.map(jnp.add, acc, stats)
+                return (stacked, acc), jnp.mean(stats.mean_loss)
+
+            (stacked, acc), losses = jax.lax.scan(
+                local_epoch, (stacked, _zero_stats(tcfg, (W,))), eids)
+            acc = dataclasses.replace(acc, mean_loss=acc.mean_loss / K)
+            merged = _merge_tables_stacked(
+                model, cfg.strategy, stacked, acc,
+                jax.random.fold_in(k_merge, eids[-1]))
+            return _broadcast(merged), losses
+
+        stacked, losses = jax.lax.scan(
+            round_body, _broadcast(params), epoch_ids.reshape(-1, K))
+        return jax.tree.map(lambda x: x[0], stacked), losses.reshape(-1)
+
+    def bgd_block_vmap(params: Params, epoch_ids: jax.Array):
+        def epoch_body(params, e):
+            pos, neg = epoch_data(e)
+            return bgd_epoch_vmap(params, pos, neg, cfg, tcfg, model)
+
+        return jax.lax.scan(epoch_body, params, epoch_ids)
+
+    # -- shard_map backend (whole block inside one shard_map) ---------------
+
+    def sgd_block_shard(params: Params, epoch_ids: jax.Array):
+        def worker(params, part_w, epoch_ids):
+            w = jax.lax.axis_index(ax)
+
+            def round_body(local, eids):
+                def local_epoch(carry, e):
+                    local, acc = carry
+                    pos, neg = worker_epoch_data(e, w, part_w[0])
+                    local, stats = model.run_epoch(local, pos, neg, tcfg)
+                    acc = jax.tree.map(jnp.add, acc, stats)
+                    return (local, acc), jax.lax.pmean(stats.mean_loss, ax)
+
+                (local, acc), losses = jax.lax.scan(
+                    local_epoch, (local, _zero_stats(tcfg)), eids)
+                out = _merge_tables_collective(
+                    model, cfg, local, acc, acc.mean_loss / K,
+                    jax.random.fold_in(k_merge, eids[-1]))
+                return out, losses
+
+            params, losses = jax.lax.scan(
+                round_body, params, epoch_ids.reshape(-1, K))
+            return params, losses.reshape(-1)
+
+        fn = _shard_map(
+            worker, mesh=mesh,
+            in_specs=(P(), P(ax), P()), out_specs=(P(), P()),
+            check_vma=False,
+        )
+        return fn(params, partitioned, epoch_ids)
+
+    def bgd_block_shard(params: Params, epoch_ids: jax.Array):
+        def worker(params, part_w, epoch_ids):
+            w = jax.lax.axis_index(ax)
+
+            def epoch_body(params, e):
+                pos, neg = worker_epoch_data(e, w, part_w[0])
+                return _bgd_epoch_collective(
+                    model, cfg, tcfg, params, pos, neg)
+
+            return jax.lax.scan(epoch_body, params, epoch_ids)
+
+        fn = _shard_map(
+            worker, mesh=mesh,
+            in_specs=(P(), P(ax), P()), out_specs=(P(), P()),
+            check_vma=False,
+        )
+        return fn(params, partitioned, epoch_ids)
+
+    if cfg.backend == "shard_map":
+        if mesh is None:
+            raise ValueError("shard_map backend needs a mesh")
+        fn = sgd_block_shard if cfg.paradigm == "sgd" else bgd_block_shard
+    else:
+        fn = sgd_block_vmap if cfg.paradigm == "sgd" else bgd_block_vmap
+    return jax.jit(fn)
 
 
 # ---------------------------------------------------------------------------
@@ -296,8 +577,26 @@ def train(
     callback: Optional[Callable[[int, float], None]] = None,
     model: Optional[KGModel] = None,
 ) -> TrainResult:
-    """Host-side epoch driver: balanced partitioning, deterministic batches,
-    negative sampling, Map/Reduce epoch, loss history.
+    """Training driver: balanced partitioning, deterministic batches,
+    negative sampling, Map/Reduce epochs, loss history.  With
+    ``cfg.pipeline == 'device'`` the epochs run in compiled scan blocks
+    (``make_block_fn``); with ``'host'`` one epoch is dispatched at a time
+    (the original, bit-for-bit-preserved loop).
+
+    Balance rule: the partitioner gives every worker exactly
+    ``N // n_workers`` triplets (dropping the ``N % n_workers`` tail so all
+    workers take identical step counts — the paper's balance requirement),
+    and each epoch runs ``N_w // batch_size`` steps per worker.  A
+    ``batch_size`` that does not divide ``N_w`` leaves the trailing
+    ``N_w % batch_size`` triplets of each worker's per-epoch permutation out
+    of that epoch (the reshuffle rotates which ones); the dropped count is
+    surfaced once per run as a warning, or as a ``ValueError`` when
+    ``cfg.strict_batching`` is set.
+
+    Callbacks: with the host pipeline ``callback(epoch, loss)`` fires every
+    epoch; with the device pipeline it fires at block boundaries only (with
+    the block's last epoch index and loss) — per-epoch host sync is exactly
+    what the scanned driver exists to remove.
 
     ``cfg.n_workers == 1`` with any backend reproduces single-thread
     Algorithm 1 (the paper's baseline) for the chosen model."""
@@ -308,12 +607,26 @@ def train(
         else kg_lib.partition_balanced
     )
     partitioned = part_fn(seed, kg.train, cfg.n_workers)
-    if partitioned.shape[1] < cfg.batch_size:
+    n_w = partitioned.shape[1]
+    if n_w < cfg.batch_size:
         raise ValueError(
             f"batch_size={cfg.batch_size} exceeds the "
             f"{partitioned.shape[1]} triplets each of the {cfg.n_workers} "
             "workers holds — zero steps per epoch; shrink batch_size or "
             "n_workers")
+    remainder = n_w % cfg.batch_size
+    if remainder:
+        msg = (
+            f"batch_size={cfg.batch_size} does not divide the per-worker "
+            f"split of {n_w} triplets — each epoch leaves out the trailing "
+            f"{remainder} triplets of every worker's permutation "
+            f"({remainder * cfg.n_workers} of {n_w * cfg.n_workers} total); "
+            "the per-epoch reshuffle rotates which triplets sit out, so all "
+            "of them still train over time.  Pick a batch_size dividing "
+            f"{n_w} to use every triplet every epoch.")
+        if cfg.strict_batching:
+            raise ValueError(msg)
+        warnings.warn(msg, stacklevel=2)
 
     head_prob = None
     if tcfg.sampling == "bern":
@@ -330,6 +643,11 @@ def train(
             f"resume params have tables {sorted(params)} but model "
             f"{model.name!r} expects {sorted(model.param_roles())} — "
             "params from a different model?")
+
+    if cfg.pipeline == "device":
+        return _train_device(
+            tcfg, cfg, model, partitioned, head_prob, params,
+            epochs=epochs, seed=seed, mesh=mesh, callback=callback)
 
     epoch_fn = make_epoch_fn(cfg, tcfg, mesh, model)
 
@@ -353,6 +671,59 @@ def train(
         history.append(loss)
         if callback is not None:
             callback(epoch, loss)
+    return TrainResult(
+        params=params, loss_history=history, epochs_run=epochs,
+        model=model.name,
+    )
+
+
+def _train_device(
+    tcfg: KGConfig,
+    cfg: MapReduceConfig,
+    model: KGModel,
+    partitioned: np.ndarray,     # (W, N_w, 3) host array from the partitioner
+    head_prob: Optional[jax.Array],
+    params: Params,
+    *,
+    epochs: int,
+    seed: int,
+    mesh: Optional[Mesh],
+    callback: Optional[Callable[[int, float], None]],
+) -> TrainResult:
+    """Device-pipeline driver: put the partitioned triplets on device once,
+    then run epochs in compiled scan blocks (``make_block_fn``).  The only
+    per-block host work is the jit dispatch and the optional callback."""
+    sched = cfg.schedule
+    if epochs % sched.merge_every != 0:
+        raise ValueError(
+            f"epochs={epochs} is not a multiple of "
+            f"merge_every={sched.merge_every} — the trailing local epochs "
+            "would never be Reduced into the shared params; pick a multiple")
+
+    part = jnp.asarray(partitioned)
+    if cfg.backend == "shard_map":
+        if mesh is None:
+            raise ValueError("shard_map backend needs a mesh")
+        part = jax.device_put(part, NamedSharding(mesh, P(cfg.axis_name)))
+        params = jax.device_put(params, NamedSharding(mesh, P()))
+
+    block_fn = make_block_fn(
+        cfg, tcfg, part, mesh=mesh, model=model, head_prob=head_prob,
+        seed=seed)
+
+    loss_blocks = []
+    start = 0
+    while start < epochs:
+        # every block is a multiple of merge_every (epochs and block_epochs
+        # both are), so the final remainder block still ends on a Reduce
+        length = min(sched.block_epochs, epochs - start)
+        epoch_ids = jnp.arange(start, start + length, dtype=jnp.int32)
+        params, losses = block_fn(params, epoch_ids)
+        loss_blocks.append(losses)               # device array per block
+        start += length
+        if callback is not None:
+            callback(start - 1, float(losses[-1]))
+    history = [float(x) for b in loss_blocks for x in np.asarray(b)]
     return TrainResult(
         params=params, loss_history=history, epochs_run=epochs,
         model=model.name,

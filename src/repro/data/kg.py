@@ -10,15 +10,25 @@ get latent translation vectors, and triplets are generated where
 that learns the structure ranks gold entities highly, a broken one does not.
 
 Also here: the paper's *balanced subsets* partitioning for the Map phase and
-deterministic epoch batching (restart-safe: batches are a pure function of
-(seed, epoch)).
+two epoch-batching pipelines, both deterministic (restart-safe: batches are a
+pure function of (seed, epoch)):
+
+  * ``epoch_batches``        — the **host** pipeline: numpy permutations,
+    one ``(W, S, B, 3)`` array transferred to device per epoch.  Kept for
+    the ``repro.core.transe`` bit-for-bit shim and as the reference.
+  * ``device_epoch_batches`` / ``device_worker_batches`` — the **device**
+    pipeline: per-worker permutations drawn from ``fold_in`` keys entirely
+    on device, so the scanned epoch driver (``core/mapreduce.py``) never
+    round-trips to the host between epochs.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, Iterator, Tuple
+from typing import Dict, Iterator, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -32,13 +42,25 @@ class KG:
     valid: np.ndarray
     test: np.ndarray
 
+    # lazily built known-triplet set (see known_set); not part of the
+    # dataclass comparison/repr surface
+    _known: Optional[set] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
     @property
     def all_triplets(self) -> np.ndarray:
         return np.concatenate([self.train, self.valid, self.test], axis=0)
 
     def known_set(self) -> set:
-        """Set of all true triplets — used for *filtered* ranking metrics."""
-        return {tuple(t) for t in self.all_triplets.tolist()}
+        """Set of all true triplets — used for *filtered* ranking metrics.
+
+        Built once and cached on the instance: ``evaluate_all`` calls this
+        per evaluation, and rebuilding a multi-hundred-thousand-entry set of
+        tuples each time dominated eval setup.  The splits are treated as
+        immutable after construction (as everywhere else in the repo)."""
+        if self._known is None:
+            self._known = {tuple(t) for t in self.all_triplets.tolist()}
+        return self._known
 
 
 # ---------------------------------------------------------------------------
@@ -179,7 +201,14 @@ def epoch_batches(
 
     Pure function of (seed, epoch) — a restarted job regenerates byte-
     identical batches, which is what makes checkpoint-resume exact
-    (``train/ft.py``)."""
+    (``train/ft.py``).
+
+    Remainder rule: ``S = N_w // batch_size`` — the trailing
+    ``N_w % batch_size`` triplets of each worker's permutation sit out of
+    the epoch, but the per-epoch reshuffle rotates *which* triplets those
+    are, so every triplet still trains over time.  ``mapreduce.train``
+    surfaces the dropped count once per run (warning, or an error under
+    ``strict_batching``)."""
     rng = np.random.default_rng(np.random.SeedSequence([seed, epoch]))
     W, N_w, _ = partitioned.shape
     S = N_w // batch_size
@@ -188,3 +217,43 @@ def epoch_batches(
         perm = rng.permutation(N_w)[: S * batch_size]
         out[w] = partitioned[w][perm].reshape(S, batch_size, 3)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Device pipeline: on-device epoch batching (pure jax, scan/jit friendly)
+# ---------------------------------------------------------------------------
+
+def device_worker_batches(
+    key: jax.Array,
+    triplets: jax.Array,         # (N_w, 3) one worker's split, on device
+    batch_size: int,
+) -> jax.Array:
+    """One worker's epoch batch grid, built on device: ``(S, B, 3)``.
+
+    The jax analogue of one row of :func:`epoch_batches` for the ``device``
+    pipeline: the permutation is drawn from ``key`` (callers fold in
+    (epoch, worker) — see ``mapreduce.make_block_fn``), so batches stay a
+    pure function of (seed, epoch, worker) and checkpoint-resume stays
+    exact.  Same remainder rule as the host path: ``N_w % batch_size``
+    triplets rotate out of each epoch."""
+    n = triplets.shape[0]
+    steps = n // batch_size
+    perm = jax.random.permutation(key, n)[: steps * batch_size]
+    return jnp.take(triplets, perm, axis=0).reshape(steps, batch_size, 3)
+
+
+def device_epoch_batches(
+    key: jax.Array,
+    partitioned: jax.Array,      # (W, N_w, 3) on device
+    batch_size: int,
+) -> jax.Array:
+    """All workers' batch grids on device: ``(W, S, B, 3)``.
+
+    Per-worker permutations come from ``fold_in(key, w)`` — identical keys
+    to what the shard_map scanned driver derives from ``axis_index``, so the
+    vmap and shard_map device pipelines see the same batches."""
+    W = partitioned.shape[0]
+    return jax.vmap(
+        lambda part_w, w: device_worker_batches(
+            jax.random.fold_in(key, w), part_w, batch_size)
+    )(partitioned, jnp.arange(W))

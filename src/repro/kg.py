@@ -25,6 +25,7 @@ from repro.core import mapreduce
 from repro.core.models import KGConfig, KGModel, available, get_model
 
 TrainResult = mapreduce.TrainResult
+EpochSchedule = mapreduce.EpochSchedule
 
 
 def models() -> tuple:
@@ -49,9 +50,19 @@ def make_configs(
     backend: str = "vmap",
     batch_size: int = 256,
     partition: str = "balanced",
+    pipeline: str = "host",
+    block_epochs: int = 1,
+    merge_every: int = 1,
+    strict_batching: bool = False,
 ) -> tuple[KGConfig, mapreduce.MapReduceConfig]:
     """Build the (model hyperparams, engine) config pair ``fit`` uses —
-    exposed separately for benchmarks that drive epochs by hand."""
+    exposed separately for benchmarks that drive epochs by hand.
+
+    ``pipeline='device'`` runs epochs in compiled scan blocks of
+    ``block_epochs`` with on-device batching and negative sampling (results
+    are bit-identical for any block size); ``merge_every=K`` lets SGD
+    workers take K local epochs between Reduces.  ``pipeline='host'`` (the
+    default) is the original per-epoch loop, preserved bit-for-bit."""
     model = get_model(model)
     kcfg = KGConfig(
         n_entities=kg.n_entities,
@@ -72,6 +83,10 @@ def make_configs(
         batch_size=batch_size,
         partition=partition,
         model=model.name,
+        pipeline=pipeline,
+        schedule=mapreduce.EpochSchedule(
+            block_epochs=block_epochs, merge_every=merge_every),
+        strict_batching=strict_batching,
     )
     return kcfg, mcfg
 
@@ -91,9 +106,13 @@ def fit(
     """Train ``model`` on ``kg`` with the MapReduce engine.
 
     ``config_kw`` forwards to :func:`make_configs` (dim, margin, norm,
-    learning_rate, n_workers, strategy, backend, batch_size, ...).
-    Returns a :class:`TrainResult` with params, loss_history, and the
-    resolved model name.
+    learning_rate, n_workers, strategy, backend, batch_size, pipeline,
+    block_epochs, merge_every, ...).  Returns a :class:`TrainResult` with
+    params, loss_history, and the resolved model name.
+
+    With ``pipeline="device"`` whole blocks of epochs run as one compiled
+    scan on device and ``callback`` fires at block boundaries only (the
+    host pipeline calls it every epoch).
 
     ``model`` may be a registry name or a ``KGModel`` instance; an instance
     is used as-is (it shadows any registry entry sharing its name — custom

@@ -38,14 +38,28 @@ def _run_kg(args) -> None:
     graph = kg_lib.synthetic_kg(
         args.seed, n_entities=args.kg_entities, n_relations=15,
         n_triplets=args.kg_triplets)
+    schedule_kw = {}
+    if args.kg_pipeline == "device":
+        # one compiled scan block per --kg-block-epochs (default: the whole
+        # run in a single block); the progress callback fires per block
+        block = (args.kg_block_epochs if args.kg_block_epochs is not None
+                 else args.kg_epochs)
+        schedule_kw = dict(
+            pipeline="device", block_epochs=block,
+            merge_every=args.kg_merge_every)
+    elif args.kg_block_epochs is not None or args.kg_merge_every != 1:
+        raise SystemExit(
+            "--kg-block-epochs / --kg-merge-every schedule the device "
+            "pipeline; add --kg-pipeline device (the host pipeline merges "
+            "every epoch, one dispatch per epoch)")
     res = kg_api.fit(
         graph, model=args.kg, paradigm=args.kg_paradigm,
         n_workers=args.kg_workers, strategy=args.kg_strategy,
         backend="vmap", batch_size=256, dim=48,
         learning_rate=args.lr if args.lr is not None else 5e-2,
-        epochs=args.kg_epochs, seed=args.seed,
+        epochs=args.kg_epochs, seed=args.seed, **schedule_kw,
         callback=lambda e, l: print(f"epoch {e + 1}: loss={l:.4f}", flush=True))
-    print(f"[{res.model}/{args.kg_paradigm}] final loss: "
+    print(f"[{res.model}/{args.kg_paradigm}/{args.kg_pipeline}] final loss: "
           f"{res.loss_history[-1]:.4f} (start {res.loss_history[0]:.4f})")
 
 
@@ -62,6 +76,16 @@ def main(argv=None):
     ap.add_argument("--kg-epochs", type=int, default=30)
     ap.add_argument("--kg-entities", type=int, default=2000)
     ap.add_argument("--kg-triplets", type=int, default=20000)
+    ap.add_argument("--kg-pipeline", default="host",
+                    choices=["host", "device"],
+                    help="'device' runs epochs as compiled scan blocks with "
+                         "on-device batching and negative sampling")
+    ap.add_argument("--kg-block-epochs", type=int, default=None,
+                    help="device pipeline: epochs per compiled block "
+                         "(default: all epochs in one block)")
+    ap.add_argument("--kg-merge-every", type=int, default=1,
+                    help="device pipeline, sgd paradigm: local epochs "
+                         "between Reduce merges")
     ap.add_argument("--reduced", action="store_true",
                     help="CPU-sized config of the same family")
     ap.add_argument("--steps", type=int, default=100)

@@ -5,8 +5,12 @@ Run with 8 forced host devices (the parent test sets XLA_FLAGS).  Asserts:
   2. shard_map SGD epoch (allgather Reduce) == vmap SGD epoch
   3. shard_map BGD epoch                    == vmap BGD epoch
   4. cross-pod local_sgd outer_merge: average/compressed/liveness semantics
+  5. device pipeline (scan-over-epochs blocks): shard_map == vmap for both
+     paradigms, incl. merge_every > 1 — the two backends derive identical
+     per-worker fold_in keys, so batches/negatives match exactly
 Exit code 0 on success.
 """
+import dataclasses
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -140,7 +144,36 @@ def check_outer_merge():
     print("outer random OK")
 
 
+def check_device_pipeline():
+    kg = kg_lib.synthetic_kg(0, n_entities=200, n_relations=5, n_triplets=2000)
+    tcfg = transe.TransEConfig(
+        n_entities=kg.n_entities, n_relations=kg.n_relations, dim=8,
+        learning_rate=0.05,
+    )
+    mesh = jax.make_mesh((W,), ("workers",))
+    for paradigm, merge_every in (("sgd", 1), ("sgd", 2), ("bgd", 1)):
+        cfg_v = mapreduce.MapReduceConfig(
+            n_workers=W, paradigm=paradigm, backend="vmap", batch_size=16,
+            pipeline="device",
+            schedule=mapreduce.EpochSchedule(
+                block_epochs=4, merge_every=merge_every))
+        res_v = mapreduce.train(kg, tcfg, cfg_v, epochs=4, seed=0)
+        cfg_s = dataclasses.replace(cfg_v, backend="shard_map")
+        res_s = mapreduce.train(kg, tcfg, cfg_s, epochs=4, seed=0, mesh=mesh)
+        np.testing.assert_allclose(
+            np.asarray(res_s.loss_history), np.asarray(res_v.loss_history),
+            rtol=1e-3, err_msg=f"device {paradigm} K={merge_every} losses")
+        for k in ("ent", "rel"):
+            np.testing.assert_allclose(
+                np.asarray(res_s.params[k]), np.asarray(res_v.params[k]),
+                rtol=1e-3, atol=1e-5,
+                err_msg=f"device {paradigm} K={merge_every} table {k}")
+        print(f"device pipeline {paradigm} K={merge_every}: "
+              "shard_map == vmap  OK")
+
+
 if __name__ == "__main__":
     check_engine()
     check_outer_merge()
+    check_device_pipeline()
     print("ALL MULTIDEVICE CHECKS PASSED")

@@ -1,0 +1,192 @@
+"""Tests for the device-resident training pipeline (scan-over-epochs engine,
+core/mapreduce.py): block-size invariance, epoch scheduling (merge_every),
+config validation, and the batching balance-rule diagnostics.
+
+The acceptance bar: `block_epochs=1` and `block_epochs=E` must produce
+bit-identical params and loss history for every registered model x paradigm
+x backend — every per-epoch key is `fold_in`-derived from (seed, epoch), so
+how epochs are grouped into compiled blocks cannot matter.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import kg as kg_api
+from repro.core import mapreduce
+from repro.data import kg as kg_lib
+
+MODELS = ["transe", "transh", "distmult"]
+EPOCHS = 4
+
+
+def _one_device_mesh():
+    return jax.make_mesh((1,), ("workers",))
+
+
+def _fit_device(tiny_kg, *, epochs=EPOCHS, **kw):
+    defaults = dict(
+        pipeline="device", n_workers=2, dim=8, learning_rate=0.05,
+        batch_size=64, seed=0)
+    defaults.update(kw)
+    return kg_api.fit(tiny_kg, epochs=epochs, **defaults)
+
+
+def _assert_identical(r1, r2):
+    np.testing.assert_array_equal(
+        np.asarray(r1.loss_history, np.float32),
+        np.asarray(r2.loss_history, np.float32))
+    assert set(r1.params) == set(r2.params)
+    for k in r1.params:
+        np.testing.assert_array_equal(
+            np.asarray(r1.params[k]), np.asarray(r2.params[k]),
+            err_msg=f"table {k}")
+
+
+# ---------------------------------------------------------------------------
+# Block-size invariance (the acceptance matrix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("paradigm", ["sgd", "bgd"])
+@pytest.mark.parametrize("backend", ["vmap", "shard_map"])
+def test_block_invariance(tiny_kg, model, paradigm, backend):
+    kw = dict(model=model, paradigm=paradigm, backend=backend)
+    if backend == "shard_map":
+        # in-process single-device mesh; W>1 shard_map semantics are covered
+        # by tests/helpers/multiworker_check.py (device-pipeline section)
+        kw.update(mesh=_one_device_mesh(), n_workers=1)
+    r1 = _fit_device(tiny_kg, block_epochs=1, **kw)
+    rE = _fit_device(tiny_kg, block_epochs=EPOCHS, **kw)
+    _assert_identical(r1, rE)
+
+
+def test_block_invariance_with_merge_every(tiny_kg):
+    """K local epochs between Reduces: grouping the rounds into blocks of
+    one round vs all rounds in one block is still bit-identical."""
+    kw = dict(model="transe", paradigm="sgd", backend="vmap",
+              merge_every=2, epochs=6)
+    r2 = _fit_device(tiny_kg, block_epochs=2, **kw)
+    r6 = _fit_device(tiny_kg, block_epochs=6, **kw)
+    _assert_identical(r2, r6)
+
+
+# ---------------------------------------------------------------------------
+# The schedule actually trains / actually changes the trajectory
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paradigm", ["sgd", "bgd"])
+def test_device_pipeline_learns(tiny_kg, paradigm):
+    res = _fit_device(
+        tiny_kg, model="transe", paradigm=paradigm, backend="vmap",
+        n_workers=4, epochs=8, block_epochs=8, dim=16)
+    assert res.loss_history[-1] < res.loss_history[0], res.loss_history
+
+
+def test_merge_every_defers_reduces(tiny_kg):
+    """K=2 runs a different (locally-drifting) trajectory than K=1, and
+    still learns — the new scenario the scanned driver enables."""
+    r1 = _fit_device(tiny_kg, model="transe", paradigm="sgd",
+                     backend="vmap", epochs=6, block_epochs=6, merge_every=1)
+    r2 = _fit_device(tiny_kg, model="transe", paradigm="sgd",
+                     backend="vmap", epochs=6, block_epochs=6, merge_every=2)
+    assert not np.array_equal(
+        np.asarray(r1.params["ent"]), np.asarray(r2.params["ent"]))
+    assert r2.loss_history[-1] < r2.loss_history[0], r2.loss_history
+
+
+def test_callback_fires_at_block_boundaries(tiny_kg):
+    calls = []
+    _fit_device(tiny_kg, model="transe", paradigm="sgd", backend="vmap",
+                epochs=6, block_epochs=2,
+                callback=lambda e, l: calls.append((e, l)))
+    assert [e for e, _ in calls] == [1, 3, 5]
+    assert all(np.isfinite(l) for _, l in calls)
+
+
+def test_device_history_matches_host_length_and_finite(tiny_kg):
+    res = _fit_device(tiny_kg, model="distmult", paradigm="bgd",
+                      backend="vmap", epochs=5, block_epochs=2)
+    assert len(res.loss_history) == 5
+    assert np.all(np.isfinite(res.loss_history))
+
+
+# ---------------------------------------------------------------------------
+# Validation
+# ---------------------------------------------------------------------------
+
+def test_schedule_requires_device_pipeline():
+    with pytest.raises(ValueError, match="pipeline='device'"):
+        mapreduce.MapReduceConfig(
+            pipeline="host", schedule=mapreduce.EpochSchedule(block_epochs=4))
+
+
+def test_merge_every_requires_sgd():
+    with pytest.raises(ValueError, match="SGD-paradigm"):
+        mapreduce.MapReduceConfig(
+            paradigm="bgd", pipeline="device",
+            schedule=mapreduce.EpochSchedule(block_epochs=4, merge_every=2))
+
+
+def test_block_must_be_multiple_of_merge_every():
+    with pytest.raises(ValueError, match="multiple of"):
+        mapreduce.EpochSchedule(block_epochs=3, merge_every=2)
+
+
+def test_epochs_must_be_multiple_of_merge_every(tiny_kg):
+    with pytest.raises(ValueError, match="multiple of"):
+        _fit_device(tiny_kg, model="transe", paradigm="sgd", backend="vmap",
+                    epochs=5, block_epochs=2, merge_every=2)
+
+
+def test_bad_pipeline_name_rejected():
+    with pytest.raises(ValueError, match="bad pipeline"):
+        mapreduce.MapReduceConfig(pipeline="offload")
+
+
+# ---------------------------------------------------------------------------
+# Batching balance rule (strict/warn) + on-device batch determinism
+# ---------------------------------------------------------------------------
+
+def test_train_warns_once_on_remainder(tiny_kg, tiny_tcfg):
+    cfg = mapreduce.MapReduceConfig(
+        n_workers=2, backend="vmap", batch_size=64)   # 1125 % 64 != 0
+    with pytest.warns(UserWarning, match="does not divide the per-worker"):
+        mapreduce.train(tiny_kg, tiny_tcfg, cfg, epochs=1, seed=0)
+
+
+def test_train_strict_batching_raises(tiny_kg, tiny_tcfg):
+    cfg = mapreduce.MapReduceConfig(
+        n_workers=2, backend="vmap", batch_size=64, strict_batching=True)
+    with pytest.raises(ValueError, match="does not divide the per-worker"):
+        mapreduce.train(tiny_kg, tiny_tcfg, cfg, epochs=1, seed=0)
+
+
+def test_no_warning_when_batch_divides(tiny_kg, tiny_tcfg):
+    import warnings as _w
+
+    cfg = mapreduce.MapReduceConfig(
+        n_workers=2, backend="vmap", batch_size=75)   # 1125 % 75 == 0
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        mapreduce.train(tiny_kg, tiny_tcfg, cfg, epochs=1, seed=0)
+
+
+def test_device_batches_deterministic_and_cover_split(tiny_kg):
+    import jax.numpy as jnp
+
+    part = jnp.asarray(kg_lib.partition_balanced(0, tiny_kg.train, 2))
+    key = jax.random.PRNGKey(3)
+    a = kg_lib.device_epoch_batches(key, part, 64)
+    b = kg_lib.device_epoch_batches(key, part, 64)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # different key -> different permutation
+    c = kg_lib.device_epoch_batches(jax.random.PRNGKey(4), part, 64)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    # shape/remainder rule matches the host path
+    W, N_w, _ = part.shape
+    assert a.shape == (W, N_w // 64, 64, 3)
+    # every batch row comes from that worker's split
+    for w in range(W):
+        split = {tuple(t) for t in np.asarray(part[w]).tolist()}
+        rows = np.asarray(a[w]).reshape(-1, 3)
+        assert all(tuple(t) in split for t in rows[:64].tolist())
