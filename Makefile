@@ -2,13 +2,19 @@
 # local runs, and future CI all use the tier-1 command from ROADMAP.md.
 PY ?= python
 
-.PHONY: test test-fast quickstart bench
+.PHONY: test test-fast test-slow quickstart bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
-test-fast:
-	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
+# kept as an alias: pyproject addopts now deselects `slow` from every
+# default run, so tier-1 `test` IS the fast selection
+test-fast: test
+
+# The cross-product suites tier-1 skips (device-eval parity matrix,
+# pipeline block-invariance matrix) — what the CI slow-suites job runs.
+test-slow:
+	PYTHONPATH=src $(PY) -m pytest -q -m slow
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py

@@ -1,0 +1,96 @@
+"""Host vs device evaluation-engine throughput (queries/sec) on entity
+inference — the perf claim of core/eval_device.py (BENCH_eval.json).
+
+Entity inference is the eval wall: every test triplet scores all E entities
+on both sides, raw + filtered.  The host reference pays, per chunk, a jit
+dispatch and a device->host score-matrix transfer, then walks the filtered
+known candidates in python per query.  The device engine runs the whole
+task as one compiled scan with the filtered correction as an on-device
+gather over the KG's padded candidate masks, the query axis sharded over W
+workers — so the gap measured here is dispatch + transfer + python
+filtering, exactly the per-query host work the engine removes.
+
+Steady-state measurement, same discipline as bench_pipeline: warm-up call
+absorbs compilation (and builds the cached known-index / candidate masks —
+one-time setup for either engine), then the median of REPEATS timed runs.
+A query = one test triplet (both ranking sides, raw + filtered metrics).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import eval_device, kg_eval
+from repro.core.models import KGConfig, get_model
+from repro.data import kg as kg_lib
+
+REPEATS = 3        # measurements per cell; the median is reported
+ITERS = 10         # eval calls per measurement (one call is only a few ms)
+DIM = 32
+CHUNK = 256
+WORKER_GRID = (1, 2, 4, 8)
+
+
+def build():
+    # same small-to-medium regime as bench_pipeline: big enough that the
+    # (B, E) scoring is real work, small enough that the host loop's
+    # per-chunk dispatch + per-query python filtering stay a measurable
+    # fraction — the regime "evaluate after every Reduce round" lives in
+    return kg_lib.synthetic_kg(1, n_entities=1000, n_relations=10,
+                               n_triplets=4000)
+
+
+def _median_rate(fn, n_queries: int) -> float:
+    fn()                                  # warm-up: compile + build caches
+    rates = []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        for _ in range(ITERS):
+            fn()
+        rates.append(ITERS * n_queries / (time.perf_counter() - t0))
+    return float(np.median(rates))
+
+
+def run(verbose: bool = True, model: str = "transe"):
+    graph = build()
+    kgm = get_model(model)
+    kcfg = KGConfig(n_entities=graph.n_entities,
+                    n_relations=graph.n_relations, dim=DIM)
+    params = kgm.init_params(jax.random.PRNGKey(0), kcfg)
+    test = graph.test
+    known = graph.known_set()
+    known_index = graph.known_index()
+    masks = graph.eval_filter_candidates()
+
+    def host():
+        kg_eval.entity_inference(
+            params, test, "l1", known, model=kgm, known_index=known_index)
+
+    host_qps = _median_rate(host, len(test))
+
+    rows = []
+    for W in WORKER_GRID:
+        def device():
+            eval_device.entity_inference_device(
+                params, test, "l1", masks, model=kgm, chunk=CHUNK,
+                n_workers=W)
+
+        device_qps = _median_rate(device, len(test))
+        row = {
+            "model": model,
+            "task": "entity_inference_filtered",
+            "workers": W,
+            "host_queries_per_s": round(host_qps, 1),
+            "device_queries_per_s": round(device_qps, 1),
+            "device_speedup": round(device_qps / host_qps, 2),
+        }
+        rows.append(row)
+        if verbose:
+            print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -10,14 +10,15 @@ import time
 
 
 # static so --help / bad-flag errors don't pay the jax import chain
-SUITE_NAMES = ("kernels", "convergence", "speedup", "strategies", "pipeline")
+SUITE_NAMES = ("kernels", "convergence", "speedup", "strategies", "pipeline",
+               "eval")
 
 
 def suites() -> dict:
     """Name -> run callable for every benchmark module (the single registry
     run_all.py reuses)."""
-    from benchmarks import (bench_convergence, bench_kernels, bench_pipeline,
-                            bench_speedup, bench_strategies)
+    from benchmarks import (bench_convergence, bench_eval, bench_kernels,
+                            bench_pipeline, bench_speedup, bench_strategies)
 
     return {
         "kernels": bench_kernels.run,
@@ -25,6 +26,7 @@ def suites() -> dict:
         "speedup": bench_speedup.run,
         "strategies": bench_strategies.run,
         "pipeline": bench_pipeline.run,
+        "eval": bench_eval.run,
     }
 
 

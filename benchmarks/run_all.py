@@ -4,9 +4,11 @@ writes JSON artifacts at the repo root so the numbers accumulate across PRs.
     PYTHONPATH=src python -m benchmarks.run_all [--model transe] [--full]
 
 Always runs the pipeline bench (host vs device epochs/sec, W in {1,2,4,8},
-both paradigms) and writes ``BENCH_pipeline.json``.  ``--full`` additionally
-runs the printed-only suites (strategies / speedup / kernels / convergence)
-via ``benchmarks.run``.
+both paradigms -> ``BENCH_pipeline.json``) and the eval bench (host vs
+device eval-engine queries/sec on filtered entity inference, W in {1,2,4,8}
+-> ``BENCH_eval.json``).  ``--full`` additionally runs the printed-only
+suites (strategies / speedup / kernels / convergence) via
+``benchmarks.run``.
 """
 from __future__ import annotations
 
@@ -16,29 +18,42 @@ import platform
 import time
 
 
+def _write(payload: dict, out: str) -> None:
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out}", flush=True)
+
+
+def _env() -> dict:
+    import jax
+
+    return {
+        "date": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "jax": jax.__version__,
+        "devices": [str(d) for d in jax.devices()],
+        "platform": platform.platform(),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="transe")
     ap.add_argument("--out", default="BENCH_pipeline.json")
+    ap.add_argument("--eval-out", default="BENCH_eval.json")
     ap.add_argument("--full", action="store_true",
                     help="also run the printed-only benchmark suites")
     args = ap.parse_args()
 
-    import jax
-
-    from benchmarks import bench_pipeline
+    from benchmarks import bench_eval, bench_pipeline
 
     print("== bench:pipeline ==", flush=True)
     t0 = time.time()
     rows = bench_pipeline.run(verbose=True, model=args.model)
     print(f"== bench:pipeline done ({time.time() - t0:.0f}s) ==", flush=True)
-
-    payload = {
+    _write({
         "bench": "pipeline",
-        "date": time.strftime("%Y-%m-%d %H:%M:%S"),
-        "jax": jax.__version__,
-        "devices": [str(d) for d in jax.devices()],
-        "platform": platform.platform(),
+        **_env(),
         "config": {
             "epochs_per_cell": bench_pipeline.EPOCHS,
             "dim": bench_pipeline.DIM,
@@ -47,17 +62,31 @@ def main() -> None:
                      "n_triplets=4000)",
         },
         "rows": rows,
-    }
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    print(f"wrote {args.out}", flush=True)
+    }, args.out)
+
+    print("== bench:eval ==", flush=True)
+    t0 = time.time()
+    eval_rows = bench_eval.run(verbose=True, model=args.model)
+    print(f"== bench:eval done ({time.time() - t0:.0f}s) ==", flush=True)
+    _write({
+        "bench": "eval",
+        **_env(),
+        "config": {
+            "repeats": bench_eval.REPEATS,
+            "iters": bench_eval.ITERS,
+            "dim": bench_eval.DIM,
+            "chunk": bench_eval.CHUNK,
+            "graph": "synthetic_kg(1, n_entities=1000, n_relations=10, "
+                     "n_triplets=4000)",
+        },
+        "rows": eval_rows,
+    }, args.eval_out)
 
     if args.full:
         from benchmarks import run as run_mod
 
         for name, fn in run_mod.suites().items():
-            if name != "pipeline":            # already ran (recorded) above
+            if name not in ("pipeline", "eval"):   # already ran (recorded)
                 run_mod.run_suite(name, fn)
 
 

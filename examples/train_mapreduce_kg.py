@@ -31,6 +31,11 @@ def main():
     ap.add_argument("--merge-every", type=int, default=1,
                     help="device pipeline, sgd settings: local epochs "
                          "between Reduce merges")
+    ap.add_argument("--eval-engine", default="host",
+                    choices=["host", "device"],
+                    help="'device' = compiled batched eval engine "
+                         "(identical metrics, faster; query axis sharded "
+                         "over --workers)")
     args = ap.parse_args()
 
     pipeline_kw = {}
@@ -63,7 +68,9 @@ def main():
             backend="vmap", batch_size=256,
             dim=args.dim, margin=1.0, norm="l1", learning_rate=0.05,
             epochs=args.epochs, seed=0, **kw)
-        m = kg_api.evaluate(res.params, args.model, graph)
+        eval_kw = ({"engine": "device", "n_workers": args.workers}
+                   if args.eval_engine == "device" else {})
+        m = kg_api.evaluate(res.params, args.model, graph, **eval_kw)
         ef = m["entity_filtered"]
         results[name] = (res.loss_history[-1], ef, time.time() - t0)
         print(f"{name:26s} loss={res.loss_history[-1]:.4f} "

@@ -8,6 +8,9 @@ want the top-level `repro.kg` facade."""
 from repro.core import eval as kg_eval  # noqa: F401  (eval is a builtin name)
 from repro.core import local_sgd, mapreduce, merge, models, negative, transe  # noqa: F401
 
+# repro.core.eval_device is imported lazily by evaluate_all(engine="device")
+# — not eagerly here, so host-only consumers don't pay for it.
+
 __all__ = [
     "models",
     "transe",

@@ -7,7 +7,13 @@ TransH, DistMult and any future registered model share one protocol
 implementation.  ``model`` defaults to ``"transe"`` everywhere for
 backward compatibility.
 
-This is the *reference* (pure-jnp batched) implementation.  The TransE
+This module is the **host** engine: the *reference* implementation the
+device engine is proved against.  It scores candidates in jitted chunks but
+keeps the protocol host-side — python loop over chunks, per-query filtered
+candidate walks, one dispatch per chunk.  Its numbers are frozen (the
+parity + golden suites in tests/test_eval_device.py pin them); build speed
+work goes into ``core/eval_device.py``, the fully-batched device-resident
+engine that ``evaluate_all(engine="device")`` routes to.  The TransE
 entity-inference hot loop also exists as a Pallas TPU kernel
 (``kernels/rank_topk.py``); tests cross-check the two.
 """
@@ -78,13 +84,25 @@ def entity_inference(
     known: Optional[set] = None,
     batch: int = 128,
     model: "str | KGModel" = "transe",
-) -> Dict[str, RankMetrics]:
+    known_index: Optional[tuple] = None,
+    return_ranks: bool = False,
+) -> Dict[str, object]:
     """Link prediction: for every test triplet, rank the gold tail among all
     entities substituted as tail, and the gold head likewise.  Returns raw
     and (if ``known`` given) filtered metrics, averaged over both sides —
-    the paper's 'entity inference' task."""
+    the paper's 'entity inference' task.
+
+    ``known_index`` is the prebuilt ``(by_hr, by_rt)`` group index from
+    ``KG.known_index()`` — pass it to skip the per-``known``-set rebuild
+    (``evaluate_all`` does).  ``return_ranks=True`` additionally returns the
+    per-query rank vectors (``"raw_ranks"`` / ``"filtered_ranks"``, each a
+    dict with ``"tail"``/``"head"`` arrays in test order) — the arrays the
+    device-engine parity suite compares exactly."""
     model = get_model(model)
-    raw_ranks, filt_ranks = [], []
+    if known is not None and known_index is None:
+        known_index = _known_index(known)
+    raw_ranks = {"tail": [], "head": []}
+    filt_ranks = {"tail": [], "head": []}
 
     for i in range(0, len(test), batch):
         chunk = test[i : i + batch]
@@ -96,31 +114,43 @@ def entity_inference(
             gold = chunk[:, 2] if side == "tail" else chunk[:, 0]
             gold_scores = scores[np.arange(len(chunk)), gold]
             raw = 1 + (scores < gold_scores[:, None]).sum(axis=1)
-            raw_ranks.append(raw)
+            raw_ranks[side].append(raw)
             if known is not None:
+                by_hr, by_rt = known_index
                 filt = raw.copy()
                 for j, (hh, rr, tt) in enumerate(chunk):
                     if side == "tail":
                         better = [
-                            e for e in _known_tails(known, hh, rr)
+                            e for e in by_hr.get((hh, rr), ())
                             if e != tt and scores[j, e] < gold_scores[j]
                         ]
                     else:
                         better = [
-                            e for e in _known_heads(known, rr, tt)
+                            e for e in by_rt.get((rr, tt), ())
                             if e != hh and scores[j, e] < gold_scores[j]
                         ]
                     filt[j] = raw[j] - len(better)
-                filt_ranks.append(filt)
+                filt_ranks[side].append(filt)
 
-    out = {"raw": _metrics_from_ranks(np.concatenate(raw_ranks))}
+    raw_cat = {s: np.concatenate(raw_ranks[s]) for s in ("tail", "head")}
+    out: Dict[str, object] = {
+        "raw": _metrics_from_ranks(
+            np.concatenate([raw_cat["tail"], raw_cat["head"]]))
+    }
     if known is not None:
-        out["filtered"] = _metrics_from_ranks(np.concatenate(filt_ranks))
+        filt_cat = {s: np.concatenate(filt_ranks[s]) for s in ("tail", "head")}
+        out["filtered"] = _metrics_from_ranks(
+            np.concatenate([filt_cat["tail"], filt_cat["head"]]))
+    if return_ranks:
+        out["raw_ranks"] = raw_cat
+        if known is not None:
+            out["filtered_ranks"] = filt_cat
     return out
 
 
-# Known-triplet indices for filtered metrics (built lazily, cached on the set
-# object's id — the set itself is immutable for our purposes).
+# Fallback known-triplet index for callers passing a bare ``known`` set
+# (cached on the set object's id).  ``evaluate_all`` never hits this: it
+# passes ``KG.known_index()``, the same structure cached on the KG instance.
 _KNOWN_CACHE: Dict[int, tuple] = {}
 
 
@@ -135,14 +165,6 @@ def _known_index(known: set):
         cached = (by_hr, by_rt)
         _KNOWN_CACHE[id(known)] = cached
     return cached
-
-
-def _known_tails(known: set, h: int, r: int) -> list:
-    return _known_index(known)[0].get((h, r), [])
-
-
-def _known_heads(known: set, r: int, t: int) -> list:
-    return _known_index(known)[1].get((r, t), [])
 
 
 def relation_prediction(
@@ -180,22 +202,49 @@ def triplet_classification(
     Wang et al. 2014).  Thresholds work for any real-valued energy, so
     similarity models (negative energies) need no special casing."""
     model = get_model(model)
-    key = jax.random.PRNGKey(seed)
-    k_v, k_t = jax.random.split(key)
-    valid_neg = np.asarray(
-        negative.corrupt_unif(k_v, jnp.asarray(valid), n_entities)
-    )
-    test_neg = np.asarray(
-        negative.corrupt_unif(k_t, jnp.asarray(test), n_entities)
-    )
+    valid_neg, test_neg = _tc_negatives(valid, test, n_entities, seed)
 
     def scores(tr):
         return np.asarray(model.energy(params, jnp.asarray(tr), norm))
 
     sv_pos, sv_neg = scores(valid), scores(valid_neg)
     st_pos, st_neg = scores(test), scores(test_neg)
+    return _threshold_accuracy(
+        sv_pos, sv_neg, st_pos, st_neg, valid, valid_neg, test, test_neg,
+        int(params["rel"].shape[0]))
 
-    n_rel = int(params["rel"].shape[0])
+
+def _tc_negatives(
+    valid: np.ndarray, test: np.ndarray, n_entities: int, seed: int
+) -> tuple:
+    """Corrupted valid/test counterparts for triplet classification — the
+    single definition of the key-split order, shared by both eval engines
+    (the exact-parity contract depends on identical draws)."""
+    k_v, k_t = jax.random.split(jax.random.PRNGKey(seed))
+    valid_neg = np.asarray(
+        negative.corrupt_unif(k_v, jnp.asarray(valid), n_entities)
+    )
+    test_neg = np.asarray(
+        negative.corrupt_unif(k_t, jnp.asarray(test), n_entities)
+    )
+    return valid_neg, test_neg
+
+
+def _threshold_accuracy(
+    sv_pos: np.ndarray,
+    sv_neg: np.ndarray,
+    st_pos: np.ndarray,
+    st_neg: np.ndarray,
+    valid: np.ndarray,
+    valid_neg: np.ndarray,
+    test: np.ndarray,
+    test_neg: np.ndarray,
+    n_rel: int,
+) -> float:
+    """Per-relation threshold fit on valid scores + accuracy on test scores —
+    the host-side tail of triplet classification, shared by both eval
+    engines (the engines differ only in how the four score vectors are
+    computed)."""
     thresholds = np.zeros((n_rel,), np.float64)
     global_scores = np.concatenate([sv_pos, sv_neg])
     global_labels = np.concatenate(
@@ -238,11 +287,49 @@ def evaluate_all(
     norm: str = "l1",
     filtered: bool = True,
     model: "str | KGModel" = "transe",
+    engine: str = "host",
+    **engine_kw,
 ) -> Dict[str, object]:
-    """All three paper tasks in one call (used by ``repro.kg.evaluate``)."""
+    """The paper's full evaluation protocol — entity inference (raw +
+    filtered link prediction over both sides), relation prediction, and
+    triplet classification — in one call, for any registered model.
+
+    Two engines compute identical numbers (the parity suite in
+    tests/test_eval_device.py proves rank-for-rank equality):
+
+      * ``engine="host"`` — this module's reference implementation: jitted
+        chunk scoring with a host-side protocol loop and per-query filtered
+        candidate walks.  Frozen; the baseline everything is proved against.
+      * ``engine="device"`` — ``core/eval_device.py``: the whole task runs
+        as one compiled computation per task — ``lax.scan`` over query
+        chunks, filtering via the ``KG``'s precomputed padded candidate
+        masks, ranks extracted on device, and the query axis optionally
+        sharded over workers (``n_workers`` / ``backend`` / ``mesh`` in
+        ``engine_kw``; see ``eval_device.evaluate_all_device``).  This is
+        the engine that makes evaluate-after-every-Reduce affordable.
+
+    Filtering uses ``kg.known_set()`` / ``kg.known_index()`` /
+    ``kg.eval_filter_candidates()`` — all built once and cached on the KG
+    instance.  Returns a dict of metric rows keyed ``entity_raw``,
+    ``entity_filtered`` (when ``filtered``), ``relation_prediction``, and
+    ``triplet_classification_acc``; used by ``repro.kg.evaluate``."""
+    if engine == "device":
+        from repro.core import eval_device
+
+        return eval_device.evaluate_all_device(
+            params, kg, norm=norm, filtered=filtered, model=model,
+            **engine_kw)
+    if engine != "host":
+        raise ValueError(f"bad engine {engine!r}: 'host' or 'device'")
+    if engine_kw:
+        raise ValueError(
+            f"engine options {sorted(engine_kw)} need engine='device' — the "
+            "host reference has no worker sharding or chunk scheduling")
     model = get_model(model)
     known = kg.known_set() if filtered else None
-    ent = entity_inference(params, kg.test, norm, known, model=model)
+    ent = entity_inference(
+        params, kg.test, norm, known, model=model,
+        known_index=kg.known_index() if filtered else None)
     rp = relation_prediction(params, kg.test, norm, model=model)
     tc = triplet_classification(
         params, kg.valid, kg.test, kg.n_entities, norm, model=model

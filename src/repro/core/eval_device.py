@@ -1,0 +1,414 @@
+"""Device-resident batched evaluation engine.
+
+The host reference (``core/eval.py``) certifies that MapReduce-merged
+embeddings retain single-thread quality, but it pays a python loop over
+query chunks, one jit dispatch per chunk, and a per-query python walk over
+the filtered known candidates — on large graphs the *eval* loop, not
+training, becomes the wall.  This module is the eval analogue of the PR 2
+scan-over-epochs training pipeline: each task runs as **one compiled
+computation** over the whole test split.
+
+How it works, per task:
+
+  * **Entity inference** — test queries are padded and laid out as
+    ``(W, S, C, 3)``: ``W`` workers (the same vmap / shard_map backends the
+    training engine uses, via ``parallel/util.worker_map``) each scan over
+    ``S`` chunks of ``C`` queries.  Every chunk scores all entities through
+    the model's ``candidate_energies`` (or, for models with
+    ``supports_fused_kernel`` on TPU, streams entity tiles through the
+    ``rank_topk`` Pallas kernel), extracts raw ranks on device, and applies
+    filtering by gathering candidate columns of the *same* score matrix at
+    the ``KG``'s precomputed padded known-candidate masks
+    (``KG.eval_filter_candidates`` — built once, placed on device once).
+    Only the final ``(Q,)`` rank vectors return to the host.
+  * **Relation prediction** — same scan machinery over
+    ``relation_energies``.
+  * **Triplet classification** — the four score vectors (valid/test,
+    pos/neg) are computed in one jitted dispatch; the per-relation
+    threshold fit is inherently host-side (tiny sorts) and shared with the
+    host engine (``eval._threshold_accuracy``), so both engines agree
+    exactly.
+
+Parity contract: with ``fused=False`` (the default off TPU) the device
+engine reads gold and candidate scores out of the same
+``candidate_energies`` matrix the host reference uses, so ranks — and hence
+metrics — are **identical**, not merely close (tests/test_eval_device.py).
+The fused kernel path recomputes gold distances in streaming form and may
+differ in the last ulp; it is opt-in off TPU and cross-checked with
+tolerance like the other kernel tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import eval as host_eval
+from repro.core.models import KGModel, Params, get_model
+from repro.parallel.util import worker_map
+
+RankMetrics = host_eval.RankMetrics
+
+DEFAULT_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# Layout: pad the query axis and split it (workers, scan steps, chunk rows)
+# ---------------------------------------------------------------------------
+
+def _layout(n: int, chunk: int, n_workers: int) -> Tuple[int, int, int]:
+    """(S, C, padded_n) for ``n`` queries: each of ``n_workers`` workers
+    scans ``S`` chunks of ``C`` rows; ``S * C * n_workers >= n``."""
+    C = max(1, chunk // n_workers)
+    step = C * n_workers
+    S = max(1, -(-n // step))
+    return S, C, S * step
+
+
+def _pad_rows(arr: np.ndarray, padded_n: int) -> np.ndarray:
+    """Pad axis 0 to ``padded_n`` by repeating row 0 (valid ids, scored
+    harmlessly, sliced off after the ranks come back)."""
+    if len(arr) == padded_n:
+        return arr
+    reps = np.broadcast_to(arr[:1], (padded_n - len(arr),) + arr.shape[1:])
+    return np.concatenate([arr, reps], axis=0)
+
+
+def _shard(arr: np.ndarray, W: int, S: int, C: int) -> jax.Array:
+    """(padded_n, ...) -> (W, S, C, ...), worker-major contiguous rows."""
+    return jnp.asarray(arr.reshape((W, S, C) + arr.shape[1:]))
+
+
+def _unshard(out: jax.Array, n: int) -> np.ndarray:
+    """(W, S, C) rank grid -> (n,) host vector in original query order."""
+    return np.asarray(out).reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# Entity inference
+# ---------------------------------------------------------------------------
+
+def _entity_chunk(
+    model: KGModel,
+    params: Params,
+    chunk: jax.Array,        # (C, 3)
+    cands: jax.Array,        # (C, P) padded candidate ids (pad id = E)
+    side: str,
+    norm: str,
+    fused: bool,
+) -> Tuple[jax.Array, jax.Array]:
+    """(raw, filtered) ranks for one chunk, fully on device.
+
+    The filtered rank subtracts known candidates (other than the gold
+    entity) scoring strictly better than the gold — the same predicate the
+    host reference applies per query, evaluated here as one gather over the
+    padded mask.  Pad ids point one past the entity table and read +inf, so
+    they never count."""
+    E = params["ent"].shape[0]
+    gold_ids = chunk[:, 2] if side == "tail" else chunk[:, 0]
+    if fused:
+        raw_counts = model.fused_rank_counts(params, chunk, side, norm=norm)
+        raw = 1 + raw_counts.astype(jnp.int32)
+        # candidate scores via substituted-triplet energies (the kernel
+        # never materializes the (C, E) matrix); gold recomputed the same way
+        col = 2 if side == "tail" else 0
+        subst = jnp.broadcast_to(
+            chunk[:, None, :], cands.shape + (3,)
+        ).at[:, :, col].set(jnp.minimum(cands, E - 1))
+        cvals = model.energy(params, subst, norm)
+        cvals = jnp.where(cands >= E, jnp.inf, cvals)
+        gold = model.energy(params, chunk, norm)
+    else:
+        scores = model.candidate_energies(params, chunk, side, norm)
+        gold = scores[jnp.arange(scores.shape[0]), gold_ids]
+        raw = 1 + jnp.sum(scores < gold[:, None], axis=1).astype(jnp.int32)
+        # pad ids (== E) gather a clamped column, then read +inf — no
+        # (C, E+1) copy of the score matrix inside the scan body
+        cvals = jnp.take_along_axis(
+            scores, jnp.minimum(cands, E - 1), axis=1)
+        cvals = jnp.where(cands >= E, jnp.inf, cvals)
+    better = (cvals < gold[:, None]) & (cands != gold_ids[:, None])
+    filt = raw - jnp.sum(better, axis=1).astype(jnp.int32)
+    # the fused path recomputes distances and can disagree with the raw
+    # count in the last ulp; ranks are >= 1 by construction on the exact path
+    return raw, jnp.maximum(filt, 1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("model", "norm", "backend", "axis_name", "fused", "mesh"),
+)
+def _entity_ranks_device(
+    model: KGModel,
+    params: Params,
+    queries: jax.Array,      # (W, S, C, 3)
+    tail_cands: jax.Array,   # (W, S, C, Pt)
+    head_cands: jax.Array,   # (W, S, C, Ph)
+    *,
+    norm: str,
+    backend: str,
+    mesh,
+    axis_name: str,
+    fused: bool,
+) -> Dict[str, jax.Array]:
+    """Both sides' (raw, filtered) rank grids, one compiled computation."""
+
+    def per_worker(params, q_w, tc_w, hc_w):
+        def body(_, inp):
+            q, tc, hc = inp
+            raw_t, filt_t = _entity_chunk(
+                model, params, q, tc, "tail", norm, fused)
+            raw_h, filt_h = _entity_chunk(
+                model, params, q, hc, "head", norm, fused)
+            return None, {
+                "tail_raw": raw_t, "tail_filtered": filt_t,
+                "head_raw": raw_h, "head_filtered": filt_h,
+            }
+
+        _, outs = jax.lax.scan(body, None, (q_w, tc_w, hc_w))
+        return outs          # each (S, C)
+
+    run = worker_map(
+        per_worker, backend=backend, mesh=mesh, axis_name=axis_name)
+    return run(params, queries, tail_cands, head_cands)
+
+
+def entity_ranks_device(
+    params: Params,
+    test: np.ndarray,
+    norm: str = "l1",
+    cand_masks: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+    *,
+    model: "str | KGModel" = "transe",
+    chunk: int = DEFAULT_CHUNK,
+    n_workers: int = 1,
+    backend: str = "vmap",
+    mesh=None,
+    fused: Optional[bool] = None,
+) -> Dict[str, np.ndarray]:
+    """Per-query entity-inference ranks from the device engine, in test
+    order: ``{"raw_ranks": {"tail", "head"}, "filtered_ranks": {...}}`` —
+    the exact arrays ``host_eval.entity_inference(return_ranks=True)``
+    produces (``filtered_ranks`` only when ``cand_masks`` is given)."""
+    model = get_model(model)
+    fused = _resolve_fused(model, fused)
+    test = np.asarray(test, np.int32)
+    Q = len(test)
+    E = params["ent"].shape[0]
+    S, C, Qp = _layout(Q, chunk, n_workers)
+    W = n_workers
+
+    if cand_masks is None:
+        # pad-only masks: zero filtering work, filtered == raw (dropped
+        # from the returned dict below)
+        empty = np.full((Q, 1), E, np.int32)
+        tails, heads = empty, empty
+    else:
+        tails, heads = cand_masks
+    q = _shard(_pad_rows(test, Qp), W, S, C)
+    tc = _shard(_pad_rows(np.asarray(tails, np.int32), Qp), W, S, C)
+    hc = _shard(_pad_rows(np.asarray(heads, np.int32), Qp), W, S, C)
+
+    outs = _entity_ranks_device(
+        model, params, q, tc, hc, norm=norm, backend=backend, mesh=mesh,
+        axis_name="workers", fused=fused)
+    out = {"raw_ranks": {
+        "tail": _unshard(outs["tail_raw"], Q),
+        "head": _unshard(outs["head_raw"], Q),
+    }}
+    if cand_masks is not None:
+        out["filtered_ranks"] = {
+            "tail": _unshard(outs["tail_filtered"], Q),
+            "head": _unshard(outs["head_filtered"], Q),
+        }
+    return out
+
+
+def entity_inference_device(
+    params: Params,
+    test: np.ndarray,
+    norm: str = "l1",
+    cand_masks: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+    *,
+    model: "str | KGModel" = "transe",
+    chunk: int = DEFAULT_CHUNK,
+    n_workers: int = 1,
+    backend: str = "vmap",
+    mesh=None,
+    fused: Optional[bool] = None,
+) -> Dict[str, RankMetrics]:
+    """Device-engine entity inference: raw (and, with ``cand_masks``,
+    filtered) metrics identical to the host reference."""
+    ranks = entity_ranks_device(
+        params, test, norm, cand_masks, model=model, chunk=chunk,
+        n_workers=n_workers, backend=backend, mesh=mesh, fused=fused)
+    raw = ranks["raw_ranks"]
+    out = {"raw": host_eval._metrics_from_ranks(
+        np.concatenate([raw["tail"], raw["head"]]))}
+    if cand_masks is not None:
+        filt = ranks["filtered_ranks"]
+        out["filtered"] = host_eval._metrics_from_ranks(
+            np.concatenate([filt["tail"], filt["head"]]))
+    return out
+
+
+def _resolve_fused(model: KGModel, fused: Optional[bool]) -> bool:
+    """``fused=None`` -> the Pallas ``rank_topk`` path iff the model has one
+    and we are on TPU (kernels/ops dispatch rule).  Off TPU the pure-jnp
+    path is both faster (no interpret-mode overhead) and exactly
+    host-parity.  An explicit ``fused=True`` is a hard request: models
+    without a kernel raise instead of silently downgrading."""
+    if fused is None:
+        from repro.kernels import ops
+
+        return ops.fused_eval_available(model)
+    if fused and not model.supports_fused_kernel:
+        raise ValueError(
+            f"fused=True but model {model.name!r} has no fused Pallas "
+            "kernel (supports_fused_kernel is False) — drop fused or "
+            "implement fused_rank_counts")
+    return bool(fused)
+
+
+# ---------------------------------------------------------------------------
+# Relation prediction
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("model", "norm", "backend", "axis_name", "mesh"))
+def _relation_ranks_device(
+    model: KGModel,
+    params: Params,
+    queries: jax.Array,      # (W, S, C, 3)
+    *,
+    norm: str,
+    backend: str,
+    mesh,
+    axis_name: str,
+) -> jax.Array:
+    def per_worker(params, q_w):
+        def body(_, q):
+            scores = model.relation_energies(params, q, norm)
+            gold = scores[jnp.arange(scores.shape[0]), q[:, 1]]
+            return None, 1 + jnp.sum(
+                scores < gold[:, None], axis=1).astype(jnp.int32)
+
+        _, ranks = jax.lax.scan(body, None, q_w)
+        return ranks
+
+    run = worker_map(
+        per_worker, backend=backend, mesh=mesh, axis_name=axis_name)
+    return run(params, queries)
+
+
+def relation_prediction_device(
+    params: Params,
+    test: np.ndarray,
+    norm: str = "l1",
+    *,
+    model: "str | KGModel" = "transe",
+    chunk: int = 512,
+    n_workers: int = 1,
+    backend: str = "vmap",
+    mesh=None,
+    return_ranks: bool = False,
+):
+    """Rank the gold relation among all relations, scanned on device."""
+    model = get_model(model)
+    test = np.asarray(test, np.int32)
+    Q = len(test)
+    S, C, Qp = _layout(Q, chunk, n_workers)
+    q = _shard(_pad_rows(test, Qp), n_workers, S, C)
+    ranks = _unshard(
+        _relation_ranks_device(
+            model, params, q, norm=norm, backend=backend, mesh=mesh,
+            axis_name="workers"),
+        Q)
+    metrics = host_eval._metrics_from_ranks(ranks)
+    return (metrics, ranks) if return_ranks else metrics
+
+
+# ---------------------------------------------------------------------------
+# Triplet classification
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("model", "norm"))
+def _tc_scores(model: KGModel, params: Params, triplets: jax.Array, norm: str):
+    return model.energy(params, triplets, norm)
+
+
+def triplet_classification_device(
+    params: Params,
+    valid: np.ndarray,
+    test: np.ndarray,
+    n_entities: int,
+    norm: str = "l1",
+    seed: int = 0,
+    model: "str | KGModel" = "transe",
+) -> float:
+    """Triplet classification with device-batched scoring: the four score
+    vectors come from one jitted dispatch over the concatenated arrays;
+    corruption draws and threshold fitting are byte-identical to the host
+    engine (shared ``_tc_negatives`` / ``_threshold_accuracy``)."""
+    model = get_model(model)
+    valid_neg, test_neg = host_eval._tc_negatives(
+        valid, test, n_entities, seed)
+    sections = np.cumsum([len(valid), len(valid_neg), len(test)])
+    allt = jnp.asarray(
+        np.concatenate([valid, valid_neg, test, test_neg], axis=0))
+    scores = np.asarray(_tc_scores(model, params, allt, norm))
+    sv_pos, sv_neg, st_pos, st_neg = np.split(scores, sections)
+    return host_eval._threshold_accuracy(
+        sv_pos, sv_neg, st_pos, st_neg, valid, valid_neg, test, test_neg,
+        int(params["rel"].shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# The full protocol
+# ---------------------------------------------------------------------------
+
+def evaluate_all_device(
+    params: Params,
+    kg,
+    norm: str = "l1",
+    filtered: bool = True,
+    model: "str | KGModel" = "transe",
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    n_workers: int = 1,
+    backend: str = "vmap",
+    mesh=None,
+    fused: Optional[bool] = None,
+    max_fanout: Optional[int] = None,
+) -> Dict[str, object]:
+    """All three paper tasks on the device engine — same output dict as the
+    host ``evaluate_all`` (which dispatches here for ``engine="device"``).
+
+    ``chunk`` queries are scored per scan step, split over ``n_workers``
+    along the query axis (``backend="vmap"`` on one device,
+    ``"shard_map"`` over a real mesh axis — pass ``mesh``).  ``fused``
+    forces the Pallas ``rank_topk`` path on or off (default: auto).
+    ``max_fanout`` caps the padded filter-mask width
+    (``KG.eval_filter_candidates``); leave ``None`` for exact filtering."""
+    model = get_model(model)
+    masks = kg.eval_filter_candidates(max_fanout) if filtered else None
+    ent = entity_inference_device(
+        params, kg.test, norm, masks, model=model, chunk=chunk,
+        n_workers=n_workers, backend=backend, mesh=mesh, fused=fused)
+    rp = relation_prediction_device(
+        params, kg.test, norm, model=model, chunk=max(chunk, 512),
+        n_workers=n_workers, backend=backend, mesh=mesh)
+    tc = triplet_classification_device(
+        params, kg.valid, kg.test, kg.n_entities, norm, model=model
+    )
+    out = {
+        "entity_raw": ent["raw"].row(),
+        "relation_prediction": rp.row(),
+        "triplet_classification_acc": tc,
+    }
+    if filtered:
+        out["entity_filtered"] = ent["filtered"].row()
+    return out

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from typing import Dict, Iterator, Optional, Tuple
 
 import jax
@@ -42,10 +43,15 @@ class KG:
     valid: np.ndarray
     test: np.ndarray
 
-    # lazily built known-triplet set (see known_set); not part of the
-    # dataclass comparison/repr surface
+    # lazily built known-triplet structures (see known_set / known_index /
+    # eval_filter_candidates); not part of the dataclass comparison/repr
+    # surface
     _known: Optional[set] = dataclasses.field(
         default=None, repr=False, compare=False)
+    _known_index: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _filter_cands: Dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def all_triplets(self) -> np.ndarray:
@@ -61,6 +67,86 @@ class KG:
         if self._known is None:
             self._known = {tuple(t) for t in self.all_triplets.tolist()}
         return self._known
+
+    def known_index(self) -> tuple:
+        """``(by_hr, by_rt)`` group indices over :meth:`known_set`.
+
+        ``by_hr[(h, r)]`` is the sorted list of known tails of ``(h, r)``;
+        ``by_rt[(r, t)]`` the sorted known heads.  Built once and cached on
+        the instance — this is the structure both eval engines filter with
+        (the host reference walks the lists per query; the device engine
+        flattens them into the padded masks of
+        :meth:`eval_filter_candidates`)."""
+        if self._known_index is None:
+            by_hr: Dict[tuple, list] = {}
+            by_rt: Dict[tuple, list] = {}
+            for (h, r, t) in self.known_set():
+                by_hr.setdefault((h, r), []).append(t)
+                by_rt.setdefault((r, t), []).append(h)
+            for d in (by_hr, by_rt):
+                for k in d:
+                    d[k].sort()
+            self._known_index = (by_hr, by_rt)
+        return self._known_index
+
+    def eval_filter_candidates(
+        self, max_fanout: Optional[int] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Padded known-candidate id arrays for filtered ranking of the test
+        split: ``(tail_cands, head_cands)``, each ``(n_test, P)`` int32,
+        padded with ``n_entities`` (an out-of-table id the device engine maps
+        to +inf energy).
+
+        Row ``i`` of ``tail_cands`` holds the known tails of
+        ``(h_i, r_i)`` — the entities the filtered metric must not count
+        against query ``i`` — and ``head_cands`` likewise the known heads of
+        ``(r_i, t_i)``.  ``P`` is the largest group size (so no information
+        is lost by default); ``max_fanout`` caps it, trading exactness for a
+        smaller device-resident mask — truncated rows keep their first
+        ``max_fanout`` (sorted) candidates and the total dropped count is
+        surfaced once as a warning (filtered ranks of affected queries
+        become upper bounds).  Built once per ``max_fanout`` and cached on
+        the instance."""
+        if max_fanout not in self._filter_cands:
+            by_hr, by_rt = self.known_index()
+            tail_groups = [by_hr[(h, r)] for h, r, _ in self.test.tolist()]
+            head_groups = [by_rt[(r, t)] for _, r, t in self.test.tolist()]
+            tails, dropped_t = _pad_groups(
+                tail_groups, self.n_entities, max_fanout)
+            heads, dropped_h = _pad_groups(
+                head_groups, self.n_entities, max_fanout)
+            dropped = dropped_t + dropped_h
+            if dropped:
+                warnings.warn(
+                    f"max_fanout={max_fanout} truncates the filtered-known "
+                    f"candidate masks: {dropped} known candidates dropped "
+                    f"across {len(self.test)} test queries "
+                    f"({dropped_t} tail-side, {dropped_h} head-side) — "
+                    "filtered ranks of the affected queries become upper "
+                    "bounds.  Raise max_fanout (or leave it None) for exact "
+                    "filtering.", stacklevel=2)
+            self._filter_cands[max_fanout] = (tails, heads)
+        return self._filter_cands[max_fanout]
+
+
+def _pad_groups(
+    groups: list, pad_id: int, max_fanout: Optional[int]
+) -> Tuple[np.ndarray, int]:
+    """Dense ``(len(groups), P)`` int32 array from ragged id lists, padded
+    with ``pad_id``; returns the array and the count of ids dropped by the
+    ``max_fanout`` cap."""
+    widest = max((len(g) for g in groups), default=0)
+    P = widest if max_fanout is None else min(widest, max_fanout)
+    P = max(P, 1)
+    out = np.full((len(groups), P), pad_id, np.int32)
+    dropped = 0
+    for i, g in enumerate(groups):
+        n = len(g)
+        if n > P:
+            dropped += n - P
+            n = P
+        out[i, :n] = g[:n]
+    return out, dropped
 
 
 # ---------------------------------------------------------------------------

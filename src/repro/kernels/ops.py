@@ -154,6 +154,17 @@ def kg_margin_loss(
 # Entity-inference ranking (evaluation path)
 # ---------------------------------------------------------------------------
 
+def fused_eval_available(model) -> bool:
+    """True when entity ranking for ``model`` should stream through its
+    Pallas kernel on this backend: the model declares
+    ``supports_fused_kernel`` AND we are on TPU.  Off TPU the kernels only
+    run in interpret mode (slower than the batched jnp path and not
+    bit-identical to the eval reference), so the device eval engine's
+    ``fused=None`` auto mode keys off this."""
+    model = get_model(model)
+    return model.supports_fused_kernel and not _default_interpret()
+
+
 def entity_rank_counts(
     params,
     triplets: jax.Array,      # (B, 3)

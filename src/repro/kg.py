@@ -134,9 +134,20 @@ def evaluate(
     *,
     norm: str = "l1",
     filtered: bool = True,
+    engine: str = "host",
+    **engine_kw,
 ) -> dict:
     """All three paper tasks (entity inference, relation prediction, triplet
-    classification) for any registered model."""
+    classification) for any registered model.
+
+    ``engine="host"`` is the frozen reference protocol loop;
+    ``engine="device"`` runs each task as one compiled device-resident
+    computation with the query axis optionally sharded over workers —
+    identical numbers, benchmarked multiples faster (BENCH_eval.json).
+    Device-engine options ride in ``engine_kw``: ``n_workers``, ``backend``
+    ('vmap' | 'shard_map'), ``mesh``, ``chunk``, ``fused``, ``max_fanout``
+    — see ``repro.core.eval_device.evaluate_all_device``."""
     return kg_eval.evaluate_all(
-        params, kg, norm=norm, filtered=filtered, model=model
+        params, kg, norm=norm, filtered=filtered, model=model,
+        engine=engine, **engine_kw
     )

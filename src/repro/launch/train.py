@@ -62,6 +62,23 @@ def _run_kg(args) -> None:
     print(f"[{res.model}/{args.kg_paradigm}/{args.kg_pipeline}] final loss: "
           f"{res.loss_history[-1]:.4f} (start {res.loss_history[0]:.4f})")
 
+    if args.kg_eval_engine:
+        engine_kw = {}
+        if args.kg_eval_engine == "device":
+            # shard the query axis over the same worker count training used
+            engine_kw = dict(n_workers=args.kg_workers)
+        metrics = kg_api.evaluate(
+            res.params, res.model, graph, engine=args.kg_eval_engine,
+            **engine_kw)
+        print(f"eval ({args.kg_eval_engine} engine):")
+        for task in ("entity_raw", "entity_filtered", "relation_prediction"):
+            row = metrics.get(task)
+            if row:
+                print(f"  {task:20s} MR={row['mean_rank']:8.1f} "
+                      f"MRR={row['mrr']:.4f} hits@10={row['hits@10']:.3f}")
+        print(f"  triplet_classification_acc="
+              f"{metrics['triplet_classification_acc']:.4f}")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -86,6 +103,11 @@ def main(argv=None):
     ap.add_argument("--kg-merge-every", type=int, default=1,
                     help="device pipeline, sgd paradigm: local epochs "
                          "between Reduce merges")
+    ap.add_argument("--kg-eval-engine", default=None,
+                    choices=["host", "device"],
+                    help="run the three-task eval protocol after training: "
+                         "'host' = reference loop, 'device' = compiled "
+                         "batched engine sharded over --kg-workers")
     ap.add_argument("--reduced", action="store_true",
                     help="CPU-sized config of the same family")
     ap.add_argument("--steps", type=int, default=100)

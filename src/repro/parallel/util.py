@@ -34,6 +34,48 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
     )
 
 
+def worker_map(fn, *, backend: str, mesh=None, axis_name: str = "workers"):
+    """Lift ``fn(broadcast, *per_worker)`` over a leading worker axis.
+
+    The KG engine's two execution backends, as one combinator: ``vmap``
+    simulates the workers on a single device; ``shard_map`` places them on a
+    real mesh axis.  ``broadcast`` (a pytree, e.g. the embedding tables) is
+    replicated to every worker; each remaining argument carries a leading
+    ``(W, ...)`` axis that is split across workers.  Outputs regain the
+    leading ``W`` axis on both backends, so callers are backend-agnostic —
+    this is what the device eval engine shards the query axis with, and the
+    same contract ``core/mapreduce.py`` hand-rolls for training."""
+    if backend == "vmap":
+        def run(broadcast, *sharded):
+            return jax.vmap(lambda *xs: fn(broadcast, *xs))(*sharded)
+        return run
+    if backend != "shard_map":
+        raise ValueError(f"bad backend {backend!r}")
+    if mesh is None:
+        raise ValueError("shard_map backend needs a mesh")
+
+    def run(broadcast, *sharded):
+        W = sharded[0].shape[0]
+        M = mesh.shape[axis_name]
+        if W % M != 0:
+            raise ValueError(
+                f"worker axis of size {W} does not divide over mesh axis "
+                f"{axis_name!r} of size {M}")
+
+        # each shard holds W/M worker blocks; vmap over them so W may be
+        # any multiple of the mesh axis size (W == M leaves a 1-wide vmap)
+        def worker(broadcast, *xs):
+            return jax.vmap(lambda *ys: fn(broadcast, *ys))(*xs)
+
+        f = shard_map(
+            worker, mesh=mesh,
+            in_specs=(P(),) + (P(axis_name),) * len(sharded),
+            out_specs=P(axis_name), check_vma=False,
+        )
+        return f(broadcast, *sharded)
+    return run
+
+
 def _ambient_mesh():
     try:
         m = jax.sharding.get_abstract_mesh()

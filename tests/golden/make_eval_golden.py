@@ -1,0 +1,50 @@
+"""Regenerate tests/golden/eval_golden.json — the committed evaluate_all
+numbers the golden-regression test pins both eval engines to.
+
+    PYTHONPATH=src python tests/golden/make_eval_golden.py
+
+Only run this after an *intentional* change to the evaluation protocol
+(and say so in the PR): the whole point of the file is that accidental
+drift fails tests/test_eval_device.py::test_golden_metrics.
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax
+
+from repro.core import kg_eval
+from repro.core.models import KGConfig, get_model
+from repro.data import kg as kg_lib
+
+GRAPH = dict(seed=7, n_entities=120, n_relations=5, n_triplets=800)
+CASES = [
+    dict(model="transe", dim=12, params_seed=3),
+    dict(model="transh", dim=12, params_seed=3),
+    dict(model="distmult", dim=12, params_seed=3),
+]
+
+
+def main():
+    out = {"graph_note": "synthetic_kg kwargs shared by every case",
+           "cases": []}
+    graph = kg_lib.synthetic_kg(**GRAPH)
+    for case in CASES:
+        cfg = KGConfig(n_entities=graph.n_entities,
+                       n_relations=graph.n_relations, dim=case["dim"])
+        params = get_model(case["model"]).init_params(
+            jax.random.PRNGKey(case["params_seed"]), cfg)
+        metrics = kg_eval.evaluate_all(
+            params, graph, model=case["model"], engine="host")
+        out["cases"].append({**case, "graph": GRAPH, "metrics": metrics})
+    path = os.path.join(os.path.dirname(__file__), "eval_golden.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,9 @@ Run with 8 forced host devices (the parent test sets XLA_FLAGS).  Asserts:
   5. device pipeline (scan-over-epochs blocks): shard_map == vmap for both
      paradigms, incl. merge_every > 1 — the two backends derive identical
      per-worker fold_in keys, so batches/negatives match exactly
+  6. device eval engine: shard_map query sharding == vmap (exact ranks) at
+     W == mesh size AND W == 2x mesh size (multiple worker blocks per
+     shard), and a W that does not divide over the mesh axis raises
 Exit code 0 on success.
 """
 import dataclasses
@@ -172,8 +175,45 @@ def check_device_pipeline():
               "shard_map == vmap  OK")
 
 
+def check_device_eval():
+    from repro.core import eval_device
+    from repro.core.models import get_model
+
+    kg = kg_lib.synthetic_kg(0, n_entities=200, n_relations=5, n_triplets=2000)
+    tcfg = transe.TransEConfig(
+        n_entities=kg.n_entities, n_relations=kg.n_relations, dim=8)
+    model = get_model("transe")
+    params = transe.init_params(jax.random.PRNGKey(2), tcfg)
+    masks = kg.eval_filter_candidates()
+    mesh = jax.make_mesh((W,), ("workers",))
+
+    ref = eval_device.entity_ranks_device(
+        params, kg.test, "l1", masks, model=model, n_workers=W)
+    for workers in (W, 2 * W):       # 2W = two worker blocks per shard
+        got = eval_device.entity_ranks_device(
+            params, kg.test, "l1", masks, model=model, n_workers=workers,
+            backend="shard_map", mesh=mesh)
+        for grp in ("raw_ranks", "filtered_ranks"):
+            for side in ("tail", "head"):
+                np.testing.assert_array_equal(
+                    got[grp][side], ref[grp][side],
+                    err_msg=f"device eval W={workers} {grp}/{side}")
+        print(f"device eval W={workers}: shard_map == vmap (exact)  OK")
+
+    try:
+        eval_device.entity_ranks_device(
+            params, kg.test, "l1", masks, model=model, n_workers=W + 1,
+            backend="shard_map", mesh=mesh)
+    except ValueError as e:
+        assert "does not divide over mesh axis" in str(e), e
+        print("device eval W not dividing mesh axis raises  OK")
+    else:
+        raise AssertionError("indivisible worker count did not raise")
+
+
 if __name__ == "__main__":
     check_engine()
     check_outer_merge()
     check_device_pipeline()
+    check_device_eval()
     print("ALL MULTIDEVICE CHECKS PASSED")

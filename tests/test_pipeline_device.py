@@ -6,6 +6,10 @@ The acceptance bar: `block_epochs=1` and `block_epochs=E` must produce
 bit-identical params and loss history for every registered model x paradigm
 x backend — every per-epoch key is `fold_in`-derived from (seed, epoch), so
 how epochs are grouped into compiled blocks cannot matter.
+
+The full 12-cell invariance matrix is marked `slow` (run by the CI
+slow-suites job alongside the device-eval parity matrix); the tier-1 run
+keeps the merge_every invariance cell as its fast cross-section.
 """
 import jax
 import numpy as np
@@ -46,6 +50,7 @@ def _assert_identical(r1, r2):
 # Block-size invariance (the acceptance matrix)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("model", MODELS)
 @pytest.mark.parametrize("paradigm", ["sgd", "bgd"])
 @pytest.mark.parametrize("backend", ["vmap", "shard_map"])
