@@ -1,8 +1,8 @@
 # Single source of truth for how the suite is invoked: `make test` here,
-# local runs, and future CI all use the tier-1 command from ROADMAP.md.
+# local runs, and CI all use the tier-1 command from ROADMAP.md.
 PY ?= python
 
-.PHONY: test test-fast test-slow quickstart bench
+.PHONY: test test-fast test-slow quickstart bench bench-check lint golden
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -20,6 +20,23 @@ quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py
 
 # Recorded perf trajectory: writes BENCH_pipeline.json (host vs device
-# pipeline epochs/sec, W in {1,2,4,8}, both paradigms).
+# pipeline epochs/sec), BENCH_eval.json (eval-engine queries/sec), and
+# BENCH_trace.json (quality-vs-epoch curves + in-loop eval overhead).
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run_all
+
+# The CI bench-regression gate, runnable locally: quick profile into a
+# scratch dir, compared against the committed baselines (30% band).
+bench-check:
+	PYTHONPATH=src $(PY) -m benchmarks.run_all --quick --out-dir .bench-check
+	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
+		--baseline-dir . --fresh-dir .bench-check
+
+# Ruff's correctness rules (the CI lint job; format --check is advisory).
+lint:
+	ruff check .
+
+# Regenerate the committed golden eval numbers (CI fails on drift — only
+# run after an *intentional* protocol change, and say so in the PR).
+golden:
+	PYTHONPATH=src $(PY) tests/golden/make_eval_golden.py

@@ -53,7 +53,9 @@ def _median_rate(fn, n_queries: int) -> float:
     return float(np.median(rates))
 
 
-def run(verbose: bool = True, model: str = "transe"):
+def run(verbose: bool = True, model: str = "transe", quick: bool = False):
+    """``quick=True`` is the CI bench-regression cell: W in {1, 4} only
+    (same per-measurement work, rates comparable to the committed grid)."""
     graph = build()
     kgm = get_model(model)
     kcfg = KGConfig(n_entities=graph.n_entities,
@@ -71,7 +73,7 @@ def run(verbose: bool = True, model: str = "transe"):
     host_qps = _median_rate(host, len(test))
 
     rows = []
-    for W in WORKER_GRID:
+    for W in ((1, 4) if quick else WORKER_GRID):
         def device():
             eval_device.entity_inference_device(
                 params, test, "l1", masks, model=kgm, chunk=CHUNK,

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops, ref
+from repro.kernels import ref
 from repro.kernels.rank_topk import rank_counts
 from repro.kernels.transe_score import transe_score
 

@@ -1,0 +1,160 @@
+"""Quality-vs-epoch curves per merge strategy + in-loop eval overhead —
+the perf/quality claim of the training observability subsystem
+(core/trace.py, BENCH_trace.json).
+
+Two sections:
+
+  * **curves** — for each Reduce strategy (and the BGD paradigm as the
+    conflict-free reference), train with ``eval_every=EVAL_EVERY`` on the
+    device pipeline and record the filtered mean-rank / hits@10 trajectory
+    at every Reduce boundary.  This is the paper's quality-retention story
+    made visible *during* training: the strategies can be compared at
+    every merge round instead of only at the end.
+  * **overhead** — the cost of looking: steady-state wall-clock of W=4
+    device-pipeline training blocks with and without an in-loop device
+    eval at each boundary.  Both arms are hand-driven from pre-built
+    (jitted) functions with a warm-up pass absorbing compilation (the same
+    discipline as bench_pipeline), so ``overhead_pct`` is the marginal
+    cost of evaluate-at-every-boundary itself — the number that must stay
+    small (<25%) for "evaluate after every Reduce" to be a default, not a
+    luxury.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro import kg as kg_api
+from repro.core import eval_device, mapreduce
+from repro.core.models import get_model
+from repro.data import kg as kg_lib
+
+EPOCHS = 12        # total epochs per curve / overhead measurement
+EVAL_EVERY = 4     # Reduce-boundary evals per run (device pipeline, K=1)
+REPEATS = 5        # overhead measurements; the median is reported
+ITERS = 10         # calls per measurement (one call is a handful of ms)
+DIM = 32
+BATCH = 256
+WORKERS = 4
+STRATEGIES = ("average", "miniloss_perkey", "random")
+
+
+def build():
+    # the same small-to-medium regime as bench_pipeline / bench_eval: per
+    # boundary, training runs EVAL_EVERY compiled epochs and eval scores
+    # the full test split — both real work, neither dominated by dispatch
+    return kg_lib.synthetic_kg(1, n_entities=1000, n_relations=10,
+                               n_triplets=4000)
+
+
+def _curve_rows(graph, model: str, epochs: int, eval_every: int,
+                verbose: bool):
+    rows = []
+    settings = [("bgd", None)] + [("sgd", s) for s in STRATEGIES]
+    for paradigm, strategy in settings:
+        name = paradigm if strategy is None else f"sgd-{strategy}"
+        kw = {} if strategy is None else {"strategy": strategy}
+        res = kg_api.fit(
+            graph, model=model, paradigm=paradigm, n_workers=WORKERS,
+            backend="vmap", batch_size=BATCH, dim=DIM, learning_rate=0.05,
+            epochs=epochs, seed=0, pipeline="device", block_epochs=epochs,
+            eval_every=eval_every, **kw)
+        entries = [{
+            "epoch": e.epoch + 1,
+            "merge_round": e.merge_round,
+            "loss": round(e.loss, 4),
+            "mean_rank_filtered": round(
+                e.metrics["entity_filtered"]["mean_rank"], 2),
+            "hits10_filtered": round(
+                e.metrics["entity_filtered"]["hits@10"], 4),
+        } for e in res.trace.entries]
+        row = {"model": model, "setting": name, "workers": WORKERS,
+               "entries": entries}
+        rows.append(row)
+        if verbose:
+            curve = " ".join(
+                f"{e['epoch']}:{e['mean_rank_filtered']}" for e in entries)
+            print(f"curve {name}: {curve}", flush=True)
+    return rows
+
+
+def _overhead(graph, model: str, epochs: int, eval_every: int,
+              repeats: int, verbose: bool):
+    """Marginal wall-clock of in-loop eval at W=4, steady state.
+
+    The eval_every driver interleaves exactly two compiled pieces per
+    Reduce boundary: one ``block_fn`` call of ``eval_every`` epochs and one
+    full-protocol device eval.  Both are timed separately (median over
+    ``repeats`` measurements of ``ITERS`` calls — the usual steady-state
+    discipline; interleaved A/B whole-run timing drowns a few-ms delta in
+    scheduler noise on a shared CPU), and the overhead is their ratio:
+    the extra wall-clock of evaluating at every boundary, relative to
+    training without it."""
+    kgm = get_model(model)
+    kcfg, mcfg = kg_api.make_configs(
+        graph, model=model, paradigm="sgd", n_workers=WORKERS,
+        backend="vmap", batch_size=BATCH, dim=DIM, learning_rate=0.05,
+        pipeline="device", block_epochs=eval_every)
+    part = kg_lib.partition_balanced(0, graph.train, WORKERS)
+    block_fn = mapreduce.make_block_fn(
+        mcfg, kcfg, np.asarray(part), model=kgm, seed=0)
+    params0 = kgm.init_params(jax.random.PRNGKey(0), kcfg)
+    ids = np.arange(eval_every, dtype=np.int32)
+    n_blocks = epochs // eval_every
+
+    params, losses = block_fn(params0, ids)          # compile train
+    eval_device.evaluate_all_device(                 # compile eval + caches
+        params, graph, "l1", model=kgm, n_workers=WORKERS)
+
+    def median_time(fn):
+        samples = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for _ in range(ITERS):
+                fn()
+            samples.append((time.perf_counter() - t0) / ITERS)
+        return float(np.median(samples))
+
+    def one_block():
+        _, losses = block_fn(params0, ids)
+        jax.block_until_ready(losses)
+
+    def one_eval():
+        eval_device.evaluate_all_device(
+            params, graph, "l1", model=kgm, n_workers=WORKERS)
+
+    block_s = median_time(one_block)
+    eval_s = median_time(one_eval)
+    row = {
+        "model": model,
+        "workers": WORKERS,
+        "epochs": epochs,
+        "eval_every": eval_every,
+        "evals_per_run": n_blocks,
+        "block_s": round(block_s, 5),
+        "eval_s": round(eval_s, 5),
+        "train_s": round(n_blocks * block_s, 4),
+        "train_with_eval_s": round(n_blocks * (block_s + eval_s), 4),
+        "overhead_pct": round(100.0 * eval_s / block_s, 1),
+    }
+    if verbose:
+        print(f"overhead: block({eval_every} epochs)={row['block_s']}s "
+              f"eval={row['eval_s']}s -> {row['overhead_pct']}%", flush=True)
+    return row
+
+
+def run(verbose: bool = True, model: str = "transe", quick: bool = False):
+    graph = build()
+    epochs = EVAL_EVERY * 2 if quick else EPOCHS
+    repeats = 1 if quick else REPEATS
+    return {
+        "curves": _curve_rows(graph, model, epochs, EVAL_EVERY, verbose),
+        "overhead": _overhead(graph, model, epochs, EVAL_EVERY, repeats,
+                              verbose),
+    }
+
+
+if __name__ == "__main__":
+    run()

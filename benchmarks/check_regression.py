@@ -1,0 +1,113 @@
+"""Bench-regression gate: compare a fresh benchmark run against the
+committed ``BENCH_*.json`` baselines and fail on big throughput drops.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline-dir . --fresh-dir ci-bench [--tolerance 0.30]
+
+For every JSON name present in both directories, rows are matched on their
+identity fields (model / paradigm / task / workers / ...), and every
+throughput field (``*_per_s``) of a matched row must satisfy
+
+    fresh >= baseline * (1 - tolerance)
+
+Rows only one side has (e.g. the W in {2, 8} cells a ``--quick`` run
+skips) are ignored, so the CI quick profile compares exactly the cells it
+reran.  Speedup ratios and the trace bench's curves are *recorded*, not
+gated — absolute rates on shared CI runners are noisy enough already,
+which is why the default band is a generous 30%: this catches
+order-of-magnitude pessimizations (a de-jitted hot path, an accidental
+host sync per epoch), not percent-level drift.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_NAMES = ("BENCH_pipeline.json", "BENCH_eval.json")
+RATE_SUFFIX = "_per_s"
+
+
+def _row_key(row: dict) -> tuple:
+    """Identity of a bench row: every non-rate scalar field."""
+    return tuple(sorted(
+        (k, v) for k, v in row.items()
+        if not k.endswith(RATE_SUFFIX)
+        and not k.endswith("_speedup")
+        and not isinstance(v, (list, dict))
+    ))
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float) -> list:
+    """Regressions between two bench payloads: one message per rate field
+    of a matched row that dropped below the band."""
+    base_rows = {_row_key(r): r for r in baseline.get("rows", [])}
+    problems = []
+    matched = 0
+    for row in fresh.get("rows", []):
+        base = base_rows.get(_row_key(row))
+        if base is None:
+            continue
+        matched += 1
+        for field, fresh_val in row.items():
+            if not field.endswith(RATE_SUFFIX):
+                continue
+            base_val = base.get(field)
+            if not isinstance(base_val, (int, float)) or base_val <= 0:
+                continue
+            floor = base_val * (1.0 - tolerance)
+            if fresh_val < floor:
+                ident = ", ".join(f"{k}={v}" for k, v in _row_key(row))
+                problems.append(
+                    f"  {field} [{ident}]: {fresh_val} < "
+                    f"{floor:.2f} (baseline {base_val}, "
+                    f"tolerance {tolerance:.0%})")
+    if matched == 0:
+        problems.append(
+            "  no rows matched between baseline and fresh run — identity "
+            "fields drifted? regenerate the committed baseline")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh-dir", required=True,
+                    help="directory a fresh `run_all --out-dir` wrote to")
+    ap.add_argument("--names", nargs="+", default=list(DEFAULT_NAMES),
+                    help="bench JSON filenames to compare")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional drop per rate field")
+    args = ap.parse_args()
+
+    failed = False
+    for name in args.names:
+        base_path = os.path.join(args.baseline_dir, name)
+        fresh_path = os.path.join(args.fresh_dir, name)
+        if not os.path.exists(base_path):
+            print(f"{name}: no committed baseline — skipping", flush=True)
+            continue
+        if not os.path.exists(fresh_path):
+            print(f"{name}: FRESH RUN MISSING ({fresh_path})", flush=True)
+            failed = True
+            continue
+        with open(base_path) as f:
+            baseline = json.load(f)
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        problems = compare(baseline, fresh, args.tolerance)
+        if problems:
+            print(f"{name}: REGRESSION", flush=True)
+            print("\n".join(problems), flush=True)
+            failed = True
+        else:
+            n = len(fresh.get("rows", []))
+            print(f"{name}: OK ({n} fresh rows within "
+                  f"{args.tolerance:.0%} of baseline)", flush=True)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

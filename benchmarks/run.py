@@ -5,20 +5,20 @@
 Prints one CSV-ish line per row; each module is importable for tests.
 """
 import argparse
-import sys
 import time
 
 
 # static so --help / bad-flag errors don't pay the jax import chain
 SUITE_NAMES = ("kernels", "convergence", "speedup", "strategies", "pipeline",
-               "eval")
+               "eval", "trace")
 
 
 def suites() -> dict:
     """Name -> run callable for every benchmark module (the single registry
     run_all.py reuses)."""
     from benchmarks import (bench_convergence, bench_eval, bench_kernels,
-                            bench_pipeline, bench_speedup, bench_strategies)
+                            bench_pipeline, bench_speedup, bench_strategies,
+                            bench_trace)
 
     return {
         "kernels": bench_kernels.run,
@@ -27,6 +27,7 @@ def suites() -> dict:
         "strategies": bench_strategies.run,
         "pipeline": bench_pipeline.run,
         "eval": bench_eval.run,
+        "trace": bench_trace.run,
     }
 
 

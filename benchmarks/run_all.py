@@ -2,18 +2,29 @@
 writes JSON artifacts at the repo root so the numbers accumulate across PRs.
 
     PYTHONPATH=src python -m benchmarks.run_all [--model transe] [--full]
+        [--quick] [--out-dir DIR]
 
 Always runs the pipeline bench (host vs device epochs/sec, W in {1,2,4,8},
-both paradigms -> ``BENCH_pipeline.json``) and the eval bench (host vs
-device eval-engine queries/sec on filtered entity inference, W in {1,2,4,8}
--> ``BENCH_eval.json``).  ``--full`` additionally runs the printed-only
-suites (strategies / speedup / kernels / convergence) via
-``benchmarks.run``.
+both paradigms -> ``BENCH_pipeline.json``), the eval bench (host vs device
+eval-engine queries/sec on filtered entity inference, W in {1,2,4,8}
+-> ``BENCH_eval.json``), and the trace bench (quality-vs-epoch curves per
+merge strategy + in-loop eval overhead -> ``BENCH_trace.json``).
+
+``--quick`` is the CI bench-regression profile: the W in {1, 4}
+cross-section of the grids (and single-repeat trace overhead) — the
+per-cell measurement discipline is unchanged, so the steady-state rates
+stay comparable to the committed full-grid baselines
+(``benchmarks/check_regression.py`` compares only the rows both files
+share).  ``--out-dir`` redirects the JSONs (CI writes to a scratch
+dir and uploads it as an artifact instead of touching the baselines).
+``--full`` additionally runs the printed-only suites (strategies /
+speedup / kernels / convergence) via ``benchmarks.run``.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import time
 
@@ -41,15 +52,28 @@ def main() -> None:
     ap.add_argument("--model", default="transe")
     ap.add_argument("--out", default="BENCH_pipeline.json")
     ap.add_argument("--eval-out", default="BENCH_eval.json")
+    ap.add_argument("--trace-out", default="BENCH_trace.json")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory the BENCH_*.json files are written to")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI profile: W in {1,4} grid cross-section "
+                         "(single-repeat trace overhead) — rates stay "
+                         "comparable to the committed baselines")
     ap.add_argument("--full", action="store_true",
                     help="also run the printed-only benchmark suites")
     args = ap.parse_args()
 
-    from benchmarks import bench_eval, bench_pipeline
+    from benchmarks import bench_eval, bench_pipeline, bench_trace
+
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    def path(name: str) -> str:
+        return os.path.join(args.out_dir, name)
 
     print("== bench:pipeline ==", flush=True)
     t0 = time.time()
-    rows = bench_pipeline.run(verbose=True, model=args.model)
+    rows = bench_pipeline.run(verbose=True, model=args.model,
+                              quick=args.quick)
     print(f"== bench:pipeline done ({time.time() - t0:.0f}s) ==", flush=True)
     _write({
         "bench": "pipeline",
@@ -62,11 +86,12 @@ def main() -> None:
                      "n_triplets=4000)",
         },
         "rows": rows,
-    }, args.out)
+    }, path(args.out))
 
     print("== bench:eval ==", flush=True)
     t0 = time.time()
-    eval_rows = bench_eval.run(verbose=True, model=args.model)
+    eval_rows = bench_eval.run(verbose=True, model=args.model,
+                               quick=args.quick)
     print(f"== bench:eval done ({time.time() - t0:.0f}s) ==", flush=True)
     _write({
         "bench": "eval",
@@ -80,13 +105,32 @@ def main() -> None:
                      "n_triplets=4000)",
         },
         "rows": eval_rows,
-    }, args.eval_out)
+    }, path(args.eval_out))
+
+    print("== bench:trace ==", flush=True)
+    t0 = time.time()
+    trace_out = bench_trace.run(verbose=True, model=args.model,
+                                quick=args.quick)
+    print(f"== bench:trace done ({time.time() - t0:.0f}s) ==", flush=True)
+    _write({
+        "bench": "trace",
+        **_env(),
+        "config": {
+            "eval_every": bench_trace.EVAL_EVERY,
+            "dim": bench_trace.DIM,
+            "batch_size": bench_trace.BATCH,
+            "workers": bench_trace.WORKERS,
+            "graph": "synthetic_kg(1, n_entities=1000, n_relations=10, "
+                     "n_triplets=4000)",
+        },
+        **trace_out,
+    }, path(args.trace_out))
 
     if args.full:
         from benchmarks import run as run_mod
 
         for name, fn in run_mod.suites().items():
-            if name not in ("pipeline", "eval"):   # already ran (recorded)
+            if name not in ("pipeline", "eval", "trace"):  # already recorded
                 run_mod.run_suite(name, fn)
 
 

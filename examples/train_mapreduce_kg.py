@@ -4,7 +4,13 @@ single-thread quality — for any registered scoring model (the paper's TransE
 by default; --model transh|distmult runs the same experiment on the others).
 
     PYTHONPATH=src python examples/train_mapreduce_kg.py \
-        [--model transe] [--workers 4] [--epochs 200]
+        [--model transe] [--workers 4] [--epochs 200] \
+        [--eval-every 20 --trace-out curves]
+
+With ``--eval-every K`` every setting also records its quality-vs-epoch
+curve from inside ``fit`` (the in-training evaluation loop, run on the
+device eval engine at Reduce boundaries), so the merge strategies can be
+compared *during* training, not just at the end.
 """
 import argparse
 import os
@@ -36,6 +42,15 @@ def main():
                     help="'device' = compiled batched eval engine "
                          "(identical metrics, faster; query axis sharded "
                          "over --workers)")
+    ap.add_argument("--eval-every", type=int, default=None,
+                    help="evaluate every K epochs from inside fit and "
+                         "print each setting's quality-vs-epoch curve "
+                         "(device eval engine at Reduce boundaries; must "
+                         "be a multiple of --merge-every on the device "
+                         "pipeline)")
+    ap.add_argument("--trace-out", default=None, metavar="PREFIX",
+                    help="with --eval-every: write each setting's trace "
+                         "as PREFIX.<setting>.jsonl")
     args = ap.parse_args()
 
     pipeline_kw = {}
@@ -62,6 +77,8 @@ def main():
         kw.update(pipeline_kw)
         if paradigm == "sgd" and args.pipeline == "device":
             kw["merge_every"] = args.merge_every
+        if args.eval_every is not None:
+            kw["eval_every"] = args.eval_every
         t0 = time.time()
         res = kg_api.fit(
             graph, model=args.model, paradigm=paradigm,
@@ -76,6 +93,15 @@ def main():
         print(f"{name:26s} loss={res.loss_history[-1]:.4f} "
               f"MR={ef['mean_rank']:7.1f} hits@10={ef['hits@10']:.3f} "
               f"({time.time()-t0:.0f}s)", flush=True)
+        if res.trace is not None:
+            curve = " ".join(
+                f"{e + 1}:{mr:.1f}"
+                for e, mr in zip(res.trace.epochs(), res.trace.values()))
+            print(f"  {'MR curve (epoch:MR)':24s} {curve}", flush=True)
+            if args.trace_out:
+                path = f"{args.trace_out}.{name}.jsonl"
+                res.trace.to_jsonl(path)
+                print(f"  wrote {path}", flush=True)
 
     base = results["single-thread"][1]["hits@10"]
     print("\nhits@10 retention vs single-thread "

@@ -173,8 +173,13 @@ def relation_prediction(
     norm: str = "l1",
     batch: int = 512,
     model: "str | KGModel" = "transe",
-) -> RankMetrics:
-    """Rank the gold relation among all relations for each test (h, ?, t)."""
+    return_ranks: bool = False,
+):
+    """Rank the gold relation among all relations for each test (h, ?, t).
+
+    ``return_ranks=True`` additionally returns the per-query rank vector in
+    test order — the array the device engine's fused relation scan is
+    proved against (tests/test_eval_device.py)."""
     model = get_model(model)
     ranks = []
     for i in range(0, len(test), batch):
@@ -184,7 +189,9 @@ def relation_prediction(
         )
         gold = scores[np.arange(len(chunk)), chunk[:, 1]]
         ranks.append(1 + (scores < gold[:, None]).sum(axis=1))
-    return _metrics_from_ranks(np.concatenate(ranks))
+    ranks = np.concatenate(ranks)
+    metrics = _metrics_from_ranks(ranks)
+    return (metrics, ranks) if return_ranks else metrics
 
 
 def triplet_classification(
@@ -195,14 +202,22 @@ def triplet_classification(
     norm: str = "l1",
     seed: int = 0,
     model: "str | KGModel" = "transe",
+    negatives: Optional[tuple] = None,
 ) -> float:
     """Is <h,r,t> true?  Learn a per-relation energy threshold on valid
     (pos + corrupted neg), report accuracy on test (pos + corrupted neg) —
     the paper's 'triplet classification' task (protocol of Socher et al. /
     Wang et al. 2014).  Thresholds work for any real-valued energy, so
-    similarity models (negative energies) need no special casing."""
+    similarity models (negative energies) need no special casing.
+
+    ``negatives`` is the prebuilt ``(valid_neg, test_neg)`` pair from
+    ``KG.tc_negatives(seed)`` — identical draws, cached on the KG so
+    repeated evaluation (the in-training eval loop) skips the corruption
+    dispatches; ``evaluate_all`` passes it."""
     model = get_model(model)
-    valid_neg, test_neg = _tc_negatives(valid, test, n_entities, seed)
+    valid_neg, test_neg = (
+        negatives if negatives is not None
+        else _tc_negatives(valid, test, n_entities, seed))
 
     def scores(tr):
         return np.asarray(model.energy(params, jnp.asarray(tr), norm))
@@ -332,7 +347,8 @@ def evaluate_all(
         known_index=kg.known_index() if filtered else None)
     rp = relation_prediction(params, kg.test, norm, model=model)
     tc = triplet_classification(
-        params, kg.valid, kg.test, kg.n_entities, norm, model=model
+        params, kg.valid, kg.test, kg.n_entities, norm, model=model,
+        negatives=kg.tc_negatives(0),
     )
     out = {
         "entity_raw": ent["raw"].row(),

@@ -21,8 +21,13 @@ How it works, per task:
     the ``KG``'s precomputed padded known-candidate masks
     (``KG.eval_filter_candidates`` — built once, placed on device once).
     Only the final ``(Q,)`` rank vectors return to the host.
-  * **Relation prediction** — same scan machinery over
-    ``relation_energies``.
+  * **Relation prediction** — fused into the *same* scan body as entity
+    inference (``relations=True``): each chunk also scores all R relations
+    through ``relation_energies`` and extracts the gold relation's rank, so
+    the full ranking protocol is one pass over the test queries instead of
+    two (the ROADMAP "tiny win").  A standalone scan
+    (``relation_prediction_device``) remains for callers that only need
+    relation ranks.
   * **Triplet classification** — the four score vectors (valid/test,
     pos/neg) are computed in one jitted dispatch; the per-relation
     threshold fit is inherently host-side (tiny sorts) and shared with the
@@ -139,7 +144,9 @@ def _entity_chunk(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("model", "norm", "backend", "axis_name", "fused", "mesh"),
+    static_argnames=(
+        "model", "norm", "backend", "axis_name", "fused", "mesh",
+        "relations"),
 )
 def _entity_ranks_device(
     model: KGModel,
@@ -153,8 +160,12 @@ def _entity_ranks_device(
     mesh,
     axis_name: str,
     fused: bool,
+    relations: bool = False,
 ) -> Dict[str, jax.Array]:
-    """Both sides' (raw, filtered) rank grids, one compiled computation."""
+    """Both sides' (raw, filtered) rank grids — and, with ``relations``,
+    the gold-relation rank grid — in one compiled computation.  Fusing the
+    relation task into the same scan body saves a second pass over the
+    query layout (one scan, three rank families)."""
 
     def per_worker(params, q_w, tc_w, hc_w):
         def body(_, inp):
@@ -163,10 +174,16 @@ def _entity_ranks_device(
                 model, params, q, tc, "tail", norm, fused)
             raw_h, filt_h = _entity_chunk(
                 model, params, q, hc, "head", norm, fused)
-            return None, {
+            out = {
                 "tail_raw": raw_t, "tail_filtered": filt_t,
                 "head_raw": raw_h, "head_filtered": filt_h,
             }
+            if relations:
+                scores = model.relation_energies(params, q, norm)
+                gold = scores[jnp.arange(scores.shape[0]), q[:, 1]]
+                out["relation"] = 1 + jnp.sum(
+                    scores < gold[:, None], axis=1).astype(jnp.int32)
+            return None, out
 
         _, outs = jax.lax.scan(body, None, (q_w, tc_w, hc_w))
         return outs          # each (S, C)
@@ -188,11 +205,16 @@ def entity_ranks_device(
     backend: str = "vmap",
     mesh=None,
     fused: Optional[bool] = None,
+    relations: bool = False,
 ) -> Dict[str, np.ndarray]:
     """Per-query entity-inference ranks from the device engine, in test
     order: ``{"raw_ranks": {"tail", "head"}, "filtered_ranks": {...}}`` —
     the exact arrays ``host_eval.entity_inference(return_ranks=True)``
-    produces (``filtered_ranks`` only when ``cand_masks`` is given)."""
+    produces (``filtered_ranks`` only when ``cand_masks`` is given).
+
+    ``relations=True`` additionally returns ``"relation_ranks"`` (the
+    gold-relation rank per query), computed in the *same* scan body — the
+    fused protocol pass ``evaluate_all_device`` runs."""
     model = get_model(model)
     fused = _resolve_fused(model, fused)
     test = np.asarray(test, np.int32)
@@ -214,7 +236,7 @@ def entity_ranks_device(
 
     outs = _entity_ranks_device(
         model, params, q, tc, hc, norm=norm, backend=backend, mesh=mesh,
-        axis_name="workers", fused=fused)
+        axis_name="workers", fused=fused, relations=relations)
     out = {"raw_ranks": {
         "tail": _unshard(outs["tail_raw"], Q),
         "head": _unshard(outs["head_raw"], Q),
@@ -224,6 +246,8 @@ def entity_ranks_device(
             "tail": _unshard(outs["tail_filtered"], Q),
             "head": _unshard(outs["head_filtered"], Q),
         }
+    if relations:
+        out["relation_ranks"] = _unshard(outs["relation"], Q)
     return out
 
 
@@ -348,14 +372,19 @@ def triplet_classification_device(
     norm: str = "l1",
     seed: int = 0,
     model: "str | KGModel" = "transe",
+    negatives: Optional[tuple] = None,
 ) -> float:
     """Triplet classification with device-batched scoring: the four score
     vectors come from one jitted dispatch over the concatenated arrays;
     corruption draws and threshold fitting are byte-identical to the host
-    engine (shared ``_tc_negatives`` / ``_threshold_accuracy``)."""
+    engine (shared ``_tc_negatives`` / ``_threshold_accuracy``).
+    ``negatives`` is the cached ``KG.tc_negatives(seed)`` pair —
+    ``evaluate_all_device`` passes it so the per-Reduce in-loop eval skips
+    the corruption dispatches."""
     model = get_model(model)
-    valid_neg, test_neg = host_eval._tc_negatives(
-        valid, test, n_entities, seed)
+    valid_neg, test_neg = (
+        negatives if negatives is not None
+        else host_eval._tc_negatives(valid, test, n_entities, seed))
     sections = np.cumsum([len(valid), len(valid_neg), len(test)])
     allt = jnp.asarray(
         np.concatenate([valid, valid_neg, test, test_neg], axis=0))
@@ -387,6 +416,12 @@ def evaluate_all_device(
     """All three paper tasks on the device engine — same output dict as the
     host ``evaluate_all`` (which dispatches here for ``engine="device"``).
 
+    The two ranking tasks run as ONE fused scan over the test queries
+    (``entity_ranks_device(relations=True)``): each chunk scores both
+    entity sides *and* all relations, so the protocol makes a single pass
+    over the query layout — this is the engine the in-training evaluation
+    loop (``core/trace.py``) runs at every Reduce boundary.
+
     ``chunk`` queries are scored per scan step, split over ``n_workers``
     along the query axis (``backend="vmap"`` on one device,
     ``"shard_map"`` over a real mesh axis — pass ``mesh``).  ``fused``
@@ -395,20 +430,24 @@ def evaluate_all_device(
     (``KG.eval_filter_candidates``); leave ``None`` for exact filtering."""
     model = get_model(model)
     masks = kg.eval_filter_candidates(max_fanout) if filtered else None
-    ent = entity_inference_device(
+    ranks = entity_ranks_device(
         params, kg.test, norm, masks, model=model, chunk=chunk,
-        n_workers=n_workers, backend=backend, mesh=mesh, fused=fused)
-    rp = relation_prediction_device(
-        params, kg.test, norm, model=model, chunk=max(chunk, 512),
-        n_workers=n_workers, backend=backend, mesh=mesh)
+        n_workers=n_workers, backend=backend, mesh=mesh, fused=fused,
+        relations=True)
+    raw = ranks["raw_ranks"]
+    rp = host_eval._metrics_from_ranks(ranks["relation_ranks"])
     tc = triplet_classification_device(
-        params, kg.valid, kg.test, kg.n_entities, norm, model=model
+        params, kg.valid, kg.test, kg.n_entities, norm, model=model,
+        negatives=kg.tc_negatives(0),
     )
     out = {
-        "entity_raw": ent["raw"].row(),
+        "entity_raw": host_eval._metrics_from_ranks(
+            np.concatenate([raw["tail"], raw["head"]])).row(),
         "relation_prediction": rp.row(),
         "triplet_classification_acc": tc,
     }
     if filtered:
-        out["entity_filtered"] = ent["filtered"].row()
+        filt = ranks["filtered_ranks"]
+        out["entity_filtered"] = host_eval._metrics_from_ranks(
+            np.concatenate([filt["tail"], filt["head"]])).row()
     return out

@@ -56,6 +56,22 @@ Epoch scheduling (``EpochSchedule``, device pipeline only):
                         (touch stats accumulate across the K epochs); a
                         beyond-paper schedule the scanned driver makes nearly
                         free, trading merge traffic for local drift.
+  * ``repartition_every=M`` — re-split the triplets across workers on
+                        device every M epochs (round r = e // M indexes a
+                        fresh global permutation; round 0 is the original
+                        partition), killing the residual split bias of a
+                        partition frozen at start.
+  * ``donate_params``  — (MapReduceConfig; device pipeline, default on)
+                        donate the params buffer to each block call so the
+                        accelerator never holds two copies of the tables.
+
+In-training evaluation: ``train(..., eval_loop=EvalLoopConfig(...))`` (or
+``kg.fit(eval_every=K)``) runs the evaluation protocol at Reduce
+boundaries — the host pipeline evaluates between epochs, the device driver
+slices its compiled blocks at eval boundaries (free in results by block
+invariance) — and returns a ``core/trace.TrainingTrace`` of
+quality-vs-epoch curves with optional early stopping and best-params
+checkpointing.
 
 The module-level ``train()`` drives blocks (device) or epochs (host)
 host-side and is what ``repro.kg.fit`` calls.
@@ -75,6 +91,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import merge as merge_lib
 from repro.core import negative
 from repro.core import models as kg_models
+from repro.core import trace as trace_lib
 from repro.core.models.base import EpochStats, KGConfig, KGModel, Params, apply_gradients
 from repro.data import kg as kg_lib
 from repro.parallel.util import shard_map as _shard_map
@@ -88,10 +105,24 @@ class EpochSchedule:
     dispatch per block — any block size gives bit-identical results);
     every ``merge_every`` epochs the SGD Reduce runs, so K > 1 lets each
     Map worker take K local epochs between merges.  ``block_epochs`` must
-    be a multiple of ``merge_every`` (blocks end on a merge boundary)."""
+    be a multiple of ``merge_every`` (blocks end on a merge boundary).
+
+    ``repartition_every=M`` re-splits the triplets across workers on
+    device every M epochs (``data/kg.device_repartition``) — the epoch
+    batching already redraws within-worker permutations per epoch, but the
+    worker membership of each triplet is otherwise frozen at ``train()``
+    start; M kills that residual split bias.  The effective partition of
+    epoch ``e`` is a pure function of (seed, ``e // M``) — round 0 is the
+    original partition — so block-size invariance is untouched and
+    ``M >= epochs`` is bit-identical to ``M=None`` (off).  M must be a
+    multiple of ``merge_every``: workers hold their subset for whole
+    Reduce rounds (the paper's Map contract), and the driver slices
+    compiled blocks at re-partition boundaries so the permutation +
+    gather runs once per round, not once per epoch."""
 
     block_epochs: int = 1
     merge_every: int = 1
+    repartition_every: Optional[int] = None
 
     def __post_init__(self):
         if self.block_epochs < 1:
@@ -103,6 +134,15 @@ class EpochSchedule:
                 f"block_epochs={self.block_epochs} must be a multiple of "
                 f"merge_every={self.merge_every} so every block ends on a "
                 "Reduce boundary")
+        if self.repartition_every is not None and (
+            self.repartition_every < 1
+            or self.repartition_every % self.merge_every != 0
+        ):
+            raise ValueError(
+                f"repartition_every must be >= 1 (or None to disable) and "
+                f"a multiple of merge_every={self.merge_every} — workers "
+                "hold their subset for whole Reduce rounds; got "
+                f"{self.repartition_every}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,6 +160,12 @@ class MapReduceConfig:
     schedule: EpochSchedule = EpochSchedule()
     # raise instead of warn when batch_size doesn't divide the worker split
     strict_batching: bool = False
+    # device pipeline: donate the params buffer to each block call (halves
+    # peak accelerator memory — the old params are dead the moment the
+    # block's first update lands).  None = auto (on); the driver copies
+    # caller-provided resume params first, so user buffers are never
+    # invalidated.
+    donate_params: Optional[bool] = None
 
     def __post_init__(self):
         if self.paradigm not in ("sgd", "bgd"):
@@ -131,12 +177,15 @@ class MapReduceConfig:
         if self.pipeline not in ("host", "device"):
             raise ValueError(f"bad pipeline {self.pipeline!r}")
         if self.pipeline == "host" and (
-            self.schedule.block_epochs != 1 or self.schedule.merge_every != 1
+            self.schedule.block_epochs != 1
+            or self.schedule.merge_every != 1
+            or self.schedule.repartition_every is not None
         ):
             raise ValueError(
-                "EpochSchedule with block_epochs/merge_every != 1 needs "
-                "pipeline='device' — the host loop drives one epoch at a "
-                "time with a Reduce per epoch")
+                "EpochSchedule with block_epochs/merge_every != 1 or "
+                "repartition_every set needs pipeline='device' — the host "
+                "loop drives one epoch at a time with a Reduce per epoch "
+                "on the partition it built at start")
         if self.schedule.merge_every > 1 and self.paradigm != "sgd":
             raise ValueError(
                 "merge_every > 1 is an SGD-paradigm schedule (BGD has no "
@@ -358,16 +407,21 @@ def bgd_epoch_shard(
 # fold_in tag separating the device pipeline's (data, negative, merge) key
 # streams from the init key derived from the same seed.
 _DEVICE_STREAM_TAG = 0xD417A
+# fold_in tag for the re-partition permutation stream — folded (not split)
+# off the same root so the original three streams keep their pre-existing
+# values and repartition_every=None runs are unchanged bit-for-bit.
+_REPARTITION_TAG = 0x5917
 
 
-def _device_keys(seed: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+def _device_keys(seed: int) -> tuple[jax.Array, ...]:
     """Per-purpose base keys for the device pipeline; every per-epoch key is
     ``fold_in(base, epoch)`` (and per-worker keys fold the worker index on
     top), so all randomness is a pure function of (seed, epoch, worker) —
     which is exactly what makes block size irrelevant to the results."""
     root = jax.random.fold_in(jax.random.PRNGKey(seed), _DEVICE_STREAM_TAG)
     k_data, k_neg, k_merge = jax.random.split(root, 3)
-    return k_data, k_neg, k_merge
+    k_part = jax.random.fold_in(root, _REPARTITION_TAG)
+    return k_data, k_neg, k_merge, k_part
 
 
 def _zero_stats(tcfg: KGConfig, lead: tuple = ()) -> EpochStats:
@@ -390,6 +444,7 @@ def make_block_fn(
     model: Optional[KGModel] = None,
     head_prob: Optional[jax.Array] = None,
     seed: int = 0,
+    donate: bool = False,
 ) -> Callable:
     """Returns jitted ``block_fn(params, epoch_ids) -> (params, losses)``.
 
@@ -401,14 +456,60 @@ def make_block_fn(
     decide when to sync).  Epoch results are bit-identical for any block
     split because every key is ``fold_in``-derived from (seed, epoch).
 
+    ``schedule.repartition_every=M`` re-splits the triplets across
+    workers: the effective partition of every epoch in the block is the
+    global permutation of round ``epoch_ids[0] // M``
+    (``data/kg.repartition_perm``), computed ONCE per block call — the
+    permutation + whole-set gather (and, on shard_map, the cross-worker
+    all_gather) costs one dispatch per round, not one per epoch.  Callers
+    must therefore keep every ``epoch_ids`` block inside a single
+    re-partition round (``train()`` slices blocks at round boundaries);
+    round indexing stays a pure function of (seed, ``e // M``), so block
+    invariance holds and the two backends stay in lockstep (the shard_map
+    path all-gathers the shards and takes its own slice of the same
+    permutation).
+
+    ``donate=True`` donates the params buffer of every call
+    (``jit(donate_argnums=0)``) — peak accelerator memory drops by one full
+    copy of the embedding tables; callers must treat the passed params as
+    consumed (``_train_device`` does).
+
     The vmap and shard_map backends derive identical per-worker keys (vmapped
     ``fold_in(·, w)`` vs ``fold_in(·, axis_index)``), so the two backends see
     the same batches and negatives."""
     model = _resolve(cfg, model)
     W, B, K = cfg.n_workers, cfg.batch_size, cfg.schedule.merge_every
+    M = cfg.schedule.repartition_every
+    n_w = partitioned.shape[1]
     ax = cfg.axis_name
-    k_data, k_neg, k_merge = _device_keys(seed)
+    k_data, k_neg, k_merge, k_part = _device_keys(seed)
     run = functools.partial(model.run_epoch, cfg=tcfg)
+
+    def block_part(epoch_ids: jax.Array) -> jax.Array:
+        """The (W, N_w, 3) partition in effect for this whole block (vmap
+        backend): the static split, or re-partition round
+        ``epoch_ids[0] // M`` — constant across the block because the
+        driver slices blocks at round boundaries."""
+        if M is None:
+            return partitioned
+        r = epoch_ids[0] // M
+        return kg_lib.device_repartition(
+            jax.random.fold_in(k_part, r), partitioned, r)
+
+    def worker_block_part(epoch_ids: jax.Array, w: jax.Array,
+                          part_w: jax.Array) -> jax.Array:
+        """Worker ``w``'s (N_w, 3) slice of ``block_part`` inside
+        shard_map: all-gather the shards once per block, then take this
+        worker's rows of the same global permutation — identical triplets
+        to the vmap backend's worker ``w``."""
+        if M is None:
+            return part_w
+        r = epoch_ids[0] // M
+        flat = jax.lax.all_gather(part_w, ax, axis=0, tiled=True)
+        perm = kg_lib.repartition_perm(
+            jax.random.fold_in(k_part, r), W * n_w, r)
+        rows = jax.lax.dynamic_slice_in_dim(perm, w * n_w, n_w)
+        return jnp.take(flat, rows, axis=0)
 
     def worker_epoch_data(e: jax.Array, w: jax.Array, part_w: jax.Array):
         """(pos, neg) for worker ``w`` at epoch ``e`` (the shard_map per-
@@ -420,12 +521,12 @@ def make_block_fn(
         neg = model.make_negatives(kn, pos, tcfg, head_prob)
         return pos, neg
 
-    def epoch_data(e: jax.Array):
+    def epoch_data(e: jax.Array, part: jax.Array):
         """Stacked (W, S, B, 3) pos/neg for the vmap backend, batched via
         the data layer's ``device_epoch_batches`` (which folds the worker
         index exactly like ``worker_epoch_data``)."""
         pos = kg_lib.device_epoch_batches(
-            jax.random.fold_in(k_data, e), partitioned, B)
+            jax.random.fold_in(k_data, e), part, B)
         kn = jax.random.fold_in(k_neg, e)
         neg = jax.vmap(
             lambda pos_w, w: model.make_negatives(
@@ -440,10 +541,12 @@ def make_block_fn(
             lambda x: jnp.broadcast_to(x, (W,) + x.shape), params)
 
     def sgd_block_vmap(params: Params, epoch_ids: jax.Array):
+        part = block_part(epoch_ids)
+
         def round_body(stacked, eids):           # eids: (K,) one merge round
             def local_epoch(carry, e):
                 stacked, acc = carry
-                pos, neg = epoch_data(e)
+                pos, neg = epoch_data(e, part)
                 stacked, stats = jax.vmap(run)(stacked, pos, neg)
                 acc = jax.tree.map(jnp.add, acc, stats)
                 return (stacked, acc), jnp.mean(stats.mean_loss)
@@ -461,8 +564,10 @@ def make_block_fn(
         return jax.tree.map(lambda x: x[0], stacked), losses.reshape(-1)
 
     def bgd_block_vmap(params: Params, epoch_ids: jax.Array):
+        part = block_part(epoch_ids)
+
         def epoch_body(params, e):
-            pos, neg = epoch_data(e)
+            pos, neg = epoch_data(e, part)
             return bgd_epoch_vmap(params, pos, neg, cfg, tcfg, model)
 
         return jax.lax.scan(epoch_body, params, epoch_ids)
@@ -472,11 +577,12 @@ def make_block_fn(
     def sgd_block_shard(params: Params, epoch_ids: jax.Array):
         def worker(params, part_w, epoch_ids):
             w = jax.lax.axis_index(ax)
+            part_w = worker_block_part(epoch_ids, w, part_w[0])
 
             def round_body(local, eids):
                 def local_epoch(carry, e):
                     local, acc = carry
-                    pos, neg = worker_epoch_data(e, w, part_w[0])
+                    pos, neg = worker_epoch_data(e, w, part_w)
                     local, stats = model.run_epoch(local, pos, neg, tcfg)
                     acc = jax.tree.map(jnp.add, acc, stats)
                     return (local, acc), jax.lax.pmean(stats.mean_loss, ax)
@@ -502,9 +608,10 @@ def make_block_fn(
     def bgd_block_shard(params: Params, epoch_ids: jax.Array):
         def worker(params, part_w, epoch_ids):
             w = jax.lax.axis_index(ax)
+            part_w = worker_block_part(epoch_ids, w, part_w[0])
 
             def epoch_body(params, e):
-                pos, neg = worker_epoch_data(e, w, part_w[0])
+                pos, neg = worker_epoch_data(e, w, part_w)
                 return _bgd_epoch_collective(
                     model, cfg, tcfg, params, pos, neg)
 
@@ -523,7 +630,7 @@ def make_block_fn(
         fn = sgd_block_shard if cfg.paradigm == "sgd" else bgd_block_shard
     else:
         fn = sgd_block_vmap if cfg.paradigm == "sgd" else bgd_block_vmap
-    return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
 
 # ---------------------------------------------------------------------------
@@ -563,6 +670,42 @@ class TrainResult:
     loss_history: list
     epochs_run: int
     model: str = "transe"
+    # in-training evaluation (eval_loop / kg.fit(eval_every=...)): the
+    # quality-vs-epoch trace, and — when keep_best — the params snapshot of
+    # the best-metric boundary (paper-style model selection)
+    trace: "Optional[trace_lib.TrainingTrace]" = None
+    best_params: Optional[Params] = None
+    best_epoch: Optional[int] = None
+
+
+def _make_recorder(
+    kg, tcfg, cfg, model, eval_loop
+) -> "Optional[trace_lib.TraceRecorder]":
+    if eval_loop is None:
+        return None
+    if cfg.pipeline == "device" and (
+        eval_loop.eval_every % cfg.schedule.merge_every != 0
+    ):
+        raise ValueError(
+            f"eval_every={eval_loop.eval_every} is not a multiple of "
+            f"merge_every={cfg.schedule.merge_every} — in-loop evals run at "
+            "Reduce boundaries (between Reduces the workers hold W "
+            "divergent local copies, not a shared model); pick a multiple")
+    return trace_lib.TraceRecorder(
+        eval_loop, trace_lib.make_eval_fn(kg, model, tcfg.norm, eval_loop))
+
+
+def _finish_result(
+    params, history, epochs_run, model, recorder
+) -> TrainResult:
+    if recorder is None:
+        return TrainResult(
+            params=params, loss_history=history, epochs_run=epochs_run,
+            model=model.name)
+    return TrainResult(
+        params=params, loss_history=history, epochs_run=epochs_run,
+        model=model.name, trace=recorder.finalize(),
+        best_params=recorder.best_params, best_epoch=recorder.best_epoch)
 
 
 def train(
@@ -576,6 +719,7 @@ def train(
     params: Optional[Params] = None,
     callback: Optional[Callable[[int, float], None]] = None,
     model: Optional[KGModel] = None,
+    eval_loop: "Optional[trace_lib.EvalLoopConfig]" = None,
 ) -> TrainResult:
     """Training driver: balanced partitioning, deterministic batches,
     negative sampling, Map/Reduce epochs, loss history.  With
@@ -597,6 +741,15 @@ def train(
     epoch; with the device pipeline it fires at block boundaries only (with
     the block's last epoch index and loss) — per-epoch host sync is exactly
     what the scanned driver exists to remove.
+
+    In-training evaluation: ``eval_loop`` (a ``trace.EvalLoopConfig``, see
+    ``kg.fit(eval_every=...)``) runs the evaluation protocol every
+    ``eval_every`` epochs — a Reduce boundary by construction (the host
+    pipeline Reduces every epoch; the device driver slices its compiled
+    blocks at eval boundaries, which the block-size invariance makes free
+    in results and cheap in dispatches) — records a ``TrainingTrace`` on
+    the result, snapshots best-metric params, and early-stops on
+    ``patience``.
 
     ``cfg.n_workers == 1`` with any backend reproduces single-thread
     Algorithm 1 (the paper's baseline) for the chosen model."""
@@ -635,6 +788,7 @@ def train(
         )
 
     key = jax.random.PRNGKey(seed)
+    caller_params = params is not None
     if params is None:
         key, k_init = jax.random.split(key)
         params = model.init_params(k_init, tcfg)
@@ -644,10 +798,14 @@ def train(
             f"{model.name!r} expects {sorted(model.param_roles())} — "
             "params from a different model?")
 
+    recorder = _make_recorder(kg, tcfg, cfg, model, eval_loop)
+
     if cfg.pipeline == "device":
         return _train_device(
             tcfg, cfg, model, partitioned, head_prob, params,
-            epochs=epochs, seed=seed, mesh=mesh, callback=callback)
+            epochs=epochs, seed=seed, mesh=mesh, callback=callback,
+            recorder=recorder, eval_loop=eval_loop,
+            caller_params=caller_params)
 
     epoch_fn = make_epoch_fn(cfg, tcfg, mesh, model)
 
@@ -658,6 +816,7 @@ def train(
         params = jax.device_put(params, rep)
 
     history = []
+    epochs_run = epochs
     for epoch in range(epochs):
         pos = kg_lib.epoch_batches(seed, epoch, partitioned, cfg.batch_size)
         key, k_neg, k_merge = jax.random.split(key, 3)
@@ -671,10 +830,16 @@ def train(
         history.append(loss)
         if callback is not None:
             callback(epoch, loss)
-    return TrainResult(
-        params=params, loss_history=history, epochs_run=epochs,
-        model=model.name,
-    )
+        # the host pipeline Reduces every epoch, so any eval_every lands on
+        # a Reduce boundary; the final epoch is always evaluated
+        done = epoch + 1
+        if recorder is not None and (
+            done % eval_loop.eval_every == 0 or done == epochs
+        ):
+            if recorder.record(epoch, done, loss, params):
+                epochs_run = done
+                break
+    return _finish_result(params, history, epochs_run, model, recorder)
 
 
 def _train_device(
@@ -689,10 +854,23 @@ def _train_device(
     seed: int,
     mesh: Optional[Mesh],
     callback: Optional[Callable[[int, float], None]],
+    recorder: "Optional[trace_lib.TraceRecorder]" = None,
+    eval_loop: "Optional[trace_lib.EvalLoopConfig]" = None,
+    caller_params: bool = False,
 ) -> TrainResult:
     """Device-pipeline driver: put the partitioned triplets on device once,
     then run epochs in compiled scan blocks (``make_block_fn``).  The only
-    per-block host work is the jit dispatch and the optional callback."""
+    per-block host work is the jit dispatch and the optional callback.
+
+    In-loop evals (``eval_loop``) slice the blocks at eval boundaries —
+    ``eval_every`` is a multiple of ``merge_every`` (validated by the
+    caller), so every eval lands on a Reduce boundary and the block-size
+    invariance keeps the sliced run bit-identical to the unsliced one.
+
+    Params-buffer donation (``cfg.donate_params``, default on): each block
+    call donates its params input, so the accelerator never holds two full
+    copies of the embedding tables; caller-provided resume params are
+    copied first so the user's buffers stay valid."""
     sched = cfg.schedule
     if epochs % sched.merge_every != 0:
         raise ValueError(
@@ -707,24 +885,47 @@ def _train_device(
         part = jax.device_put(part, NamedSharding(mesh, P(cfg.axis_name)))
         params = jax.device_put(params, NamedSharding(mesh, P()))
 
+    donate = cfg.donate_params if cfg.donate_params is not None else True
+    if donate and caller_params:
+        # never donate the caller's buffers (resume params / shared refs);
+        # freshly initialized params have no outside owner and skip the copy
+        params = jax.tree.map(lambda x: jnp.array(x), params)
+
     block_fn = make_block_fn(
         cfg, tcfg, part, mesh=mesh, model=model, head_prob=head_prob,
-        seed=seed)
+        seed=seed, donate=donate)
 
+    eval_every = eval_loop.eval_every if eval_loop is not None else None
+    repart = sched.repartition_every
     loss_blocks = []
     start = 0
+    epochs_run = epochs
     while start < epochs:
-        # every block is a multiple of merge_every (epochs and block_epochs
-        # both are), so the final remainder block still ends on a Reduce
+        # every block is a multiple of merge_every (epochs, block_epochs,
+        # eval_every, and repartition_every all are), so every block —
+        # including the remainder and boundary slices — still ends on a
+        # Reduce.  Blocks are additionally sliced at re-partition
+        # boundaries so block_fn computes each round's partition exactly
+        # once (see make_block_fn).
         length = min(sched.block_epochs, epochs - start)
+        if eval_every is not None:
+            length = min(length, eval_every - start % eval_every)
+        if repart is not None:
+            length = min(length, repart - start % repart)
         epoch_ids = jnp.arange(start, start + length, dtype=jnp.int32)
         params, losses = block_fn(params, epoch_ids)
         loss_blocks.append(losses)               # device array per block
         start += length
         if callback is not None:
             callback(start - 1, float(losses[-1]))
+        if recorder is not None and (
+            start % eval_every == 0 or start == epochs
+        ):
+            stop = recorder.record(
+                start - 1, start // sched.merge_every, float(losses[-1]),
+                params)
+            if stop:
+                epochs_run = start
+                break
     history = [float(x) for b in loss_blocks for x in np.asarray(b)]
-    return TrainResult(
-        params=params, loss_history=history, epochs_run=epochs,
-        model=model.name,
-    )
+    return _finish_result(params, history, epochs_run, model, recorder)

@@ -29,7 +29,6 @@ A "table" here is one embedding matrix ``(N, k)`` with its per-key stats
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,239 @@
+"""Training observability: quality-vs-epoch traces from inside ``fit``.
+
+The paper's central empirical claim is that MapReduce-merged embeddings
+*retain the quality* of single-thread training while scaling speed with
+cores — but quality measured only after training finishes makes the
+quality-vs-speed trade (merge strategy, ``merge_every=K``, worker count)
+invisible during a run.  This module closes that loop: ``kg.fit(...,
+eval_every=K)`` runs the evaluation protocol at Reduce boundaries *during*
+training (the device eval engine makes this affordable — ROADMAP,
+Evaluation engines) and returns a structured :class:`TrainingTrace` on the
+``TrainResult``, the way DGL-KE and ParaGraphE track convergence curves to
+justify their parallelization trades.
+
+Pieces:
+
+  * :class:`EvalLoopConfig` — what to evaluate, how often, and when to
+    stop: ``eval_every`` (epochs between in-loop evals, a Reduce boundary
+    on the device pipeline), ``metric`` (a dotted spec into the
+    ``evaluate_all`` output, e.g. ``"entity_filtered.mean_rank"`` — the
+    paper-style best-filtered-mean-rank selection), ``patience`` (stop
+    after that many consecutive non-improving evals), ``engine`` +
+    ``engine_kw`` (which eval engine scores the boundary — ``"device"`` by
+    default), ``keep_best`` (snapshot the best-metric params).
+  * :class:`TraceRecorder` — the driver-side accumulator
+    ``core/mapreduce.train`` calls at each boundary; owns wall-clock,
+    best-metric bookkeeping, early stopping, and best-params snapshots
+    (copied, so params-buffer donation can't invalidate them).
+  * :class:`TrainingTrace` / :class:`TraceEntry` — the structured result:
+    per-boundary (epoch, merge round, loss, wall-clock seconds, full
+    metrics dict), JSONL-writable via :meth:`TrainingTrace.to_jsonl`
+    (``launch/train.py --kg-trace-out``).
+
+The in-loop metrics are *exactly* the numbers a post-hoc
+``kg.evaluate`` of the same params produces — the boundary params are
+bit-identical to a run stopped at that epoch (block-size invariance), and
+the eval engines are proved rank-for-rank identical
+(tests/test_trace.py pins this end to end).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+from jax import tree as jax_tree
+
+from repro.core import eval as kg_eval
+
+# metric leaves where smaller is better; everything else (mrr, hits@k,
+# triplet_classification_acc) improves upward
+_LOWER_IS_BETTER = ("mean_rank",)
+
+
+def metric_value(metrics: Dict, spec: str) -> float:
+    """Resolve a dotted metric spec against an ``evaluate_all`` output dict.
+
+    ``"entity_filtered.mean_rank"`` walks ``metrics["entity_filtered"]
+    ["mean_rank"]``; ``"triplet_classification_acc"`` reads the top-level
+    float.  Raises ``KeyError`` naming the available keys on a miss and
+    ``ValueError`` when the spec stops at a whole metric row."""
+    node = metrics
+    for part in spec.split("."):
+        if not isinstance(node, dict) or part not in node:
+            have = sorted(node) if isinstance(node, dict) else type(node)
+            raise KeyError(
+                f"metric spec {spec!r}: no key {part!r} (available: {have})")
+        node = node[part]
+    if isinstance(node, dict):
+        raise ValueError(
+            f"metric spec {spec!r} resolves to a whole row "
+            f"({sorted(node)}) — pick a leaf, e.g. {spec}.mean_rank")
+    return float(node)
+
+
+def metric_mode(spec: str) -> str:
+    """'min' | 'max': which direction of ``spec`` is an improvement."""
+    return "min" if spec.split(".")[-1] in _LOWER_IS_BETTER else "max"
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalLoopConfig:
+    """In-training evaluation schedule (see the module docstring).
+
+    ``eval_every`` counts epochs and must land on Reduce boundaries: any
+    value on the host pipeline (it Reduces every epoch), a multiple of
+    ``EpochSchedule.merge_every`` on the device pipeline.  ``patience``
+    stops training after that many consecutive evals without a strict
+    improvement of ``metric`` (None disables early stopping).  The final
+    epoch is always evaluated, so the trace ends on the run's last
+    params."""
+
+    eval_every: int
+    metric: str = "entity_filtered.mean_rank"
+    patience: Optional[int] = None
+    engine: str = "device"
+    filtered: bool = True
+    engine_kw: Dict = dataclasses.field(default_factory=dict)
+    keep_best: bool = True
+
+    def __post_init__(self):
+        if self.eval_every < 1:
+            raise ValueError(f"eval_every must be >= 1, got {self.eval_every}")
+        if self.patience is not None and self.patience < 1:
+            raise ValueError(f"patience must be >= 1, got {self.patience}")
+        if not self.filtered and self.metric.startswith("entity_filtered"):
+            raise ValueError(
+                f"metric {self.metric!r} needs filtered=True — the filtered "
+                "entity row is not computed otherwise")
+
+
+@dataclasses.dataclass
+class TraceEntry:
+    """One in-loop evaluation: the state of the run at a Reduce boundary."""
+
+    epoch: int              # 0-based index of the last epoch completed
+    merge_round: int        # Reduce rounds completed so far
+    loss: float             # training loss of that epoch
+    wall_clock: float       # seconds since training started
+    metrics: Dict           # full evaluate_all output dict
+
+    def as_dict(self) -> Dict:
+        return {
+            "epoch": self.epoch,
+            "merge_round": self.merge_round,
+            "loss": self.loss,
+            "wall_clock": self.wall_clock,
+            "metrics": self.metrics,
+        }
+
+
+@dataclasses.dataclass
+class TrainingTrace:
+    """Quality-vs-epoch curve of one training run."""
+
+    entries: List[TraceEntry]
+    eval_every: int
+    metric: str
+    best_epoch: Optional[int] = None
+    best_value: Optional[float] = None
+    stopped_early: bool = False
+
+    def values(self, spec: Optional[str] = None) -> List[float]:
+        """The curve of ``spec`` (default: the configured metric) across
+        entries — what bench_trace plots per merge strategy."""
+        spec = spec or self.metric
+        return [metric_value(e.metrics, spec) for e in self.entries]
+
+    def epochs(self) -> List[int]:
+        return [e.epoch for e in self.entries]
+
+    def best(self) -> Optional[TraceEntry]:
+        for e in self.entries:
+            if e.epoch == self.best_epoch:
+                return e
+        return None
+
+    def to_jsonl(self, path: str) -> None:
+        """One JSON object per boundary eval, in epoch order — the
+        machine-readable curve ``--kg-trace-out`` writes."""
+        with open(path, "w") as f:
+            for e in self.entries:
+                f.write(json.dumps(e.as_dict(), sort_keys=True))
+                f.write("\n")
+
+
+def make_eval_fn(
+    kg, model, norm: str, cfg: EvalLoopConfig
+) -> Callable[[Dict], Dict]:
+    """The boundary evaluator: full ``evaluate_all`` protocol on the
+    current params with the configured engine — so every trace entry is a
+    drop-in for a post-hoc ``kg.evaluate`` of the same params."""
+
+    def eval_fn(params):
+        return kg_eval.evaluate_all(
+            params, kg, norm=norm, filtered=cfg.filtered, model=model,
+            engine=cfg.engine, **cfg.engine_kw)
+
+    return eval_fn
+
+
+class TraceRecorder:
+    """Accumulates boundary evals for one training run (one per ``train``
+    call — owns the wall-clock origin and the early-stopping state)."""
+
+    def __init__(self, cfg: EvalLoopConfig, eval_fn: Callable[[Dict], Dict]):
+        self.cfg = cfg
+        self._eval_fn = eval_fn
+        self._mode = metric_mode(cfg.metric)
+        self._t0 = time.perf_counter()
+        self._stale = 0
+        self.entries: List[TraceEntry] = []
+        self.best_epoch: Optional[int] = None
+        self.best_value: Optional[float] = None
+        self.best_params = None
+        self.stopped_early = False
+
+    def _improved(self, value: float) -> bool:
+        if self.best_value is None:
+            return True
+        if self._mode == "min":
+            return value < self.best_value
+        return value > self.best_value
+
+    def record(self, epoch: int, merge_round: int, loss: float, params) -> bool:
+        """Evaluate ``params`` after ``epoch`` and append an entry.
+
+        Returns True when the early-stopping budget is exhausted (the
+        caller stops training).  Best-params snapshots are copied into
+        fresh buffers so a later donated ``block_fn`` call cannot
+        invalidate them."""
+        metrics = self._eval_fn(params)
+        value = metric_value(metrics, self.cfg.metric)
+        self.entries.append(TraceEntry(
+            epoch=epoch, merge_round=merge_round, loss=loss,
+            wall_clock=time.perf_counter() - self._t0, metrics=metrics))
+        if self._improved(value):
+            self.best_epoch, self.best_value = epoch, value
+            self._stale = 0
+            if self.cfg.keep_best:
+                self.best_params = jax_tree.map(
+                    lambda x: jnp.array(x), params)
+        else:
+            self._stale += 1
+        if self.cfg.patience is not None and self._stale >= self.cfg.patience:
+            self.stopped_early = True
+            return True
+        return False
+
+    def finalize(self) -> TrainingTrace:
+        return TrainingTrace(
+            entries=self.entries,
+            eval_every=self.cfg.eval_every,
+            metric=self.cfg.metric,
+            best_epoch=self.best_epoch,
+            best_value=self.best_value,
+            stopped_early=self.stopped_early,
+        )

@@ -20,13 +20,17 @@ pure function of (seed, epoch)):
     pipeline: per-worker permutations drawn from ``fold_in`` keys entirely
     on device, so the scanned epoch driver (``core/mapreduce.py``) never
     round-trips to the host between epochs.
+  * ``device_repartition`` / ``repartition_perm`` — on-device re-splitting
+    of the triplets across workers every M epochs
+    (``EpochSchedule.repartition_every``), removing the residual split
+    bias of a partition frozen at ``train()`` start.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 import warnings
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +55,8 @@ class KG:
     _known_index: Optional[tuple] = dataclasses.field(
         default=None, repr=False, compare=False)
     _filter_cands: Dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    _tc_negatives: Dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
 
     @property
@@ -127,6 +133,23 @@ class KG:
                     "filtering.", stacklevel=2)
             self._filter_cands[max_fanout] = (tails, heads)
         return self._filter_cands[max_fanout]
+
+    def tc_negatives(self, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+        """Corrupted valid/test counterparts for triplet classification,
+        built once per seed and cached on the instance.
+
+        The draws are exactly ``core/eval._tc_negatives`` (both engines'
+        exact-parity contract depends on them) — a pure function of
+        (valid, test, n_entities, seed), so caching cannot change any
+        metric.  The in-training evaluation loop calls the full protocol
+        every Reduce round; rebuilding these corruption dispatches per call
+        dominated triplet-classification cost."""
+        if seed not in self._tc_negatives:
+            from repro.core import eval as kg_eval
+
+            self._tc_negatives[seed] = kg_eval._tc_negatives(
+                self.valid, self.test, self.n_entities, seed)
+        return self._tc_negatives[seed]
 
 
 def _pad_groups(
@@ -326,6 +349,40 @@ def device_worker_batches(
     steps = n // batch_size
     perm = jax.random.permutation(key, n)[: steps * batch_size]
     return jnp.take(triplets, perm, axis=0).reshape(steps, batch_size, 3)
+
+
+def repartition_perm(key: jax.Array, n: int, round_idx: jax.Array) -> jax.Array:
+    """The global triplet permutation of re-partition round ``round_idx``.
+
+    Round 0 is the identity — the original host-side partition — so a
+    ``repartition_every`` larger than the run is bit-identical to no
+    re-partitioning at all.  The single definition of the permutation both
+    device-pipeline backends index into: the vmap driver applies it to the
+    stacked ``(W, N_w, 3)`` array (:func:`device_repartition`); the
+    shard_map driver all-gathers its shards and takes its own
+    ``N_w``-row slice of the same permutation — so worker ``w`` holds
+    identical triplets on both backends."""
+    perm = jax.random.permutation(key, n)
+    return jnp.where(round_idx == 0, jnp.arange(n), perm)
+
+
+def device_repartition(
+    key: jax.Array,
+    partitioned: jax.Array,      # (W, N_w, 3) on device
+    round_idx: jax.Array,
+) -> jax.Array:
+    """Re-split the full triplet set across workers on device.
+
+    The device pipeline's epoch batching redraws *within-worker*
+    permutations every epoch but the worker *membership* of each triplet is
+    frozen at ``train()`` start; re-partitioning every M epochs
+    (``EpochSchedule.repartition_every``) kills that residual split bias.
+    Pure function of (key, round) — callers fold the round index into the
+    key — which is what keeps block-size invariance intact."""
+    W, n_w, _ = partitioned.shape
+    flat = partitioned.reshape(W * n_w, 3)
+    perm = repartition_perm(key, W * n_w, round_idx)
+    return jnp.take(flat, perm, axis=0).reshape(W, n_w, 3)
 
 
 def device_epoch_batches(

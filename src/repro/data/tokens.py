@@ -9,10 +9,8 @@ exists: loss drops well below ln(V)) and (b) uniform noise tokens.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -22,10 +22,12 @@ from typing import Callable, Optional
 
 from repro.core import eval as kg_eval
 from repro.core import mapreduce
+from repro.core import trace as trace_lib
 from repro.core.models import KGConfig, KGModel, available, get_model
 
 TrainResult = mapreduce.TrainResult
 EpochSchedule = mapreduce.EpochSchedule
+TrainingTrace = trace_lib.TrainingTrace
 
 
 def models() -> tuple:
@@ -53,7 +55,9 @@ def make_configs(
     pipeline: str = "host",
     block_epochs: int = 1,
     merge_every: int = 1,
+    repartition_every: Optional[int] = None,
     strict_batching: bool = False,
+    donate_params: Optional[bool] = None,
 ) -> tuple[KGConfig, mapreduce.MapReduceConfig]:
     """Build the (model hyperparams, engine) config pair ``fit`` uses —
     exposed separately for benchmarks that drive epochs by hand.
@@ -61,8 +65,12 @@ def make_configs(
     ``pipeline='device'`` runs epochs in compiled scan blocks of
     ``block_epochs`` with on-device batching and negative sampling (results
     are bit-identical for any block size); ``merge_every=K`` lets SGD
-    workers take K local epochs between Reduces.  ``pipeline='host'`` (the
-    default) is the original per-epoch loop, preserved bit-for-bit."""
+    workers take K local epochs between Reduces; ``repartition_every=M``
+    re-splits the triplets across workers on device every M epochs
+    (killing residual split bias); ``donate_params`` (default on) donates
+    the params buffer through each compiled block so the accelerator holds
+    one copy of the tables.  ``pipeline='host'`` (the default) is the
+    original per-epoch loop, preserved bit-for-bit."""
     model = get_model(model)
     kcfg = KGConfig(
         n_entities=kg.n_entities,
@@ -85,8 +93,10 @@ def make_configs(
         model=model.name,
         pipeline=pipeline,
         schedule=mapreduce.EpochSchedule(
-            block_epochs=block_epochs, merge_every=merge_every),
+            block_epochs=block_epochs, merge_every=merge_every,
+            repartition_every=repartition_every),
         strict_batching=strict_batching,
+        donate_params=donate_params,
     )
     return kcfg, mcfg
 
@@ -101,18 +111,40 @@ def fit(
     mesh=None,
     params=None,
     callback: Optional[Callable[[int, float], None]] = None,
+    eval_every: Optional[int] = None,
+    eval_metric: str = "entity_filtered.mean_rank",
+    patience: Optional[int] = None,
+    eval_engine: str = "device",
+    eval_filtered: bool = True,
+    eval_kw: Optional[dict] = None,
+    keep_best: bool = True,
     **config_kw,
 ) -> TrainResult:
     """Train ``model`` on ``kg`` with the MapReduce engine.
 
     ``config_kw`` forwards to :func:`make_configs` (dim, margin, norm,
     learning_rate, n_workers, strategy, backend, batch_size, pipeline,
-    block_epochs, merge_every, ...).  Returns a :class:`TrainResult` with
-    params, loss_history, and the resolved model name.
+    block_epochs, merge_every, repartition_every, ...).  Returns a
+    :class:`TrainResult` with params, loss_history, and the resolved model
+    name.
 
     With ``pipeline="device"`` whole blocks of epochs run as one compiled
     scan on device and ``callback`` fires at block boundaries only (the
     host pipeline calls it every epoch).
+
+    In-training evaluation (``core/trace.py``): ``eval_every=K`` runs the
+    full evaluation protocol every K epochs *from inside the loop* — at
+    Reduce boundaries, so K must be a multiple of ``merge_every`` on the
+    device pipeline — and attaches a :class:`TrainingTrace` of
+    quality-vs-epoch curves to the result.  Each entry's metrics are
+    exactly what a post-hoc :func:`evaluate` of the same params returns.
+    ``eval_metric`` (a dotted spec, default the paper-style filtered mean
+    rank) drives ``patience`` early stopping (stop after that many
+    consecutive non-improving evals) and — with ``keep_best`` — the
+    ``best_params`` / ``best_epoch`` snapshot on the result.
+    ``eval_engine`` defaults to the device engine (identical numbers,
+    benchmarked multiples faster; ``eval_kw`` forwards engine options —
+    ``n_workers`` defaults to the training worker count).
 
     ``model`` may be a registry name or a ``KGModel`` instance; an instance
     is used as-is (it shadows any registry entry sharing its name — custom
@@ -120,10 +152,34 @@ def fit(
     registry doesn't know must be ``register()``-ed first."""
     model = get_model(model)
     kcfg, mcfg = make_configs(kg, model, paradigm, **config_kw)
+    eval_loop = None
+    if eval_every is not None:
+        engine_kw = dict(eval_kw or {})
+        if eval_engine == "device":
+            engine_kw.setdefault("n_workers", mcfg.n_workers)
+        eval_loop = trace_lib.EvalLoopConfig(
+            eval_every=eval_every, metric=eval_metric, patience=patience,
+            engine=eval_engine, filtered=eval_filtered,
+            engine_kw=engine_kw, keep_best=keep_best)
+    else:
+        non_defaults = {
+            "eval_metric": eval_metric != "entity_filtered.mean_rank",
+            "patience": patience is not None,
+            "eval_engine": eval_engine != "device",
+            "eval_filtered": eval_filtered is not True,
+            "eval_kw": eval_kw is not None,
+            "keep_best": keep_best is not True,
+        }
+        passed = sorted(k for k, hit in non_defaults.items() if hit)
+        if passed:
+            raise ValueError(
+                f"{passed} configure the in-training evaluation loop and "
+                "would be silently ignored — pass eval_every=K to enable "
+                "it")
     return mapreduce.train(
         kg, kcfg, mcfg,
         epochs=epochs, seed=seed, mesh=mesh, params=params, callback=callback,
-        model=model,
+        model=model, eval_loop=eval_loop,
     )
 
 

@@ -21,7 +21,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.launch.mesh import make_production_mesh

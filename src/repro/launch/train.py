@@ -20,7 +20,6 @@ The paper's cross-pod MapReduce training is enabled with --outer-sync H
 from __future__ import annotations
 
 import argparse
-import os
 
 import jax
 
@@ -46,21 +45,49 @@ def _run_kg(args) -> None:
                  else args.kg_epochs)
         schedule_kw = dict(
             pipeline="device", block_epochs=block,
-            merge_every=args.kg_merge_every)
-    elif args.kg_block_epochs is not None or args.kg_merge_every != 1:
+            merge_every=args.kg_merge_every,
+            repartition_every=args.kg_repartition_every)
+    elif (args.kg_block_epochs is not None or args.kg_merge_every != 1
+          or args.kg_repartition_every is not None):
         raise SystemExit(
-            "--kg-block-epochs / --kg-merge-every schedule the device "
-            "pipeline; add --kg-pipeline device (the host pipeline merges "
-            "every epoch, one dispatch per epoch)")
+            "--kg-block-epochs / --kg-merge-every / --kg-repartition-every "
+            "schedule the device pipeline; add --kg-pipeline device (the "
+            "host pipeline merges every epoch, one dispatch per epoch)")
+    eval_kw = {}
+    if args.kg_eval_every is not None:
+        eval_kw = dict(
+            eval_every=args.kg_eval_every, patience=args.kg_patience,
+            eval_metric=args.kg_eval_metric,
+            eval_engine=args.kg_eval_engine or "device")
+    elif (args.kg_patience is not None or args.kg_trace_out is not None
+          or args.kg_eval_metric != "entity_filtered.mean_rank"):
+        raise SystemExit(
+            "--kg-patience / --kg-trace-out / --kg-eval-metric configure "
+            "the in-training evaluation loop; add --kg-eval-every K")
     res = kg_api.fit(
         graph, model=args.kg, paradigm=args.kg_paradigm,
         n_workers=args.kg_workers, strategy=args.kg_strategy,
         backend="vmap", batch_size=256, dim=48,
         learning_rate=args.lr if args.lr is not None else 5e-2,
-        epochs=args.kg_epochs, seed=args.seed, **schedule_kw,
+        epochs=args.kg_epochs, seed=args.seed, **schedule_kw, **eval_kw,
         callback=lambda e, l: print(f"epoch {e + 1}: loss={l:.4f}", flush=True))
     print(f"[{res.model}/{args.kg_paradigm}/{args.kg_pipeline}] final loss: "
-          f"{res.loss_history[-1]:.4f} (start {res.loss_history[0]:.4f})")
+          f"{res.loss_history[-1]:.4f} (start {res.loss_history[0]:.4f}) "
+          f"after {res.epochs_run} epochs")
+
+    if res.trace is not None:
+        tr = res.trace
+        print(f"in-loop eval every {tr.eval_every} epochs "
+              f"({len(tr.entries)} points, metric {tr.metric}):")
+        for e, v in zip(tr.epochs(), tr.values()):
+            print(f"  epoch {e + 1:4d}: {tr.metric}={v:.4f}")
+        if tr.stopped_early:
+            print(f"early-stopped (patience={args.kg_patience}); "
+                  f"best epoch {tr.best_epoch + 1} "
+                  f"({tr.metric}={tr.best_value:.4f})")
+        if args.kg_trace_out:
+            tr.to_jsonl(args.kg_trace_out)
+            print(f"wrote trace to {args.kg_trace_out}")
 
     if args.kg_eval_engine:
         engine_kw = {}
@@ -103,11 +130,36 @@ def main(argv=None):
     ap.add_argument("--kg-merge-every", type=int, default=1,
                     help="device pipeline, sgd paradigm: local epochs "
                          "between Reduce merges")
+    ap.add_argument("--kg-repartition-every", type=int, default=None,
+                    help="device pipeline: re-split triplets across "
+                         "workers on device every M epochs (kills residual "
+                         "split bias)")
+    ap.add_argument("--kg-eval-every", type=int, default=None,
+                    help="run the eval protocol every K epochs from inside "
+                         "fit (Reduce boundaries; device pipeline: multiple "
+                         "of --kg-merge-every) and print the "
+                         "quality-vs-epoch trace")
+    ap.add_argument("--kg-eval-metric",
+                    default="entity_filtered.mean_rank",
+                    help="dotted spec into the eval output driving early "
+                         "stopping / best-params selection (e.g. "
+                         "entity_filtered.mean_rank, entity_raw.hits@10, "
+                         "triplet_classification_acc)")
+    ap.add_argument("--kg-patience", type=int, default=None,
+                    help="early-stop after this many consecutive "
+                         "non-improving in-loop evals (needs "
+                         "--kg-eval-every)")
+    ap.add_argument("--kg-trace-out", default=None, metavar="PATH",
+                    help="write the in-loop eval trace as JSONL (one "
+                         "boundary eval per line; needs --kg-eval-every)")
     ap.add_argument("--kg-eval-engine", default=None,
                     choices=["host", "device"],
                     help="run the three-task eval protocol after training: "
                          "'host' = reference loop, 'device' = compiled "
-                         "batched engine sharded over --kg-workers")
+                         "batched engine sharded over --kg-workers.  With "
+                         "--kg-eval-every it also selects the in-loop eval "
+                         "engine (default 'device' there — 'host' makes "
+                         "every boundary eval pay the reference loop)")
     ap.add_argument("--reduced", action="store_true",
                     help="CPU-sized config of the same family")
     ap.add_argument("--steps", type=int, default=100)

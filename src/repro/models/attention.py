@@ -18,7 +18,6 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models import common
 from repro.models.common import ModelConfig, dense_init, rms_norm, rope, softcap
 
 NEG_INF = -2.0e38

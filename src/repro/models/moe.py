@@ -19,7 +19,6 @@ the roofline's MODEL_FLOPS/HLO_FLOPs usefulness ratio checks.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

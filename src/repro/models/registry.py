@@ -11,7 +11,7 @@ every input (weak-type-correct, shardable, no device allocation).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

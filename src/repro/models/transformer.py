@@ -12,8 +12,7 @@ re-computes block activations instead of saving them.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ replicated.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import numpy as np

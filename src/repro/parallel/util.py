@@ -8,7 +8,7 @@ on (16,16), (2,16,16) and single-device meshes.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple, Union
+from typing import Sequence, Tuple, Union
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 V5E = {
     "peak_flops": 197e12,      # bf16 per chip

@@ -9,7 +9,7 @@ import argparse
 import glob
 import json
 import os
-from typing import Dict, List
+from typing import List
 
 DEF_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")

@@ -6,7 +6,7 @@ reuse across waves is the host scheduler's job).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ tests/test_fault_tolerance.py to prove resume-exactness.
 from __future__ import annotations
 
 import dataclasses
-import os
 import time
 from typing import Callable, Optional
 

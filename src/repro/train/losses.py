@@ -8,7 +8,6 @@ length — and the backward pass recomputes them per chunk instead of saving.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional
 
 import jax

@@ -9,7 +9,6 @@ All are pure pytree transforms; state shardings mirror param shardings
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ tested via subprocesses (tests/helpers/)."""
 import os
 import sys
 
-import numpy as np
 import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

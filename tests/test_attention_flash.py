@@ -1,6 +1,5 @@
 """The flash-blocked attention path must equal the dense reference exactly
 (same math, different blocking), for every mask kind and GQA grouping."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

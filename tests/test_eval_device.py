@@ -181,6 +181,51 @@ def test_shard_map_backend_matches_vmap(tiny_kg, tiny_params):
             np.testing.assert_array_equal(v[grp][side], s[grp][side])
 
 
+def test_fused_relation_scan_matches_host_and_standalone(tiny_kg,
+                                                         tiny_params):
+    """Relation prediction fused into the entity scan body
+    (entity_ranks_device(relations=True), what evaluate_all_device runs)
+    must equal both the host reference and the standalone relation scan,
+    rank for rank."""
+    for model in MODELS:
+        host_m, host_ranks = kg_eval.relation_prediction(
+            tiny_params[model], tiny_kg.test, "l1", model=model,
+            return_ranks=True)
+        fused = eval_device.entity_ranks_device(
+            tiny_params[model], tiny_kg.test, "l1",
+            tiny_kg.eval_filter_candidates(), model=model, n_workers=2,
+            relations=True)
+        np.testing.assert_array_equal(
+            host_ranks, fused["relation_ranks"], err_msg=model)
+        standalone_m, standalone_ranks = (
+            eval_device.relation_prediction_device(
+                tiny_params[model], tiny_kg.test, "l1", model=model,
+                n_workers=2, return_ranks=True))
+        np.testing.assert_array_equal(
+            host_ranks, standalone_ranks, err_msg=model)
+        assert host_m.row() == standalone_m.row()
+
+
+def test_tc_negatives_cached_and_identical(tiny_kg, tiny_params):
+    """KG.tc_negatives caches the corruption draws (the in-loop eval calls
+    the protocol every Reduce round) without changing a single draw."""
+    a = tiny_kg.tc_negatives(0)
+    b = tiny_kg.tc_negatives(0)
+    assert a[0] is b[0] and a[1] is b[1]          # built once, cached
+    direct = kg_eval._tc_negatives(
+        tiny_kg.valid, tiny_kg.test, tiny_kg.n_entities, 0)
+    np.testing.assert_array_equal(a[0], direct[0])
+    np.testing.assert_array_equal(a[1], direct[1])
+    # and the cached path yields the same accuracy as the self-built one
+    tc_cached = eval_device.triplet_classification_device(
+        tiny_params["transe"], tiny_kg.valid, tiny_kg.test,
+        tiny_kg.n_entities, "l1", model="transe", negatives=a)
+    tc_plain = eval_device.triplet_classification_device(
+        tiny_params["transe"], tiny_kg.valid, tiny_kg.test,
+        tiny_kg.n_entities, "l1", model="transe")
+    assert tc_cached == tc_plain
+
+
 def test_worker_map_validates_backend_and_mesh():
     """worker_map argument validation (the W % mesh-size divisibility check
     needs a multi-device mesh and is exercised by tests/helpers)."""

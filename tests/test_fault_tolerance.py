@@ -2,7 +2,6 @@
 checkpoint must reproduce the uninterrupted run exactly (deterministic
 data + atomic checkpoints + step-keyed resume)."""
 import numpy as np
-import pytest
 
 import jax
 

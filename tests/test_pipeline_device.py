@@ -116,6 +116,77 @@ def test_device_history_matches_host_length_and_finite(tiny_kg):
 
 
 # ---------------------------------------------------------------------------
+# On-device re-partitioning (EpochSchedule.repartition_every)
+# ---------------------------------------------------------------------------
+
+def test_repartition_inf_is_identity(tiny_kg):
+    """M >= epochs never leaves re-partition round 0 — which is defined as
+    the original partition — so it must be bit-identical to M=None."""
+    off = _fit_device(tiny_kg, model="transe", backend="vmap", epochs=4,
+                      block_epochs=4)
+    inf = _fit_device(tiny_kg, model="transe", backend="vmap", epochs=4,
+                      block_epochs=4, repartition_every=10**6)
+    _assert_identical(off, inf)
+
+
+def test_repartition_changes_trajectory_and_learns(tiny_kg):
+    off = _fit_device(tiny_kg, model="transe", backend="vmap", epochs=6,
+                      block_epochs=6)
+    on = _fit_device(tiny_kg, model="transe", backend="vmap", epochs=6,
+                     block_epochs=6, repartition_every=2)
+    assert not np.array_equal(
+        np.asarray(off.params["ent"]), np.asarray(on.params["ent"]))
+    assert on.loss_history[-1] < on.loss_history[0], on.loss_history
+
+
+def test_repartition_block_invariance(tiny_kg):
+    """The effective partition of epoch e is a pure function of (seed,
+    e // M), so how epochs are grouped into blocks still cannot matter."""
+    kw = dict(model="transe", backend="vmap", epochs=4, repartition_every=2)
+    r1 = _fit_device(tiny_kg, block_epochs=1, **kw)
+    r4 = _fit_device(tiny_kg, block_epochs=4, **kw)
+    _assert_identical(r1, r4)
+
+
+def test_repartition_requires_device_pipeline():
+    with pytest.raises(ValueError, match="pipeline='device'"):
+        mapreduce.MapReduceConfig(
+            pipeline="host",
+            schedule=mapreduce.EpochSchedule(repartition_every=2))
+
+
+def test_repartition_every_validated():
+    with pytest.raises(ValueError, match="repartition_every"):
+        mapreduce.EpochSchedule(repartition_every=0)
+
+
+# ---------------------------------------------------------------------------
+# Params-buffer donation (MapReduceConfig.donate_params)
+# ---------------------------------------------------------------------------
+
+def test_donation_results_bit_identical(tiny_kg):
+    on = _fit_device(tiny_kg, model="transe", backend="vmap", epochs=4,
+                     block_epochs=2, donate_params=True)
+    off = _fit_device(tiny_kg, model="transe", backend="vmap", epochs=4,
+                      block_epochs=2, donate_params=False)
+    _assert_identical(on, off)
+
+
+def test_donation_preserves_caller_resume_params(tiny_kg):
+    """The driver copies caller-provided params before the first donated
+    block call, so the caller's buffers survive the run."""
+    warm = _fit_device(tiny_kg, model="transe", backend="vmap", epochs=2,
+                       block_epochs=2)
+    resumed = _fit_device(tiny_kg, model="transe", backend="vmap", epochs=2,
+                          block_epochs=2, params=warm.params,
+                          donate_params=True)
+    # the original params must still be readable (not donated away)
+    for k in warm.params:
+        assert np.all(np.isfinite(np.asarray(warm.params[k])))
+    assert resumed.epochs_run == 2
+
+
+# ---------------------------------------------------------------------------
 # Validation
 # ---------------------------------------------------------------------------
 

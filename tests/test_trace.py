@@ -1,0 +1,279 @@
+"""Tests for the training observability subsystem (core/trace.py + the
+eval_every loop in core/mapreduce.py): in-loop trace entries exactly equal
+post-hoc evaluation of the same params, early stopping is deterministic
+under a fixed seed, on-device re-partitioning is invariant at M=inf, and
+params-buffer donation leaves results bit-identical.
+
+The acceptance bar for the trace: ``kg.fit(..., eval_every=K)`` metrics at
+every Reduce boundary must EXACTLY match ``kg.evaluate`` of a run stopped
+at that boundary — for both pipelines and both paradigms (the full matrix
+is marked ``slow``; tier-1 keeps the sgd cells as its cross-section).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import kg as kg_api
+from repro.core import mapreduce
+from repro.core import trace as trace_lib
+
+# batch 75 divides the 1125-triplet per-worker split of tiny_kg at W=2 —
+# no remainder warnings in this suite
+BASE = dict(model="transe", n_workers=2, dim=8, learning_rate=0.05,
+            batch_size=75, seed=0)
+
+
+def _fit(tiny_kg, **kw):
+    merged = dict(BASE)
+    merged.update(kw)
+    return kg_api.fit(tiny_kg, **merged)
+
+
+def _assert_trace_matches_posthoc(tiny_kg, pipeline, paradigm,
+                                  posthoc_engine="device"):
+    """Every trace entry's metrics == kg.evaluate of a fresh run stopped at
+    that entry's epoch (same config, no eval loop) — exact float equality,
+    which holds because boundary params are bit-identical (block-size
+    invariance) and the eval engines are rank-for-rank identical."""
+    kw = dict(paradigm=paradigm, eval_every=2, epochs=4)
+    if pipeline == "device":
+        kw.update(pipeline="device", block_epochs=4)
+    res = _fit(tiny_kg, **kw)
+    assert res.trace is not None
+    assert res.trace.epochs() == [1, 3]
+    for entry in res.trace.entries:
+        rerun_kw = {k: v for k, v in kw.items() if k != "eval_every"}
+        rerun_kw["epochs"] = entry.epoch + 1
+        rerun = _fit(tiny_kg, **rerun_kw)
+        engine_kw = {"n_workers": 2} if posthoc_engine == "device" else {}
+        post = kg_api.evaluate(
+            rerun.params, "transe", tiny_kg, engine=posthoc_engine,
+            **engine_kw)
+        assert post == entry.metrics, (pipeline, paradigm, entry.epoch)
+
+
+# ---------------------------------------------------------------------------
+# Trace == post-hoc eval (tier-1 cross-section + the slow full matrix)
+# ---------------------------------------------------------------------------
+
+def test_trace_matches_posthoc_device_sgd(tiny_kg):
+    _assert_trace_matches_posthoc(tiny_kg, "device", "sgd")
+
+
+def test_trace_matches_posthoc_host_sgd(tiny_kg):
+    _assert_trace_matches_posthoc(tiny_kg, "host", "sgd")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("pipeline", ["host", "device"])
+@pytest.mark.parametrize("paradigm", ["sgd", "bgd"])
+def test_trace_matches_posthoc_matrix(tiny_kg, pipeline, paradigm):
+    _assert_trace_matches_posthoc(tiny_kg, pipeline, paradigm)
+
+
+@pytest.mark.slow
+def test_trace_matches_posthoc_host_engine(tiny_kg):
+    """The trace (device-engine evals) equals a post-hoc eval on the HOST
+    engine too — the cross-engine face of the acceptance bar."""
+    _assert_trace_matches_posthoc(tiny_kg, "device", "sgd",
+                                  posthoc_engine="host")
+
+
+def test_both_pipelines_evaluate_the_same_boundaries(tiny_kg):
+    """The two pipelines train different (both valid) trajectories, so their
+    metric values differ — but the boundary structure of the trace is
+    identical: same epochs, same merge rounds, final epoch included."""
+    r_host = _fit(tiny_kg, epochs=5, eval_every=2)
+    r_dev = _fit(tiny_kg, epochs=5, eval_every=2, pipeline="device",
+                 block_epochs=5)
+    assert r_host.trace.epochs() == r_dev.trace.epochs() == [1, 3, 4]
+    assert ([e.merge_round for e in r_host.trace.entries]
+            == [e.merge_round for e in r_dev.trace.entries] == [2, 4, 5])
+
+
+def test_eval_boundaries_are_reduce_boundaries_with_merge_every(tiny_kg):
+    res = _fit(tiny_kg, epochs=8, eval_every=4, pipeline="device",
+               block_epochs=8, merge_every=2)
+    assert res.trace.epochs() == [3, 7]
+    assert [e.merge_round for e in res.trace.entries] == [2, 4]
+
+
+def test_trace_identical_to_untraced_run(tiny_kg):
+    """Observing the run must not change it: params and loss history with
+    eval_every are bit-identical to the same run without it (the device
+    driver slices blocks at eval boundaries — covered by block-size
+    invariance)."""
+    plain = _fit(tiny_kg, epochs=4, pipeline="device", block_epochs=4)
+    traced = _fit(tiny_kg, epochs=4, pipeline="device", block_epochs=4,
+                  eval_every=2)
+    np.testing.assert_array_equal(
+        np.asarray(plain.loss_history, np.float32),
+        np.asarray(traced.loss_history, np.float32))
+    for k in plain.params:
+        np.testing.assert_array_equal(
+            np.asarray(plain.params[k]), np.asarray(traced.params[k]))
+
+
+# ---------------------------------------------------------------------------
+# Early stopping + best-params checkpointing
+# ---------------------------------------------------------------------------
+
+def test_early_stopping_deterministic(tiny_kg):
+    """lr=0 freezes the params, so every eval repeats the same metrics: the
+    first eval sets the best, the second is non-improving, patience=1 stops
+    the run at epoch 4 — and two identical calls agree exactly."""
+    kw = dict(epochs=8, eval_every=2, patience=1, learning_rate=0.0,
+              pipeline="device", block_epochs=8)
+    a = _fit(tiny_kg, **kw)
+    b = _fit(tiny_kg, **kw)
+    assert a.epochs_run == b.epochs_run == 4
+    assert a.trace.stopped_early and b.trace.stopped_early
+    assert len(a.loss_history) == a.epochs_run
+    assert a.trace.epochs() == b.trace.epochs()
+    assert a.trace.values() == b.trace.values()
+    assert a.best_epoch == b.best_epoch == 1
+
+
+def test_early_stopping_deterministic_while_learning(tiny_kg):
+    kw = dict(epochs=6, eval_every=2, patience=2, pipeline="device",
+              block_epochs=2)
+    a = _fit(tiny_kg, **kw)
+    b = _fit(tiny_kg, **kw)
+    assert a.epochs_run == b.epochs_run
+    assert a.trace.values() == b.trace.values()
+    assert a.best_epoch == b.best_epoch
+
+
+def test_best_params_snapshot_matches_boundary_run(tiny_kg):
+    """keep_best snapshots the params of the best-metric boundary: they must
+    be bit-identical to a fresh run stopped at best_epoch + 1 (and survive
+    later donated block calls — the snapshot is copied)."""
+    res = _fit(tiny_kg, epochs=6, eval_every=2, pipeline="device",
+               block_epochs=6)
+    assert res.best_epoch in res.trace.epochs()
+    rerun = _fit(tiny_kg, epochs=res.best_epoch + 1, pipeline="device",
+                 block_epochs=6)
+    for k in rerun.params:
+        np.testing.assert_array_equal(
+            np.asarray(res.best_params[k]), np.asarray(rerun.params[k]),
+            err_msg=f"table {k}")
+
+
+def test_keep_best_false_skips_snapshot(tiny_kg):
+    res = _fit(tiny_kg, epochs=4, eval_every=2, pipeline="device",
+               block_epochs=4, keep_best=False)
+    assert res.best_params is None
+    assert res.best_epoch is not None          # metric tracking still on
+
+
+def test_higher_is_better_metric_direction(tiny_kg):
+    """hits@10 improves upward: with frozen params (lr=0) the second eval is
+    non-improving for a max-mode metric too."""
+    res = _fit(tiny_kg, epochs=4, eval_every=2, patience=1,
+               learning_rate=0.0, pipeline="device", block_epochs=4,
+               eval_metric="entity_filtered.hits@10")
+    assert res.trace.stopped_early and res.epochs_run == 4
+
+
+# ---------------------------------------------------------------------------
+# TrainingTrace structure + JSONL
+# ---------------------------------------------------------------------------
+
+def test_trace_jsonl_roundtrip(tiny_kg, tmp_path):
+    res = _fit(tiny_kg, epochs=4, eval_every=2, pipeline="device",
+               block_epochs=4)
+    path = tmp_path / "trace.jsonl"
+    res.trace.to_jsonl(str(path))
+    rows = [json.loads(line) for line in path.read_text().splitlines()]
+    assert [r["epoch"] for r in rows] == res.trace.epochs()
+    for row, entry in zip(rows, res.trace.entries):
+        assert row["metrics"] == entry.metrics
+        assert row["loss"] == entry.loss
+        assert row["merge_round"] == entry.merge_round
+
+
+def test_wall_clock_monotonic_and_loss_matches_history(tiny_kg):
+    res = _fit(tiny_kg, epochs=4, eval_every=2, pipeline="device",
+               block_epochs=2)
+    walls = [e.wall_clock for e in res.trace.entries]
+    assert all(b >= a for a, b in zip(walls, walls[1:]))
+    for e in res.trace.entries:
+        assert e.loss == res.loss_history[e.epoch]
+
+
+def test_trace_best_entry_lookup(tiny_kg):
+    res = _fit(tiny_kg, epochs=4, eval_every=2, pipeline="device",
+               block_epochs=4)
+    best = res.trace.best()
+    assert best is not None and best.epoch == res.best_epoch
+    assert (trace_lib.metric_value(best.metrics, res.trace.metric)
+            == res.trace.best_value)
+
+
+# ---------------------------------------------------------------------------
+# Metric-spec helpers
+# ---------------------------------------------------------------------------
+
+def test_metric_value_resolution():
+    metrics = {"entity_filtered": {"mean_rank": 12.5, "hits@10": 0.4},
+               "triplet_classification_acc": 0.8}
+    assert trace_lib.metric_value(
+        metrics, "entity_filtered.mean_rank") == 12.5
+    assert trace_lib.metric_value(metrics, "entity_filtered.hits@10") == 0.4
+    assert trace_lib.metric_value(
+        metrics, "triplet_classification_acc") == 0.8
+    with pytest.raises(KeyError, match="available"):
+        trace_lib.metric_value(metrics, "entity_raw.mean_rank")
+    with pytest.raises(ValueError, match="pick a leaf"):
+        trace_lib.metric_value(metrics, "entity_filtered")
+
+
+def test_metric_mode_directions():
+    assert trace_lib.metric_mode("entity_filtered.mean_rank") == "min"
+    assert trace_lib.metric_mode("entity_filtered.hits@10") == "max"
+    assert trace_lib.metric_mode("relation_prediction.mrr") == "max"
+    assert trace_lib.metric_mode("triplet_classification_acc") == "max"
+
+
+# ---------------------------------------------------------------------------
+# Validation
+# ---------------------------------------------------------------------------
+
+def test_eval_every_must_hit_reduce_boundaries(tiny_kg):
+    with pytest.raises(ValueError, match="Reduce boundaries"):
+        _fit(tiny_kg, epochs=6, eval_every=3, pipeline="device",
+             block_epochs=6, merge_every=2)
+
+
+def test_patience_requires_eval_every(tiny_kg):
+    with pytest.raises(ValueError, match="eval_every"):
+        _fit(tiny_kg, epochs=4, patience=2)
+
+
+def test_eval_loop_config_validation():
+    with pytest.raises(ValueError, match="eval_every"):
+        trace_lib.EvalLoopConfig(eval_every=0)
+    with pytest.raises(ValueError, match="patience"):
+        trace_lib.EvalLoopConfig(eval_every=2, patience=0)
+    with pytest.raises(ValueError, match="filtered=True"):
+        trace_lib.EvalLoopConfig(eval_every=2, filtered=False)
+
+
+def test_unknown_metric_fails_at_first_eval(tiny_kg):
+    with pytest.raises(KeyError, match="no key"):
+        _fit(tiny_kg, epochs=2, eval_every=2, eval_metric="nope.mean_rank")
+
+
+# ---------------------------------------------------------------------------
+# mapreduce.train-level plumbing (the non-facade entry point)
+# ---------------------------------------------------------------------------
+
+def test_train_accepts_eval_loop_config(tiny_kg, tiny_tcfg):
+    cfg = mapreduce.MapReduceConfig(n_workers=2, backend="vmap",
+                                    batch_size=75)
+    loop = trace_lib.EvalLoopConfig(eval_every=2, engine="device",
+                                    engine_kw={"n_workers": 2})
+    res = mapreduce.train(tiny_kg, tiny_tcfg, cfg, epochs=2, seed=0,
+                          eval_loop=loop)
+    assert res.trace is not None and res.trace.epochs() == [1]
