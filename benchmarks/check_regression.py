@@ -25,7 +25,8 @@ import json
 import os
 import sys
 
-DEFAULT_NAMES = ("BENCH_pipeline.json", "BENCH_eval.json")
+DEFAULT_NAMES = ("BENCH_pipeline.json", "BENCH_eval.json",
+                 "BENCH_serve.json")
 RATE_SUFFIX = "_per_s"
 
 

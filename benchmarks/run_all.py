@@ -7,8 +7,10 @@ writes JSON artifacts at the repo root so the numbers accumulate across PRs.
 Always runs the pipeline bench (host vs device epochs/sec, W in {1,2,4,8},
 both paradigms -> ``BENCH_pipeline.json``), the eval bench (host vs device
 eval-engine queries/sec on filtered entity inference, W in {1,2,4,8}
--> ``BENCH_eval.json``), and the trace bench (quality-vs-epoch curves per
-merge strategy + in-loop eval overhead -> ``BENCH_trace.json``).
+-> ``BENCH_eval.json``), the trace bench (quality-vs-epoch curves per
+merge strategy + in-loop eval overhead -> ``BENCH_trace.json``), and the
+serve bench (batched KnowledgeBase top-k queries/sec vs a per-query host
+loop, W in {1,2,4} -> ``BENCH_serve.json``).
 
 ``--quick`` is the CI bench-regression profile: the W in {1, 4}
 cross-section of the grids (and single-repeat trace overhead) — the
@@ -53,6 +55,7 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_pipeline.json")
     ap.add_argument("--eval-out", default="BENCH_eval.json")
     ap.add_argument("--trace-out", default="BENCH_trace.json")
+    ap.add_argument("--serve-out", default="BENCH_serve.json")
     ap.add_argument("--out-dir", default=".",
                     help="directory the BENCH_*.json files are written to")
     ap.add_argument("--quick", action="store_true",
@@ -63,7 +66,7 @@ def main() -> None:
                     help="also run the printed-only benchmark suites")
     args = ap.parse_args()
 
-    from benchmarks import bench_eval, bench_pipeline, bench_trace
+    from benchmarks import bench_eval, bench_pipeline, bench_serve, bench_trace
 
     os.makedirs(args.out_dir, exist_ok=True)
 
@@ -125,6 +128,27 @@ def main() -> None:
         },
         **trace_out,
     }, path(args.trace_out))
+
+    print("== bench:serve ==", flush=True)
+    t0 = time.time()
+    serve_rows = bench_serve.run(verbose=True, model=args.model,
+                                 quick=args.quick)
+    print(f"== bench:serve done ({time.time() - t0:.0f}s) ==", flush=True)
+    _write({
+        "bench": "serve",
+        **_env(),
+        "config": {
+            "repeats": bench_serve.REPEATS,
+            "host_iters": bench_serve.HOST_ITERS,
+            "engine_iters": bench_serve.ENGINE_ITERS,
+            "dim": bench_serve.DIM,
+            "k": bench_serve.K,
+            "tile": bench_serve.TILE,
+            "graph": "synthetic_kg(1, n_entities=1000, n_relations=10, "
+                     "n_triplets=4000)",
+        },
+        "rows": serve_rows,
+    }, path(args.serve_out))
 
     if args.full:
         from benchmarks import run as run_mod

@@ -11,6 +11,10 @@ With ``--eval-every K`` every setting also records its quality-vs-epoch
 curve from inside ``fit`` (the in-training evaluation loop, run on the
 device eval engine at Reduce boundaries), so the merge strategies can be
 compared *during* training, not just at the end.
+
+Each setting's result is handled through its ``KnowledgeBase`` artifact
+(``res.kb``) — evaluation goes through it, and ``--save-prefix`` persists
+every trained setting as a loadable/serveable artifact.
 """
 import argparse
 import os
@@ -51,6 +55,9 @@ def main():
     ap.add_argument("--trace-out", default=None, metavar="PREFIX",
                     help="with --eval-every: write each setting's trace "
                          "as PREFIX.<setting>.jsonl")
+    ap.add_argument("--save-prefix", default=None, metavar="PREFIX",
+                    help="save each trained setting as a KnowledgeBase "
+                         "artifact at PREFIX.<setting>/")
     args = ap.parse_args()
 
     pipeline_kw = {}
@@ -87,12 +94,16 @@ def main():
             epochs=args.epochs, seed=0, **kw)
         eval_kw = ({"engine": "device", "n_workers": args.workers}
                    if args.eval_engine == "device" else {})
-        m = kg_api.evaluate(res.params, args.model, graph, **eval_kw)
+        m = kg_api.evaluate(res.kb, **eval_kw)
         ef = m["entity_filtered"]
         results[name] = (res.loss_history[-1], ef, time.time() - t0)
         print(f"{name:26s} loss={res.loss_history[-1]:.4f} "
               f"MR={ef['mean_rank']:7.1f} hits@10={ef['hits@10']:.3f} "
               f"({time.time()-t0:.0f}s)", flush=True)
+        if args.save_prefix:
+            path = f"{args.save_prefix}.{name}"
+            res.kb.save(path)
+            print(f"  saved KnowledgeBase artifact to {path}", flush=True)
         if res.trace is not None:
             curve = " ".join(
                 f"{e + 1}:{mr:.1f}"

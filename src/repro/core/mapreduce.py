@@ -146,6 +146,97 @@ class EpochSchedule:
 
 
 @dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    """Periodic training checkpoints at Reduce boundaries (``train()`` /
+    ``kg.fit(checkpoint_every=K, ckpt_dir=...)``).
+
+    ``every`` counts epochs between snapshots (a multiple of
+    ``merge_every`` on the device pipeline — checkpoints are shared-model
+    states, which only exist at Reduce boundaries); ``None`` saves only
+    the final state.  The run's last epoch (including an early stop) is
+    always checkpointed, so ``resume=True`` can always continue.  Saves go
+    through ``train/checkpoint.AsyncSaver`` by default — the loop pays
+    the device->host snapshot, a daemon thread pays the disk I/O;
+    ``synchronous=True`` forces in-line writes (tests, tiny runs).
+
+    The manifest records model name, seed, graph fingerprint, epoch, and
+    the loss history so far — everything ``kg.fit(resume=True)`` needs to
+    continue **bit-identically** (the device pipeline's randomness is a
+    pure function of (seed, epoch); the host pipeline's split-chain is
+    replayed from the manifest's epoch)."""
+
+    ckpt_dir: str
+    every: Optional[int] = None
+    keep: int = 3
+    synchronous: bool = False
+
+    def __post_init__(self):
+        if self.every is not None and self.every < 1:
+            raise ValueError(f"every must be >= 1 (or None), got {self.every}")
+
+
+def resume_config(tcfg: KGConfig, cfg: MapReduceConfig) -> dict:
+    """The manifest fields a resume must match for bit-identity: every
+    knob that shapes the training trajectory — partitioning, batching,
+    schedule, paradigm/pipeline/strategy, and the scalar hyperparameters.
+    ``backend`` is deliberately absent (vmap and shard_map are proved
+    equivalent, so resuming a vmap checkpoint on a real mesh is fine), as
+    is ``block_epochs`` (block-size invariance)."""
+    return {
+        "paradigm": cfg.paradigm,
+        "pipeline": cfg.pipeline,
+        "n_workers": cfg.n_workers,
+        "batch_size": cfg.batch_size,
+        "partition": cfg.partition,
+        "strategy": cfg.strategy if cfg.paradigm == "sgd" else None,
+        "merge_every": cfg.schedule.merge_every,
+        "repartition_every": cfg.schedule.repartition_every,
+        "margin": tcfg.margin,
+        "norm": tcfg.norm,
+        "learning_rate": tcfg.learning_rate,
+        "normalize": tcfg.normalize,
+        "sampling": tcfg.sampling,
+    }
+
+
+class _CheckpointWriter:
+    """Driver-side checkpoint hook: owns the AsyncSaver and the shared
+    manifest fields; both pipeline loops call ``due`` / ``save``."""
+
+    def __init__(self, cfg: CheckpointConfig, base_extra: dict):
+        from repro.train import checkpoint as checkpoint_lib
+
+        self._lib = checkpoint_lib
+        self.cfg = cfg
+        self.base = base_extra
+        self.saver = None if cfg.synchronous else checkpoint_lib.AsyncSaver()
+        self.last_saved: Optional[int] = None
+
+    def due(self, done: int, epochs: int, stopping: bool = False) -> bool:
+        if done == self.last_saved:
+            return False
+        return (
+            done == epochs
+            or stopping
+            or (self.cfg.every is not None and done % self.cfg.every == 0)
+        )
+
+    def save(self, done: int, params, history) -> None:
+        extra = dict(self.base, epoch=done, loss_history=list(history))
+        self.last_saved = done
+        if self.saver is None:
+            self._lib.save(self.cfg.ckpt_dir, done, params, extra=extra,
+                           keep=self.cfg.keep)
+        else:
+            self.saver.save_async(self.cfg.ckpt_dir, done, params,
+                                  extra=extra, keep=self.cfg.keep)
+
+    def finish(self) -> None:
+        if self.saver is not None:
+            self.saver.wait()
+
+
+@dataclasses.dataclass(frozen=True)
 class MapReduceConfig:
     n_workers: int = 4
     paradigm: str = "sgd"           # 'sgd' | 'bgd'
@@ -676,6 +767,10 @@ class TrainResult:
     trace: "Optional[trace_lib.TrainingTrace]" = None
     best_params: Optional[Params] = None
     best_epoch: Optional[int] = None
+    # the persistent/serveable artifact view of this result — a
+    # repro.kb.KnowledgeBase assembled by kg.fit (None when train() is
+    # driven directly below the facade)
+    kb: Optional[object] = None
 
 
 def _make_recorder(
@@ -720,6 +815,10 @@ def train(
     callback: Optional[Callable[[int, float], None]] = None,
     model: Optional[KGModel] = None,
     eval_loop: "Optional[trace_lib.EvalLoopConfig]" = None,
+    checkpoint: Optional[CheckpointConfig] = None,
+    start_epoch: int = 0,
+    resume_fresh_init: bool = True,
+    prior_history: Optional[list] = None,
 ) -> TrainResult:
     """Training driver: balanced partitioning, deterministic batches,
     negative sampling, Map/Reduce epochs, loss history.  With
@@ -751,9 +850,36 @@ def train(
     the result, snapshots best-metric params, and early-stops on
     ``patience``.
 
+    Checkpoint/resume: ``checkpoint`` (a :class:`CheckpointConfig`)
+    snapshots params + manifest at Reduce boundaries; ``start_epoch=N``
+    (with the checkpointed ``params``) resumes a run **bit-identically** —
+    the device pipeline's batching/negatives/merges are pure functions of
+    (seed, epoch) so absolute epoch ids are all it needs, and the host
+    pipeline fast-forwards its split-chain (``resume_fresh_init`` replays
+    the original run's init split when that run fresh-initialized).
+    ``prior_history`` (the manifest's loss history) is prepended so a
+    resumed ``TrainResult`` matches the unbroken run's.
+
     ``cfg.n_workers == 1`` with any backend reproduces single-thread
     Algorithm 1 (the paper's baseline) for the chosen model."""
     model = _resolve(cfg, model)
+    if start_epoch < 0 or (start_epoch and start_epoch >= epochs):
+        raise ValueError(
+            f"start_epoch={start_epoch} must be in [0, epochs={epochs}) — "
+            "resuming a checkpoint at or past the requested epoch count "
+            "has nothing left to train; raise epochs")
+    if cfg.pipeline == "device" and start_epoch % cfg.schedule.merge_every:
+        raise ValueError(
+            f"start_epoch={start_epoch} is not a multiple of "
+            f"merge_every={cfg.schedule.merge_every} — device-pipeline "
+            "checkpoints live at Reduce boundaries")
+    if (checkpoint is not None and checkpoint.every is not None
+            and cfg.pipeline == "device"
+            and checkpoint.every % cfg.schedule.merge_every):
+        raise ValueError(
+            f"checkpoint every={checkpoint.every} is not a multiple of "
+            f"merge_every={cfg.schedule.merge_every} — checkpoints are "
+            "shared-model states, which only exist at Reduce boundaries")
     part_fn = (
         kg_lib.partition_stratified
         if cfg.partition == "stratified"
@@ -797,15 +923,39 @@ def train(
             f"resume params have tables {sorted(params)} but model "
             f"{model.name!r} expects {sorted(model.param_roles())} — "
             "params from a different model?")
+    elif start_epoch > 0 and resume_fresh_init:
+        # replay the resumed run's init split so the host pipeline's
+        # per-epoch key chain continues exactly where it left off
+        key, _ = jax.random.split(key)
 
     recorder = _make_recorder(kg, tcfg, cfg, model, eval_loop)
+    writer = None
+    if checkpoint is not None:
+        # fresh_init records whether the ORIGINAL epoch-0 run initialized
+        # its own params — what a future resume must replay
+        fresh_init = (
+            not caller_params if start_epoch == 0 else resume_fresh_init)
+        writer = _CheckpointWriter(checkpoint, {
+            "kind": "kg_train",
+            "model": model.name,
+            "seed": seed,
+            "paradigm": cfg.paradigm,
+            "pipeline": cfg.pipeline,
+            "dim": tcfg.dim,
+            "n_entities": tcfg.n_entities,
+            "n_relations": tcfg.n_relations,
+            "fresh_init": fresh_init,
+            "graph": kg.fingerprint(),
+            "config": resume_config(tcfg, cfg),
+        })
 
     if cfg.pipeline == "device":
         return _train_device(
             tcfg, cfg, model, partitioned, head_prob, params,
             epochs=epochs, seed=seed, mesh=mesh, callback=callback,
             recorder=recorder, eval_loop=eval_loop,
-            caller_params=caller_params)
+            caller_params=caller_params, writer=writer,
+            start_epoch=start_epoch, prior_history=prior_history)
 
     epoch_fn = make_epoch_fn(cfg, tcfg, mesh, model)
 
@@ -815,9 +965,15 @@ def train(
         shard = NamedSharding(mesh, P(cfg.axis_name))
         params = jax.device_put(params, rep)
 
-    history = []
+    # fast-forward the split chain over the epochs the checkpoint covers:
+    # batches are a pure function of (seed, epoch) already, and this makes
+    # the negative/merge keys match the unbroken run's too
+    for _ in range(start_epoch):
+        key, _, _ = jax.random.split(key, 3)
+
+    history = list(prior_history or [])
     epochs_run = epochs
-    for epoch in range(epochs):
+    for epoch in range(start_epoch, epochs):
         pos = kg_lib.epoch_batches(seed, epoch, partitioned, cfg.batch_size)
         key, k_neg, k_merge = jax.random.split(key, 3)
         pos = jnp.asarray(pos)
@@ -833,12 +989,18 @@ def train(
         # the host pipeline Reduces every epoch, so any eval_every lands on
         # a Reduce boundary; the final epoch is always evaluated
         done = epoch + 1
+        stop = False
         if recorder is not None and (
             done % eval_loop.eval_every == 0 or done == epochs
         ):
-            if recorder.record(epoch, done, loss, params):
-                epochs_run = done
-                break
+            stop = recorder.record(epoch, done, loss, params)
+        if writer is not None and writer.due(done, epochs, stopping=stop):
+            writer.save(done, params, history)
+        if stop:
+            epochs_run = done
+            break
+    if writer is not None:
+        writer.finish()
     return _finish_result(params, history, epochs_run, model, recorder)
 
 
@@ -857,6 +1019,9 @@ def _train_device(
     recorder: "Optional[trace_lib.TraceRecorder]" = None,
     eval_loop: "Optional[trace_lib.EvalLoopConfig]" = None,
     caller_params: bool = False,
+    writer: "Optional[_CheckpointWriter]" = None,
+    start_epoch: int = 0,
+    prior_history: Optional[list] = None,
 ) -> TrainResult:
     """Device-pipeline driver: put the partitioned triplets on device once,
     then run epochs in compiled scan blocks (``make_block_fn``).  The only
@@ -866,6 +1031,10 @@ def _train_device(
     ``eval_every`` is a multiple of ``merge_every`` (validated by the
     caller), so every eval lands on a Reduce boundary and the block-size
     invariance keeps the sliced run bit-identical to the unsliced one.
+    Checkpoints (``writer``) slice the blocks the same way; resuming from
+    ``start_epoch`` just starts the epoch-id stream there — every key is
+    ``fold_in(seed, epoch)``-derived, so the resumed run is bit-identical
+    to the unbroken one.
 
     Params-buffer donation (``cfg.donate_params``, default on): each block
     call donates its params input, so the accelerator never holds two full
@@ -896,20 +1065,33 @@ def _train_device(
         seed=seed, donate=donate)
 
     eval_every = eval_loop.eval_every if eval_loop is not None else None
+    ckpt_every = writer.cfg.every if writer is not None else None
     repart = sched.repartition_every
     loss_blocks = []
-    start = 0
+    history = list(prior_history or [])    # host floats converted so far
+
+    def snapshot_history() -> list:
+        # sync the per-block device losses only when a checkpoint (or the
+        # final result) actually needs them on the host; blocks are
+        # append-only, so each call converts just the new ones
+        while loss_blocks:
+            history.extend(float(x) for x in np.asarray(loss_blocks.pop(0)))
+        return history
+
+    start = start_epoch
     epochs_run = epochs
     while start < epochs:
         # every block is a multiple of merge_every (epochs, block_epochs,
-        # eval_every, and repartition_every all are), so every block —
-        # including the remainder and boundary slices — still ends on a
-        # Reduce.  Blocks are additionally sliced at re-partition
-        # boundaries so block_fn computes each round's partition exactly
-        # once (see make_block_fn).
+        # eval_every, checkpoint every, and repartition_every all are), so
+        # every block — including the remainder and boundary slices —
+        # still ends on a Reduce.  Blocks are additionally sliced at
+        # re-partition boundaries so block_fn computes each round's
+        # partition exactly once (see make_block_fn).
         length = min(sched.block_epochs, epochs - start)
         if eval_every is not None:
             length = min(length, eval_every - start % eval_every)
+        if ckpt_every is not None:
+            length = min(length, ckpt_every - start % ckpt_every)
         if repart is not None:
             length = min(length, repart - start % repart)
         epoch_ids = jnp.arange(start, start + length, dtype=jnp.int32)
@@ -918,14 +1100,19 @@ def _train_device(
         start += length
         if callback is not None:
             callback(start - 1, float(losses[-1]))
+        stop = False
         if recorder is not None and (
             start % eval_every == 0 or start == epochs
         ):
             stop = recorder.record(
                 start - 1, start // sched.merge_every, float(losses[-1]),
                 params)
-            if stop:
-                epochs_run = start
-                break
-    history = [float(x) for b in loss_blocks for x in np.asarray(b)]
-    return _finish_result(params, history, epochs_run, model, recorder)
+        if writer is not None and writer.due(start, epochs, stopping=stop):
+            writer.save(start, params, snapshot_history())
+        if stop:
+            epochs_run = start
+            break
+    if writer is not None:
+        writer.finish()
+    return _finish_result(params, snapshot_history(), epochs_run, model,
+                          recorder)

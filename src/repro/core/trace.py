@@ -35,6 +35,12 @@ The in-loop metrics are *exactly* the numbers a post-hoc
 bit-identical to a run stopped at that epoch (block-size invariance), and
 the eval engines are proved rank-for-rank identical
 (tests/test_trace.py pins this end to end).
+
+Periodic training checkpoints (``kg.fit(checkpoint_every=K)``,
+``mapreduce.CheckpointConfig``) ride the same Reduce-boundary contract:
+the device driver slices its compiled blocks at eval *and* checkpoint
+boundaries, so both observers only ever see shared-model states — and a
+checkpointed boundary resumes bit-identically (tests/test_kb.py).
 """
 from __future__ import annotations
 

@@ -28,6 +28,7 @@ pure function of (seed, epoch)):
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import os
 import warnings
 from typing import Dict, Optional, Tuple
@@ -133,6 +134,47 @@ class KG:
                     "filtering.", stacklevel=2)
             self._filter_cands[max_fanout] = (tails, heads)
         return self._filter_cands[max_fanout]
+
+    def known_candidate_masks(
+        self, pairs: np.ndarray, side: str
+    ) -> np.ndarray:
+        """Padded known-entity ids for arbitrary serve-time queries.
+
+        ``pairs`` is ``(B, 2)``: ``(h, r)`` rows for ``side="tail"`` (known
+        tails of each pair are returned) or ``(r, t)`` rows for
+        ``side="head"`` (known heads).  Output is ``(B, P)`` int32 padded
+        with ``n_entities`` — the same layout
+        :meth:`eval_filter_candidates` builds for the test split, so the
+        serving engine masks them out with the identical +inf gather the
+        eval engine uses.  Pairs the graph has never seen get an all-pad
+        row (nothing to exclude)."""
+        if side not in ("tail", "head"):
+            raise ValueError(f"bad side {side!r}")
+        by_hr, by_rt = self.known_index()
+        index = by_hr if side == "tail" else by_rt
+        groups = [
+            index.get((int(a), int(b)), [])
+            for a, b in np.asarray(pairs, np.int64)
+        ]
+        return _pad_groups(groups, self.n_entities, None)[0]
+
+    def fingerprint(self) -> Dict[str, object]:
+        """Content identity of this graph: sizes plus a short sha256 of each
+        split's triplet array.  Persisted in ``KnowledgeBase`` / training-
+        checkpoint manifests so a resume or load against a *different* graph
+        fails loudly instead of silently training on mismatched ids."""
+
+        def digest(a: np.ndarray) -> str:
+            a = np.ascontiguousarray(np.asarray(a, np.int32))
+            return hashlib.sha256(a.tobytes()).hexdigest()[:16]
+
+        return {
+            "n_entities": self.n_entities,
+            "n_relations": self.n_relations,
+            "train": digest(self.train),
+            "valid": digest(self.valid),
+            "test": digest(self.test),
+        }
 
     def tc_negatives(self, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
         """Corrupted valid/test counterparts for triplet classification,

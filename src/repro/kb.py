@@ -1,0 +1,230 @@
+"""``KnowledgeBase``: the persistent, serveable KG-embedding artifact.
+
+The paper trains TransE-style embeddings so a knowledge repository can be
+*used* — entity inference and relation prediction are its evaluation
+tasks — but a trained model that lives only as an in-memory params dict
+cannot be saved, resumed, or queried.  ``KnowledgeBase`` unifies
+model + params + graph metadata into one artifact, the way DGL-KE serves
+a trained embedding table and ParaGraphE exposes the library around the
+embedding object:
+
+    from repro import kg
+    from repro.data import kg as kg_lib
+
+    graph = kg_lib.synthetic_kg(0)
+    result = kg.fit(graph, model="transe", epochs=50)
+    kb = result.kb                      # the artifact, assembled by fit
+
+    kb.save("my_kb")                    # persist (atomic, manifest'd)
+    kb = kg.KnowledgeBase.load("my_kb")  # ... in the serving process
+
+    top = kb.query_tails(h, r, k=10)           # device-resident top-k
+    best = kb.query_relations(h, t, k=3)
+    e = kb.score(h, r, t)
+    metrics = kb.evaluate(engine="device")     # the paper's protocol
+
+Persistence rides on ``train/checkpoint.py``: ``save`` writes the tables
+(and, by default, the graph splits — so a loaded artifact can filter and
+evaluate stand-alone) through the atomic ``step_`` layout with a manifest
+carrying the model name, table dims, norm, and the graph's content
+fingerprint; ``load`` restores self-describing (no shape templates
+needed) and cross-checks manifest against tables, so a corrupted or
+cross-model artifact fails loudly.
+
+Queries run on ``serve/kg_engine.KGQueryEngine`` — one compiled top-k
+computation per batch, query axis sharded over workers — with
+``filtered=True`` excluding the graph's known neighbors (serve new links,
+the filtered-ranking convention applied to serving).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import eval as kg_eval
+from repro.core.models import KGModel, Params, get_model
+from repro.data.kg import KG
+from repro.serve.kg_engine import KGQueryEngine, QueryResult
+from repro.train import checkpoint as ckpt_lib
+
+ARTIFACT_KIND = "knowledge_base"
+
+
+@dataclasses.dataclass
+class KnowledgeBase:
+    """A trained KG embedding as a first-class artifact (module docstring).
+
+    ``graph`` is optional: without it the artifact still scores and serves
+    raw top-k, but filtered queries and ``evaluate`` need the splits
+    (``save(include_graph=True)`` keeps them with the tables)."""
+
+    model: KGModel
+    params: Params
+    graph: Optional[KG] = None
+    norm: str = "l1"
+    meta: Dict = dataclasses.field(default_factory=dict)
+    _engines: Dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    def __post_init__(self):
+        self.model = get_model(self.model)
+        missing = set(self.model.param_roles()) - set(self.params)
+        if missing:
+            raise ValueError(
+                f"params are missing tables {sorted(missing)} for model "
+                f"{self.model.name!r} (have {sorted(self.params)})")
+
+    # -- identity ----------------------------------------------------------
+
+    @property
+    def n_entities(self) -> int:
+        return int(self.params["ent"].shape[0])
+
+    @property
+    def n_relations(self) -> int:
+        return int(self.params["rel"].shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self.params["ent"].shape[1])
+
+    # -- persistence -------------------------------------------------------
+
+    def save(self, path: str, *, include_graph: bool = True,
+             step: int = 0, keep: int = 3) -> str:
+        """Persist atomically under ``path`` (checkpoint ``step_`` layout).
+        Returns the committed directory.  The manifest records model name,
+        per-table shapes, norm, and the graph fingerprint; the graph
+        splits ship with the tables unless ``include_graph=False``."""
+        tree = {"params": self.params}
+        graph_fp = None
+        if include_graph and self.graph is not None:
+            tree["graph"] = {
+                "train": np.asarray(self.graph.train, np.int32),
+                "valid": np.asarray(self.graph.valid, np.int32),
+                "test": np.asarray(self.graph.test, np.int32),
+            }
+        if self.graph is not None:
+            graph_fp = self.graph.fingerprint()
+        extra = {
+            "kind": ARTIFACT_KIND,
+            "model": self.model.name,
+            "norm": self.norm,
+            "dim": self.dim,
+            "n_entities": (self.graph.n_entities if self.graph is not None
+                           else self.n_entities),
+            "n_relations": (self.graph.n_relations if self.graph is not None
+                            else self.n_relations),
+            "tables": {
+                name: list(np.shape(arr))
+                for name, arr in sorted(self.params.items())
+            },
+            "graph": graph_fp,
+            "meta": self.meta,
+        }
+        return ckpt_lib.save(str(path), step, tree, extra=extra, keep=keep)
+
+    @classmethod
+    def load(cls, path: str, step: Optional[int] = None) -> "KnowledgeBase":
+        """Restore a saved artifact.  Raises a clear error when the
+        directory holds something else (e.g. a training checkpoint), the
+        manifest names an unregistered model, a stored table's shape
+        disagrees with the manifest, or the shipped graph fails its
+        fingerprint."""
+        _, tree, _, extra = ckpt_lib.restore(
+            str(path), step=step, expect={"kind": ARTIFACT_KIND})
+        model = get_model(extra["model"])
+        params = tree["params"]
+        for name, shape in (extra.get("tables") or {}).items():
+            if name not in params:
+                raise ValueError(
+                    f"artifact at {path} is missing table {name!r} named "
+                    "in its manifest — truncated or corrupted save?")
+            if list(params[name].shape) != list(shape):
+                raise ValueError(
+                    f"artifact table {name!r} has shape "
+                    f"{tuple(params[name].shape)} but the manifest records "
+                    f"{tuple(shape)} — corrupted artifact?")
+        graph = None
+        if "graph" in (tree or {}):
+            g = tree["graph"]
+            graph = KG(int(extra["n_entities"]), int(extra["n_relations"]),
+                       g["train"], g["valid"], g["test"])
+            fp = extra.get("graph")
+            if fp is not None and graph.fingerprint() != fp:
+                raise ValueError(
+                    f"graph splits stored at {path} do not match the "
+                    "manifest fingerprint — corrupted artifact?")
+        return cls(model=model, params=params, graph=graph,
+                   norm=extra.get("norm", "l1"),
+                   meta=extra.get("meta") or {})
+
+    # -- serving -----------------------------------------------------------
+
+    def engine(self, *, n_workers: int = 1, backend: str = "vmap",
+               mesh=None, chunk: Optional[int] = None) -> KGQueryEngine:
+        """The device query engine over this artifact's tables; instances
+        are cached per (n_workers, backend, chunk, mesh) so repeated
+        queries reuse compiled computations."""
+        key = (n_workers, backend, chunk, id(mesh) if mesh is not None
+               else None)
+        if key not in self._engines:
+            kw = {} if chunk is None else {"chunk": chunk}
+            self._engines[key] = KGQueryEngine(
+                self.model, self.params, norm=self.norm,
+                n_workers=n_workers, backend=backend, mesh=mesh, **kw)
+        return self._engines[key]
+
+    def _exclude(self, a, b, side: str) -> np.ndarray:
+        if self.graph is None:
+            raise ValueError(
+                "filtered=True needs the graph (known-neighbor masks); "
+                "this KnowledgeBase was loaded without one — re-save with "
+                "include_graph=True or pass filtered=False")
+        pairs = np.stack(np.broadcast_arrays(
+            np.atleast_1d(np.asarray(a, np.int64)),
+            np.atleast_1d(np.asarray(b, np.int64))), axis=1)
+        return self.graph.known_candidate_masks(pairs, side)
+
+    def query_tails(self, heads, rels, k: int = 10,
+                    filtered: bool = False, **engine_kw) -> QueryResult:
+        """Top-k tail completions of ``(h, r, ?)``.  ``filtered=True``
+        excludes the graph's already-known tails of each pair — serve
+        *new* links, the filtered-ranking convention applied to traffic.
+        ``engine_kw`` (n_workers / backend / mesh / chunk) picks the
+        engine sharding."""
+        exclude = self._exclude(heads, rels, "tail") if filtered else None
+        return self.engine(**engine_kw).query_tails(
+            heads, rels, k=k, exclude=exclude)
+
+    def query_heads(self, tails, rels, k: int = 10,
+                    filtered: bool = False, **engine_kw) -> QueryResult:
+        """Top-k head completions of ``(?, r, t)`` (see query_tails)."""
+        exclude = self._exclude(rels, tails, "head") if filtered else None
+        return self.engine(**engine_kw).query_heads(
+            tails, rels, k=k, exclude=exclude)
+
+    def query_relations(self, heads, tails, k: int = 10,
+                        **engine_kw) -> QueryResult:
+        """Top-k relations linking ``(h, ?, t)``."""
+        return self.engine(**engine_kw).query_relations(heads, tails, k=k)
+
+    def score(self, heads, rels, tails, **engine_kw) -> np.ndarray:
+        """Energies of fully-specified triplets (lower = more plausible)."""
+        return self.engine(**engine_kw).score(heads, rels, tails)
+
+    # -- evaluation --------------------------------------------------------
+
+    def evaluate(self, *, filtered: bool = True, engine: str = "host",
+                 **engine_kw) -> dict:
+        """The paper's three-task protocol on this artifact's graph —
+        exactly ``repro.kg.evaluate(kb)``."""
+        if self.graph is None:
+            raise ValueError(
+                "evaluate needs the graph's valid/test splits; this "
+                "KnowledgeBase was loaded without a graph")
+        return kg_eval.evaluate_all(
+            self.params, self.graph, norm=self.norm, filtered=filtered,
+            model=self.model, engine=engine, **engine_kw)

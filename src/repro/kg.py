@@ -1,14 +1,31 @@
-"""Top-level model-agnostic KG embedding API.
+"""Top-level model-agnostic KG embedding API, built around the
+:class:`~repro.kb.KnowledgeBase` artifact.
 
-One import, two calls — train any registered scoring model with the paper's
-MapReduce engine and run the full three-task evaluation protocol:
+Training produces — and every downstream surface consumes — a
+``KnowledgeBase``: model + embedding tables + graph metadata as one
+persistent, serveable object.  ``fit`` and ``evaluate`` are thin wrappers
+around it:
 
     from repro import kg
     from repro.data import kg as kg_lib
 
     graph = kg_lib.synthetic_kg(0)
     result = kg.fit(graph, model="distmult", paradigm="bgd", epochs=50)
-    metrics = kg.evaluate(result.params, "distmult", graph)
+
+    kb = result.kb                       # the trained artifact
+    kb.save("my_kb")                     # persist (atomic, manifest'd)
+    kb = kg.KnowledgeBase.load("my_kb")  # ... in another process
+
+    top = kb.query_tails(h, r, k=10)     # device-resident batched top-k
+    metrics = kg.evaluate(kb)            # == kb.evaluate()
+    metrics = kg.evaluate(result.params, "distmult", graph)   # still works
+
+Long runs checkpoint and resume **bit-identically** from inside ``fit``:
+
+    kg.fit(graph, epochs=100, ckpt_dir="ckpt", checkpoint_every=10)
+    # ... crash / preemption ...
+    kg.fit(graph, epochs=100, ckpt_dir="ckpt", resume=True)
+    # == the unbroken 100-epoch run, parameter-for-parameter
 
 ``model`` is any name in ``kg.models()`` (transe / transh / distmult / your
 plugin — see ``repro.core.models``); ``paradigm`` is the paper's 'sgd'
@@ -20,14 +37,19 @@ from __future__ import annotations
 
 from typing import Callable, Optional
 
+import jax
+
+from repro import kb as kb_lib
 from repro.core import eval as kg_eval
 from repro.core import mapreduce
 from repro.core import trace as trace_lib
 from repro.core.models import KGConfig, KGModel, available, get_model
+from repro.train import checkpoint as checkpoint_lib
 
 TrainResult = mapreduce.TrainResult
 EpochSchedule = mapreduce.EpochSchedule
 TrainingTrace = trace_lib.TrainingTrace
+KnowledgeBase = kb_lib.KnowledgeBase
 
 
 def models() -> tuple:
@@ -118,6 +140,11 @@ def fit(
     eval_filtered: bool = True,
     eval_kw: Optional[dict] = None,
     keep_best: bool = True,
+    ckpt_dir: Optional[str] = None,
+    checkpoint_every: Optional[int] = None,
+    resume: bool = False,
+    keep_checkpoints: int = 3,
+    sync_checkpoints: bool = False,
     **config_kw,
 ) -> TrainResult:
     """Train ``model`` on ``kg`` with the MapReduce engine.
@@ -146,12 +173,62 @@ def fit(
     benchmarked multiples faster; ``eval_kw`` forwards engine options —
     ``n_workers`` defaults to the training worker count).
 
+    Checkpoint/resume: ``ckpt_dir`` + ``checkpoint_every=K`` snapshot
+    params and manifest every K epochs (a Reduce boundary — a multiple of
+    ``merge_every`` on the device pipeline; ``checkpoint_every=None``
+    saves the final state only; saves are async unless
+    ``sync_checkpoints``).  ``resume=True`` restores the latest
+    checkpoint in ``ckpt_dir`` — after validating model name, seed, and
+    graph fingerprint against this call — and continues to ``epochs``
+    total, **bit-identically** to the unbroken run (batching, negative
+    sampling, and merge keys are pure functions of (seed, epoch);
+    tests/test_kb.py pins this per pipeline x paradigm).
+
     ``model`` may be a registry name or a ``KGModel`` instance; an instance
     is used as-is (it shadows any registry entry sharing its name — custom
     subclasses train with their own overrides).  Instances with a name the
-    registry doesn't know must be ``register()``-ed first."""
+    registry doesn't know must be ``register()``-ed first.
+
+    The returned ``TrainResult`` carries the trained artifact as ``.kb``
+    (a :class:`KnowledgeBase`) — save it, serve it, or evaluate it."""
     model = get_model(model)
     kcfg, mcfg = make_configs(kg, model, paradigm, **config_kw)
+
+    ckpt_cfg = None
+    resume_kw: dict = {}
+    if ckpt_dir is not None:
+        ckpt_cfg = mapreduce.CheckpointConfig(
+            ckpt_dir=ckpt_dir, every=checkpoint_every,
+            keep=keep_checkpoints, synchronous=sync_checkpoints)
+    else:
+        ckpt_only = {
+            "checkpoint_every": checkpoint_every is not None,
+            "resume": resume,
+            "keep_checkpoints": keep_checkpoints != 3,
+            "sync_checkpoints": sync_checkpoints,
+        }
+        passed = sorted(k for k, hit in ckpt_only.items() if hit)
+        if passed:
+            raise ValueError(
+                f"{passed} configure checkpointing and need ckpt_dir= "
+                "to say where the checkpoints live")
+    if resume:
+        if params is not None:
+            raise ValueError(
+                "pass either resume=True (params come from the latest "
+                "checkpoint) or params=, not both")
+        template = jax.eval_shape(
+            lambda k: model.init_params(k, kcfg), jax.random.PRNGKey(0))
+        _, params, _, extra = checkpoint_lib.restore(
+            ckpt_dir, params_template=template,
+            expect={"kind": "kg_train", "model": model.name,
+                    "seed": seed, "graph": kg.fingerprint(),
+                    "config": mapreduce.resume_config(kcfg, mcfg)})
+        resume_kw = dict(
+            start_epoch=int(extra["epoch"]),
+            resume_fresh_init=bool(extra.get("fresh_init", True)),
+            prior_history=list(extra.get("loss_history") or []),
+        )
     eval_loop = None
     if eval_every is not None:
         engine_kw = dict(eval_kw or {})
@@ -176,25 +253,35 @@ def fit(
                 f"{passed} configure the in-training evaluation loop and "
                 "would be silently ignored — pass eval_every=K to enable "
                 "it")
-    return mapreduce.train(
+    res = mapreduce.train(
         kg, kcfg, mcfg,
         epochs=epochs, seed=seed, mesh=mesh, params=params, callback=callback,
-        model=model, eval_loop=eval_loop,
+        model=model, eval_loop=eval_loop, checkpoint=ckpt_cfg, **resume_kw,
     )
+    res.kb = kb_lib.KnowledgeBase(
+        model=model, params=res.params, graph=kg, norm=kcfg.norm,
+        meta={"paradigm": paradigm, "epochs": res.epochs_run, "seed": seed,
+              "dim": kcfg.dim})
+    return res
 
 
 def evaluate(
     params,
-    model: "str | KGModel",
-    kg,
+    model: "str | KGModel | None" = None,
+    kg=None,
     *,
-    norm: str = "l1",
+    norm: Optional[str] = None,
     filtered: bool = True,
     engine: str = "host",
     **engine_kw,
 ) -> dict:
     """All three paper tasks (entity inference, relation prediction, triplet
     classification) for any registered model.
+
+    Accepts either a :class:`KnowledgeBase` (``evaluate(kb)`` — model,
+    graph, and norm come from the artifact; any explicitly passed value
+    overrides) or the raw ``(params, model, kg)`` triple every pre-existing
+    call site uses.
 
     ``engine="host"`` is the frozen reference protocol loop;
     ``engine="device"`` runs each task as one compiled device-resident
@@ -203,7 +290,21 @@ def evaluate(
     Device-engine options ride in ``engine_kw``: ``n_workers``, ``backend``
     ('vmap' | 'shard_map'), ``mesh``, ``chunk``, ``fused``, ``max_fanout``
     — see ``repro.core.eval_device.evaluate_all_device``."""
+    if isinstance(params, kb_lib.KnowledgeBase):
+        kb = params
+        params = kb.params
+        model = kb.model if model is None else model
+        kg = kb.graph if kg is None else kg
+        norm = kb.norm if norm is None else norm
+        if kg is None:
+            raise ValueError(
+                "this KnowledgeBase carries no graph (loaded with "
+                "include_graph=False?) — pass kg= explicitly")
+    elif model is None or kg is None:
+        raise TypeError(
+            "evaluate(params, ...) needs model= and kg= when params is a "
+            "raw table dict (or pass a KnowledgeBase)")
     return kg_eval.evaluate_all(
-        params, kg, norm=norm, filtered=filtered, model=model,
+        params, kg, norm=norm or "l1", filtered=filtered, model=model,
         engine=engine, **engine_kw
     )

@@ -64,12 +64,23 @@ def _run_kg(args) -> None:
         raise SystemExit(
             "--kg-patience / --kg-trace-out / --kg-eval-metric configure "
             "the in-training evaluation loop; add --kg-eval-every K")
+    ckpt_kw = {}
+    if args.kg_ckpt_dir is not None:
+        ckpt_kw = dict(
+            ckpt_dir=args.kg_ckpt_dir,
+            checkpoint_every=args.kg_checkpoint_every,
+            resume=args.kg_resume)
+    elif args.kg_checkpoint_every is not None or args.kg_resume:
+        raise SystemExit(
+            "--kg-checkpoint-every / --kg-resume configure checkpointing; "
+            "add --kg-ckpt-dir DIR to say where the checkpoints live")
     res = kg_api.fit(
         graph, model=args.kg, paradigm=args.kg_paradigm,
         n_workers=args.kg_workers, strategy=args.kg_strategy,
         backend="vmap", batch_size=256, dim=48,
         learning_rate=args.lr if args.lr is not None else 5e-2,
-        epochs=args.kg_epochs, seed=args.seed, **schedule_kw, **eval_kw,
+        epochs=args.kg_epochs, seed=args.seed,
+        **schedule_kw, **eval_kw, **ckpt_kw,
         callback=lambda e, l: print(f"epoch {e + 1}: loss={l:.4f}", flush=True))
     print(f"[{res.model}/{args.kg_paradigm}/{args.kg_pipeline}] final loss: "
           f"{res.loss_history[-1]:.4f} (start {res.loss_history[0]:.4f}) "
@@ -105,6 +116,26 @@ def _run_kg(args) -> None:
                       f"MRR={row['mrr']:.4f} hits@10={row['hits@10']:.3f}")
         print(f"  triplet_classification_acc="
               f"{metrics['triplet_classification_acc']:.4f}")
+
+    if args.kg_serve:
+        # serve a sample of link-prediction traffic from the trained
+        # KnowledgeBase: one compiled batched top-k per query family,
+        # sharded over the training worker count
+        kb = res.kb
+        n = min(5, len(graph.test))
+        h, r, t = (graph.test[:n, i] for i in range(3))
+        tails = kb.query_tails(h, r, k=5, filtered=True,
+                               n_workers=args.kg_workers)
+        rels = kb.query_relations(h, t, k=3, n_workers=args.kg_workers)
+        print(f"serving sample traffic ({n} queries, top-k on device):")
+        for i in range(n):
+            cand = ", ".join(
+                f"{e}:{s:.2f}" for e, s in
+                zip(tails.ids[i], tails.energies[i]) if s != float("inf"))
+            print(f"  (h={h[i]}, r={r[i]}, ?) -> tails [{cand}]  "
+                  f"gold={t[i]}")
+            print(f"  (h={h[i]}, ?, t={t[i]}) -> relations "
+                  f"{[int(x) for x in rels.ids[i]]}  gold={r[i]}")
 
 
 def main(argv=None):
@@ -152,6 +183,21 @@ def main(argv=None):
     ap.add_argument("--kg-trace-out", default=None, metavar="PATH",
                     help="write the in-loop eval trace as JSONL (one "
                          "boundary eval per line; needs --kg-eval-every)")
+    ap.add_argument("--kg-ckpt-dir", default=None, metavar="DIR",
+                    help="checkpoint directory for the KG run (atomic "
+                         "step_N layout with a model/seed/graph manifest)")
+    ap.add_argument("--kg-checkpoint-every", type=int, default=None,
+                    help="snapshot params every K epochs (a Reduce "
+                         "boundary; default: final state only; needs "
+                         "--kg-ckpt-dir)")
+    ap.add_argument("--kg-resume", action="store_true",
+                    help="resume from the latest checkpoint in "
+                         "--kg-ckpt-dir and train to --kg-epochs total — "
+                         "bit-identical to the unbroken run")
+    ap.add_argument("--kg-serve", action="store_true",
+                    help="after training, answer a sample of batched "
+                         "link-prediction queries from the trained "
+                         "KnowledgeBase (device top-k engine)")
     ap.add_argument("--kg-eval-engine", default=None,
                     choices=["host", "device"],
                     help="run the three-task eval protocol after training: "

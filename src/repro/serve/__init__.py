@@ -1,1 +1,5 @@
-"""Serving substrate: KV-cache engine with batched prefill/decode."""
+"""Serving substrate: the LM KV-cache engine with batched prefill/decode
+(``engine.py``) and the device-resident KG link-prediction query engine
+(``kg_engine.py`` — what ``repro.kb.KnowledgeBase`` answers traffic with).
+"""
+from repro.serve.kg_engine import KGQueryEngine, QueryResult  # noqa: F401

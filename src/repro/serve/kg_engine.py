@@ -1,0 +1,278 @@
+"""Device-resident KG link-prediction query engine.
+
+The paper *evaluates* entity inference and relation prediction; a deployed
+knowledge repository *serves* them — "which tails complete (h, r, ?)?" at
+traffic rates, the DGL-KE-style artifact the ROADMAP north star needs.
+This module is the serving face of the PR 3 device eval engine: a batch of
+queries runs as **one compiled top-k computation** instead of a per-query
+host loop.
+
+How a query batch runs (``query_tails`` / ``query_heads``):
+
+  * Queries are padded and laid out ``(W, S, C, 2)`` exactly like the eval
+    engine's test split (``core/eval_device._layout``): ``W`` workers —
+    the same vmap / shard_map backends, via ``parallel/util.worker_map`` —
+    each scan ``S`` chunks of ``C`` queries.
+  * Every chunk scores all E entities through the model's
+    ``candidate_energies`` (the same closed forms eval uses), masks
+    excluded candidates to +inf via the padded-id scatter trick the eval
+    filter uses (pad id = E never lands; serve-time exclusion = the KG's
+    ``known_candidate_masks``), and extracts ``jax.lax.top_k`` ids +
+    energies on device.  Only the final ``(B, k)`` grids return to host.
+  * ``query_relations`` is the same scan over ``relation_energies``.
+
+Rank parity: ``rank()`` routes ad-hoc triplet batches through the *eval*
+engine's scan (``core/eval_device.entity_ranks_device``), including its
+``kernels/rank_topk`` fused dispatch on TPU — so the rank a served
+candidate would get is bit-identical to what ``kg.evaluate`` reports for
+the same query (tests/test_kb.py proves top-k-derived ranks equal the
+eval rank vectors, raw and filtered).
+
+Energies are "lower = truer" throughout (as everywhere in the repo):
+result ids come back best-first with their energies; excluded or padded
+candidates surface as +inf energies when ``k`` exceeds the live
+candidate count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import eval_device
+from repro.core.models import KGModel, Params, get_model
+from repro.parallel.util import worker_map
+
+DEFAULT_CHUNK = eval_device.DEFAULT_CHUNK
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """One batched top-k answer: ``ids[i, j]`` is the j-th best candidate
+    for query ``i`` and ``energies[i, j]`` its model energy (ascending per
+    row — best first; +inf marks exhausted/excluded slots)."""
+
+    ids: np.ndarray        # (B, k) int32
+    energies: np.ndarray   # (B, k) float32
+
+
+def _unshard_k(out: jax.Array, n: int) -> np.ndarray:
+    """(W, S, C, k) grid -> (n, k) host array in original query order."""
+    arr = np.asarray(out)
+    return arr.reshape(-1, arr.shape[-1])[:n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "model", "side", "norm", "k", "backend", "mesh", "axis_name"),
+)
+def _entity_topk_device(
+    model: KGModel,
+    params: Params,
+    queries: jax.Array,      # (W, S, C, 3)
+    exclude: jax.Array,      # (W, S, C, P) padded candidate ids (pad id = E)
+    *,
+    side: str,
+    norm: str,
+    k: int,
+    backend: str,
+    mesh,
+    axis_name: str,
+):
+    """Top-k (ids, energies) over all entities for every query — one
+    compiled scan, query axis sharded over workers."""
+
+    def per_worker(params, q_w, ex_w):
+        def body(_, inp):
+            q, ex = inp
+            scores = model.candidate_energies(params, q, side, norm)
+            E = scores.shape[1]
+            # mask excluded ids to +inf: pad entries (>= E) clamp to a real
+            # column but scatter -inf, and .max() with -inf is the identity
+            rows = jnp.arange(q.shape[0])[:, None]
+            cols = jnp.minimum(ex, E - 1)
+            upd = jnp.where(ex < E, jnp.inf, -jnp.inf)
+            scores = scores.at[rows, cols].max(upd)
+            neg, ids = jax.lax.top_k(-scores, k)
+            return None, (ids.astype(jnp.int32), -neg)
+
+        _, out = jax.lax.scan(body, None, (q_w, ex_w))
+        return out               # each (S, C, k)
+
+    run = worker_map(
+        per_worker, backend=backend, mesh=mesh, axis_name=axis_name)
+    return run(params, queries, exclude)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("model", "norm", "k", "backend", "mesh", "axis_name"))
+def _relation_topk_device(
+    model: KGModel,
+    params: Params,
+    queries: jax.Array,      # (W, S, C, 3)
+    *,
+    norm: str,
+    k: int,
+    backend: str,
+    mesh,
+    axis_name: str,
+):
+    def per_worker(params, q_w):
+        def body(_, q):
+            scores = model.relation_energies(params, q, norm)
+            neg, ids = jax.lax.top_k(-scores, k)
+            return None, (ids.astype(jnp.int32), -neg)
+
+        _, out = jax.lax.scan(body, None, q_w)
+        return out
+
+    run = worker_map(
+        per_worker, backend=backend, mesh=mesh, axis_name=axis_name)
+    return run(params, queries)
+
+
+@functools.partial(jax.jit, static_argnames=("model", "norm"))
+def _score_device(model: KGModel, params: Params, triplets, norm: str):
+    return model.energy(params, triplets, norm)
+
+
+class KGQueryEngine:
+    """Batched link-prediction over one (model, params) pair.
+
+    ``n_workers`` shards the query axis (``backend='vmap'`` on a single
+    device, ``'shard_map'`` over a real mesh axis — pass ``mesh``); any
+    batch size works, the layout pads to worker x chunk granularity the
+    way the eval engine does.  The engine is stateless apart from the
+    tables — jit caches key on (model, norm, k, layout statics), so
+    repeated traffic with the same shape is one dispatch per batch.
+
+    ``exclude`` masks are padded ``(B, P)`` id arrays (pad id =
+    n_entities), the exact layout ``KG.known_candidate_masks`` /
+    ``KG.eval_filter_candidates`` build — ``KnowledgeBase`` passes known
+    neighbors here so served candidates are *new* links.
+    """
+
+    def __init__(
+        self,
+        model: "str | KGModel",
+        params: Params,
+        *,
+        norm: str = "l1",
+        n_workers: int = 1,
+        backend: str = "vmap",
+        mesh=None,
+        chunk: int = DEFAULT_CHUNK,
+    ):
+        self.model = get_model(model)
+        self.params = params
+        self.norm = norm
+        self.n_workers = n_workers
+        self.backend = backend
+        self.mesh = mesh
+        self.chunk = chunk
+        self.n_entities = int(params["ent"].shape[0])
+        self.n_relations = int(params["rel"].shape[0])
+
+    # -- layout helpers (shared with the eval engine) ----------------------
+
+    def _shard_queries(self, triplets: np.ndarray, exclude):
+        Q = len(triplets)
+        S, C, Qp = eval_device._layout(Q, self.chunk, self.n_workers)
+        W = self.n_workers
+        q = eval_device._shard(
+            eval_device._pad_rows(np.asarray(triplets, np.int32), Qp),
+            W, S, C)
+        if exclude is None:
+            exclude = np.full((Q, 1), self.n_entities, np.int32)
+        ex = eval_device._shard(
+            eval_device._pad_rows(np.asarray(exclude, np.int32), Qp),
+            W, S, C)
+        return q, ex, Q
+
+    @staticmethod
+    def _pair_triplets(a, b, side: str) -> np.ndarray:
+        a = np.atleast_1d(np.asarray(a, np.int32))
+        b = np.atleast_1d(np.asarray(b, np.int32))
+        a, b = np.broadcast_arrays(a, b)
+        zero = np.zeros_like(a)
+        if side == "tail":              # (h, r, ?) — gold slot unused
+            cols = (a, b, zero)
+        elif side == "head":            # (?, r, t)
+            cols = (zero, b, a)
+        else:                           # (h, ?, t) for relation queries
+            cols = (a, zero, b)
+        return np.stack(cols, axis=1)
+
+    # -- queries -----------------------------------------------------------
+
+    def query_tails(self, heads, rels, k: int = 10,
+                    exclude: Optional[np.ndarray] = None) -> QueryResult:
+        """Top-k tail completions of ``(h, r, ?)`` for a batch of (heads,
+        rels) id arrays.  ``exclude`` drops known candidates (padded id
+        rows; see class docstring)."""
+        return self._entity_topk(
+            self._pair_triplets(heads, rels, "tail"), "tail", k, exclude)
+
+    def query_heads(self, tails, rels, k: int = 10,
+                    exclude: Optional[np.ndarray] = None) -> QueryResult:
+        """Top-k head completions of ``(?, r, t)``."""
+        return self._entity_topk(
+            self._pair_triplets(tails, rels, "head"), "head", k, exclude)
+
+    def _entity_topk(self, triplets, side, k, exclude) -> QueryResult:
+        k = min(int(k), self.n_entities)
+        q, ex, Q = self._shard_queries(triplets, exclude)
+        ids, energies = _entity_topk_device(
+            self.model, self.params, q, ex, side=side, norm=self.norm,
+            k=k, backend=self.backend, mesh=self.mesh, axis_name="workers")
+        return QueryResult(_unshard_k(ids, Q), _unshard_k(energies, Q))
+
+    def query_relations(self, heads, tails, k: int = 10) -> QueryResult:
+        """Top-k relations linking ``(h, ?, t)`` pairs."""
+        k = min(int(k), self.n_relations)
+        triplets = self._pair_triplets(heads, tails, "relation")
+        q, _, Q = self._shard_queries(triplets, None)
+        ids, energies = _relation_topk_device(
+            self.model, self.params, q, norm=self.norm, k=k,
+            backend=self.backend, mesh=self.mesh, axis_name="workers")
+        return QueryResult(_unshard_k(ids, Q), _unshard_k(energies, Q))
+
+    def score(self, heads, rels, tails) -> np.ndarray:
+        """Model energies of fully-specified ``(h, r, t)`` triplets
+        (lower = more plausible), one jitted dispatch per batch."""
+        h = np.atleast_1d(np.asarray(heads, np.int32))
+        r = np.atleast_1d(np.asarray(rels, np.int32))
+        t = np.atleast_1d(np.asarray(tails, np.int32))
+        h, r, t = np.broadcast_arrays(h, r, t)
+        triplets = jnp.asarray(np.stack([h, r, t], axis=1))
+        return np.asarray(
+            _score_device(self.model, self.params, triplets, self.norm))
+
+    def rank(
+        self,
+        triplets: np.ndarray,
+        side: str = "tail",
+        cand_masks=None,
+        fused: Optional[bool] = None,
+    ) -> np.ndarray:
+        """Rank the gold entity of each ``(h, r, t)`` among all entities —
+        the *eval* engine's scan (including its fused ``rank_topk``
+        dispatch on TPU), so a served candidate's rank is bit-identical to
+        what ``kg.evaluate`` would report.  ``cand_masks`` applies the
+        filtered-ranking correction (a padded id array as in
+        ``KG.eval_filter_candidates``, one-sided)."""
+        # the eval scan computes both sides; feed the one-sided mask to
+        # both and read back only the requested side
+        masks = None if cand_masks is None else (cand_masks, cand_masks)
+        out = eval_device.entity_ranks_device(
+            self.params, np.asarray(triplets, np.int32), self.norm, masks,
+            model=self.model, chunk=self.chunk, n_workers=self.n_workers,
+            backend=self.backend, mesh=self.mesh, fused=fused)
+        group = "filtered_ranks" if cand_masks is not None else "raw_ranks"
+        return out[group][side]

@@ -12,6 +12,13 @@ prescribes — a job checkpointed on a (16,16) pod restores onto (2,16,16),
 Async: ``save_async`` snapshots to host memory synchronously (cheap,
 device->host DMA) and does the disk I/O on a daemon thread, so the train
 loop loses only the transfer time, not the serialization time.
+
+Validation: ``restore`` checks every templated leaf's shape against the
+stored array and ``expect=`` compares manifest fields (model name, graph
+fingerprint, ...) — a cross-model or cross-config resume fails with a
+clear error at load time instead of producing silently-wrong numbers.
+With no template the params tree is rebuilt self-describing from the
+stored paths, which is what serveable artifacts (``repro.kb``) load with.
 """
 from __future__ import annotations
 
@@ -135,6 +142,39 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def validate_extra(
+    extra: Dict[str, Any], expect: Dict[str, Any], where: str
+) -> None:
+    """Compare manifest ``extra`` fields against expected values and raise
+    one clear error naming every mismatch — the guard that turns a
+    cross-model (or cross-graph) resume from silently-wrong numbers into a
+    refusal at load time."""
+    problems = []
+    for key, want in expect.items():
+        got = extra.get(key)
+        if got != want:
+            problems.append(f"{key}: checkpoint has {got!r}, expected {want!r}")
+    if problems:
+        raise ValueError(
+            f"checkpoint manifest at {where} does not match this run — "
+            + "; ".join(problems)
+            + " — checkpoint from a different model/config?")
+
+
+def _nest_flat(flat: Dict[str, np.ndarray]) -> Dict[str, Any]:
+    """Rebuild a nested dict from '/'-joined path keys (the untemplated
+    restore path: dict trees round-trip exactly; sequence nodes come back
+    as dicts keyed by their stringified index)."""
+    out: Dict[str, Any] = {}
+    for key, arr in flat.items():
+        node = out
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return out
+
+
 def restore(
     ckpt_dir: str,
     step: Optional[int] = None,
@@ -142,11 +182,23 @@ def restore(
     opt_template=None,
     shardings=None,
     opt_shardings=None,
+    expect: Optional[Dict[str, Any]] = None,
 ) -> Tuple[int, Any, Any, Dict[str, Any]]:
     """Restore (step, params, opt_state, extra).
 
     Templates give the pytree structure (e.g. from ``jax.eval_shape``);
-    ``shardings`` (same structure) re-shards onto the current mesh.
+    ``shardings`` (same structure) re-shards onto the current mesh.  With
+    ``params_template=None`` the params tree is rebuilt self-describing
+    from the stored paths (nested dicts of host arrays) — what
+    ``KnowledgeBase.load`` uses, where the caller cannot know shapes
+    before reading the artifact.
+
+    Validation: every templated leaf's shape is checked against the stored
+    array (a mismatch — e.g. restoring a dim-50 table into a dim-100
+    config — raises a ``ValueError`` naming the leaf instead of silently
+    mis-casting), missing arrays raise ``KeyError`` with the available
+    keys, and ``expect`` compares manifest ``extra`` fields (model name,
+    graph fingerprint, ...) via :func:`validate_extra`.
     """
     if step is None:
         step = latest_step(ckpt_dir)
@@ -155,11 +207,17 @@ def restore(
     d = os.path.join(ckpt_dir, f"step_{step:010d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
+    if expect:
+        validate_extra(manifest.get("extra") or {}, expect, d)
     z = np.load(os.path.join(d, "arrays.npz"))
 
     def rebuild(template, prefix, shard_tree):
         if template is None:
-            return None
+            flat = {
+                k[len(prefix) + 2:]: z[k]
+                for k in z.files if k.startswith(f"{prefix}::")
+            }
+            return _nest_flat(flat) if flat else None
         paths = jax.tree_util.tree_flatten_with_path(template)
         leaves = []
         shard_leaves = (
@@ -167,7 +225,18 @@ def restore(
             else [None] * len(paths[0]))
         for (path, leaf), sh in zip(paths[0], shard_leaves):
             key = f"{prefix}::" + "/".join(_path_str(p) for p in path)
+            if key not in z.files:
+                raise KeyError(
+                    f"checkpoint {d} has no array {key!r} (stored: "
+                    f"{sorted(z.files)}) — saved by a different model?")
             arr = z[key]
+            if (hasattr(leaf, "shape")
+                    and tuple(arr.shape) != tuple(leaf.shape)):
+                raise ValueError(
+                    f"checkpoint array {key!r} has shape "
+                    f"{tuple(arr.shape)} but the template expects "
+                    f"{tuple(leaf.shape)} — checkpoint from a different "
+                    "model or config?")
             arr = arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr
             if sh is not None:
                 arr = jax.device_put(arr, sh)

@@ -17,6 +17,10 @@ Run with 8 forced host devices (the parent test sets XLA_FLAGS).  Asserts:
   8. in-loop eval trace (kg.fit(eval_every=...)): a shard_map training run
      produces the same trace structure and (to collective-reordering
      tolerance) the same metric curve as the vmap run
+  9. checkpoint/resume + serving: a resumed shard_map device-pipeline run
+     is bit-identical to its own unbroken run, and the KnowledgeBase
+     query engine's shard_map top-k equals the vmap engine exactly
+     (ids and energies), raw and filtered
 Exit code 0 on success.
 """
 import dataclasses
@@ -271,6 +275,52 @@ def check_inloop_eval():
           "and == post-hoc (exact)  OK")
 
 
+def check_kb_resume_serve():
+    """Checkpoint/resume and the serving engine under shard_map: resume is
+    bit-identical within the backend, and the sharded query engine's
+    top-k equals the single-device engine exactly."""
+    import tempfile
+
+    from repro import kg as kg_api
+    from repro.serve.kg_engine import KGQueryEngine
+
+    kg = kg_lib.synthetic_kg(0, n_entities=200, n_relations=5, n_triplets=2000)
+    mesh = jax.make_mesh((W,), ("workers",))
+    kw = dict(model="transe", n_workers=W, dim=8, learning_rate=0.05,
+              batch_size=16, seed=0, pipeline="device", block_epochs=2,
+              backend="shard_map", mesh=mesh)
+    full = kg_api.fit(kg, epochs=4, **kw)
+    d = tempfile.mkdtemp(prefix="kb_resume_")
+    kg_api.fit(kg, epochs=2, ckpt_dir=d, checkpoint_every=2,
+               sync_checkpoints=True, **kw)
+    resumed = kg_api.fit(kg, epochs=4, ckpt_dir=d, resume=True, **kw)
+    for k in ("ent", "rel"):
+        np.testing.assert_array_equal(
+            np.asarray(resumed.params[k]), np.asarray(full.params[k]),
+            err_msg=f"shard_map resume table {k}")
+    assert resumed.loss_history == full.loss_history
+    print("shard_map checkpoint-resume: bit-identical  OK")
+
+    params = {k: np.asarray(v) for k, v in full.params.items()}
+    h, r = kg.test[:32, 0], kg.test[:32, 1]
+    exclude = kg.known_candidate_masks(
+        np.stack([h, r], axis=1), "tail")
+    ref_eng = KGQueryEngine("transe", params)
+    shard_eng = KGQueryEngine(
+        "transe", params, n_workers=W, backend="shard_map", mesh=mesh)
+    for label, q_kw in (("raw", {}), ("filtered", {"exclude": exclude})):
+        ref = ref_eng.query_tails(h, r, k=10, **q_kw)
+        got = shard_eng.query_tails(h, r, k=10, **q_kw)
+        np.testing.assert_array_equal(
+            got.ids, ref.ids, err_msg=f"serve {label} ids")
+        np.testing.assert_array_equal(
+            got.energies, ref.energies, err_msg=f"serve {label} energies")
+    ref = ref_eng.query_relations(kg.test[:32, 0], kg.test[:32, 2], k=3)
+    got = shard_eng.query_relations(kg.test[:32, 0], kg.test[:32, 2], k=3)
+    np.testing.assert_array_equal(got.ids, ref.ids)
+    print("serve engine: shard_map == vmap (exact, raw + filtered)  OK")
+
+
 if __name__ == "__main__":
     check_engine()
     check_outer_merge()
@@ -278,4 +328,5 @@ if __name__ == "__main__":
     check_device_eval()
     check_repartition()
     check_inloop_eval()
+    check_kb_resume_serve()
     print("ALL MULTIDEVICE CHECKS PASSED")

@@ -1,0 +1,375 @@
+"""Tests for the KnowledgeBase artifact (repro/kb.py), checkpoint/resume
+(core/mapreduce.py + train/checkpoint.py), and the device query engine
+(serve/kg_engine.py).
+
+Three contracts:
+
+  * **Persistence** — ``KnowledgeBase.save``/``load`` round-trips tables,
+    graph, and metadata exactly; corrupted / cross-model artifacts and
+    checkpoints fail loudly (the hardened ``checkpoint.restore``).
+  * **Bit-identical resume** — ``fit(epochs=2E)`` equals
+    ``fit(epochs=E, ckpt_dir=...)`` then ``fit(epochs=2E, resume=True)``
+    parameter-for-parameter AND loss-for-loss, per pipeline x paradigm
+    (tier-1 keeps the sgd cells; the full matrix incl. merge_every > 1 is
+    marked slow).
+  * **Query-vs-eval parity** — ranks derived from the serving engine's
+    top-k (and ``rank()`` directly) exactly equal the rank vectors the
+    device eval engine extracts for the same queries, raw and filtered.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro import kg as kg_api
+from repro.core import eval_device
+from repro.data import kg as kg_lib
+from repro.serve.kg_engine import KGQueryEngine
+from repro.train import checkpoint as ckpt_lib
+
+# batch 75 divides the 1125-triplet per-worker split of tiny_kg at W=2 —
+# no remainder warnings in this suite
+BASE = dict(model="transe", n_workers=2, dim=8, learning_rate=0.05,
+            batch_size=75, seed=0)
+
+
+def _fit(tiny_kg, **kw):
+    merged = dict(BASE)
+    merged.update(kw)
+    return kg_api.fit(tiny_kg, **merged)
+
+
+@pytest.fixture(scope="module")
+def trained(tiny_kg):
+    """One short trained artifact shared by the query/parity tests."""
+    return _fit(tiny_kg, epochs=2).kb
+
+
+# ---------------------------------------------------------------------------
+# Save / load round-trip
+# ---------------------------------------------------------------------------
+
+def test_kb_save_load_roundtrip(trained, tiny_kg, tmp_path):
+    d = str(tmp_path / "kb")
+    trained.save(d)
+    kb2 = kg_api.KnowledgeBase.load(d)
+    assert kb2.model.name == trained.model.name
+    assert kb2.norm == trained.norm
+    assert (kb2.n_entities, kb2.n_relations, kb2.dim) == (
+        trained.n_entities, trained.n_relations, trained.dim)
+    for name in trained.params:
+        np.testing.assert_array_equal(
+            np.asarray(trained.params[name]), kb2.params[name])
+    for split in ("train", "valid", "test"):
+        np.testing.assert_array_equal(
+            getattr(kb2.graph, split), getattr(tiny_kg, split))
+    # loaded artifact answers queries identically
+    h, r = tiny_kg.test[:10, 0], tiny_kg.test[:10, 1]
+    a = trained.query_tails(h, r, k=5)
+    b = kb2.query_tails(h, r, k=5)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.energies, b.energies)
+    # and filtered queries (known-neighbor masks from the shipped graph)
+    a = trained.query_tails(h, r, k=5, filtered=True)
+    b = kb2.query_tails(h, r, k=5, filtered=True)
+    np.testing.assert_array_equal(a.ids, b.ids)
+
+
+def test_kb_save_without_graph(trained, tmp_path):
+    d = str(tmp_path / "kb")
+    trained.save(d, include_graph=False)
+    kb2 = kg_api.KnowledgeBase.load(d)
+    assert kb2.graph is None
+    h, r = [3, 7], [1, 2]
+    np.testing.assert_array_equal(
+        kb2.query_tails(h, r, k=3).ids, trained.query_tails(h, r, k=3).ids)
+    with pytest.raises(ValueError, match="filtered"):
+        kb2.query_tails(h, r, filtered=True)
+    with pytest.raises(ValueError, match="graph"):
+        kb2.evaluate()
+
+
+def test_kb_load_rejects_training_checkpoint(tiny_kg, tmp_path):
+    d = str(tmp_path / "ck")
+    _fit(tiny_kg, epochs=2, ckpt_dir=d, sync_checkpoints=True)
+    with pytest.raises(ValueError, match="kind"):
+        kg_api.KnowledgeBase.load(d)
+
+
+def test_kb_evaluate_matches_facade(trained):
+    direct = trained.evaluate(engine="device", n_workers=2)
+    via_facade = kg_api.evaluate(trained, engine="device", n_workers=2)
+    assert direct == via_facade
+    raw = kg_api.evaluate(
+        trained.params, trained.model, trained.graph,
+        engine="device", n_workers=2)
+    assert direct == raw
+
+
+def test_evaluate_raw_params_requires_model_and_graph(trained):
+    with pytest.raises(TypeError, match="model"):
+        kg_api.evaluate(trained.params)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identical checkpoint/resume
+# ---------------------------------------------------------------------------
+
+def _assert_resume_bit_identical(tiny_kg, tmp_path, pipeline, paradigm,
+                                 **extra_kw):
+    kw = dict(paradigm=paradigm, **extra_kw)
+    if pipeline == "device":
+        kw.setdefault("pipeline", "device")
+        kw.setdefault("block_epochs", 2)
+    d = str(tmp_path / f"ck_{pipeline}_{paradigm}")
+    full = _fit(tiny_kg, epochs=4, **kw)
+    _fit(tiny_kg, epochs=2, ckpt_dir=d, checkpoint_every=2,
+         sync_checkpoints=True, **kw)
+    resumed = _fit(tiny_kg, epochs=4, ckpt_dir=d, resume=True, **kw)
+    for name in full.params:
+        np.testing.assert_array_equal(
+            np.asarray(resumed.params[name]), np.asarray(full.params[name]),
+            err_msg=f"{pipeline}/{paradigm} table {name}")
+    assert resumed.loss_history == full.loss_history
+    assert resumed.epochs_run == full.epochs_run == 4
+
+
+def test_resume_bit_identical_host_sgd(tiny_kg, tmp_path):
+    _assert_resume_bit_identical(tiny_kg, tmp_path, "host", "sgd")
+
+
+def test_resume_bit_identical_device_sgd(tiny_kg, tmp_path):
+    _assert_resume_bit_identical(tiny_kg, tmp_path, "device", "sgd")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("pipeline", ["host", "device"])
+@pytest.mark.parametrize("paradigm", ["sgd", "bgd"])
+def test_resume_bit_identical_matrix(tiny_kg, tmp_path, pipeline, paradigm):
+    _assert_resume_bit_identical(tiny_kg, tmp_path, pipeline, paradigm)
+
+
+@pytest.mark.slow
+def test_resume_bit_identical_merge_every(tiny_kg, tmp_path):
+    """Resume across Reduce rounds: merge_every=2, checkpoint at a round
+    boundary."""
+    _assert_resume_bit_identical(
+        tiny_kg, tmp_path, "device", "sgd", merge_every=2)
+
+
+def test_resume_with_caller_params_replays_correctly(tiny_kg, tmp_path):
+    """A warm-started run (caller params, no init split) must resume
+    bit-identically too — fresh_init=False rides in the manifest."""
+    import jax
+
+    from repro.core.models import KGConfig, get_model
+
+    model = get_model("transe")
+    kcfg = KGConfig(n_entities=tiny_kg.n_entities,
+                    n_relations=tiny_kg.n_relations, dim=8)
+    warm = model.init_params(jax.random.PRNGKey(99), kcfg)
+    d = str(tmp_path / "ck")
+    full = _fit(tiny_kg, epochs=4, params=warm)
+    _fit(tiny_kg, epochs=2, params=warm, ckpt_dir=d, checkpoint_every=2,
+         sync_checkpoints=True)
+    resumed = _fit(tiny_kg, epochs=4, ckpt_dir=d, resume=True)
+    for name in full.params:
+        np.testing.assert_array_equal(
+            np.asarray(resumed.params[name]), np.asarray(full.params[name]))
+
+
+def test_checkpoint_final_state_always_saved(tiny_kg, tmp_path):
+    """checkpoint_every=None still persists the run's final state, and
+    an odd `every` still checkpoints the last epoch."""
+    d1 = str(tmp_path / "end_only")
+    _fit(tiny_kg, epochs=3, ckpt_dir=d1, sync_checkpoints=True)
+    assert ckpt_lib.latest_step(d1) == 3
+    d2 = str(tmp_path / "every2")
+    _fit(tiny_kg, epochs=3, ckpt_dir=d2, checkpoint_every=1,
+         sync_checkpoints=True, keep_checkpoints=5)
+    steps = sorted(int(s.split("_")[1]) for s in os.listdir(d2))
+    assert steps == [1, 2, 3]
+
+
+def test_resume_validation_errors(tiny_kg, tmp_path):
+    d = str(tmp_path / "ck")
+    _fit(tiny_kg, epochs=2, ckpt_dir=d, checkpoint_every=2,
+         sync_checkpoints=True)
+    # cross-model resume refused by the manifest check
+    with pytest.raises(ValueError, match="model"):
+        _fit(tiny_kg, epochs=4, model="distmult", ckpt_dir=d, resume=True)
+    # cross-seed resume would silently break bit-identity — refused
+    with pytest.raises(ValueError, match="seed"):
+        _fit(tiny_kg, epochs=4, seed=7, ckpt_dir=d, resume=True)
+    # cross-graph resume refused by the fingerprint
+    other = kg_lib.synthetic_kg(3, n_entities=300, n_relations=6,
+                                n_triplets=2500)
+    with pytest.raises(ValueError, match="graph"):
+        kg_api.fit(other, epochs=4, ckpt_dir=d, resume=True, **BASE)
+    # any trajectory-shaping config change breaks bit-identity — refused
+    with pytest.raises(ValueError, match="config"):
+        _fit(tiny_kg, epochs=4, paradigm="bgd", ckpt_dir=d, resume=True)
+    with pytest.raises(ValueError, match="config"):
+        _fit(tiny_kg, epochs=4, pipeline="device", block_epochs=2,
+             ckpt_dir=d, resume=True)
+    with pytest.raises(ValueError, match="config"):
+        merged = dict(BASE, n_workers=4)
+        kg_api.fit(tiny_kg, epochs=4, ckpt_dir=d, resume=True, **merged)
+    # a different dim fails the template shape check
+    with pytest.raises(ValueError, match="shape"):
+        _fit(tiny_kg, epochs=4, dim=16, ckpt_dir=d, resume=True)
+    # nothing left to train
+    with pytest.raises(ValueError, match="epochs"):
+        _fit(tiny_kg, epochs=2, ckpt_dir=d, resume=True)
+    # checkpoint knobs without a directory
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        _fit(tiny_kg, epochs=2, checkpoint_every=1)
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        _fit(tiny_kg, epochs=2, resume=True)
+    # resume and explicit params are mutually exclusive
+    with pytest.raises(ValueError, match="resume"):
+        _fit(tiny_kg, epochs=4, ckpt_dir=d, resume=True,
+             params={"ent": None, "rel": None})
+
+
+def test_restore_shape_and_key_validation(tmp_path):
+    """The hardened checkpoint.restore: template shape mismatches and
+    missing arrays raise clear errors instead of mis-casting."""
+    import jax
+
+    d = str(tmp_path / "ck")
+    ckpt_lib.save(d, 1, {"a": np.zeros((4, 8), np.float32)})
+    good = jax.eval_shape(lambda: {"a": np.zeros((4, 8), np.float32)})
+    step, p, _, _ = ckpt_lib.restore(d, params_template=good)
+    assert p["a"].shape == (4, 8)
+    bad_shape = jax.eval_shape(lambda: {"a": np.zeros((4, 16), np.float32)})
+    with pytest.raises(ValueError, match="shape"):
+        ckpt_lib.restore(d, params_template=bad_shape)
+    bad_key = jax.eval_shape(lambda: {"b": np.zeros((4, 8), np.float32)})
+    with pytest.raises(KeyError, match="different model"):
+        ckpt_lib.restore(d, params_template=bad_key)
+    with pytest.raises(ValueError, match="expected"):
+        ckpt_lib.restore(d, expect={"kind": "knowledge_base"})
+
+
+def test_restore_untemplated_nests(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"params": {"ent": np.arange(6, dtype=np.float32).reshape(2, 3)},
+            "graph": {"train": np.ones((5, 3), np.int32)}}
+    ckpt_lib.save(d, 2, tree)
+    step, got, opt, _ = ckpt_lib.restore(d)
+    assert step == 2 and opt is None
+    np.testing.assert_array_equal(got["params"]["ent"],
+                                  tree["params"]["ent"])
+    np.testing.assert_array_equal(got["graph"]["train"],
+                                  tree["graph"]["train"])
+
+
+# ---------------------------------------------------------------------------
+# Query engine vs eval engine parity
+# ---------------------------------------------------------------------------
+
+def _derived_ranks(out, gold):
+    """Rank of each gold entity from a full-k QueryResult: 1 + the number
+    of candidates with strictly better (lower) energy — the eval
+    engines' rank definition."""
+    ranks = np.empty(len(gold), np.int32)
+    for i in range(len(gold)):
+        pos = np.where(out.ids[i] == gold[i])[0]
+        assert len(pos) == 1, "every entity appears exactly once at k=E"
+        ranks[i] = 1 + int(np.sum(out.energies[i] < out.energies[i][pos[0]]))
+    return ranks
+
+
+def test_query_topk_matches_eval_ranks(trained, tiny_kg):
+    """Top-k-derived ranks == the device eval engine's rank vectors for
+    the same queries — raw and filtered — on both entity sides."""
+    E = tiny_kg.n_entities
+    masks = tiny_kg.eval_filter_candidates()
+    ranks = eval_device.entity_ranks_device(
+        trained.params, tiny_kg.test, trained.norm, masks,
+        model=trained.model)
+    eng = trained.engine()
+    test = tiny_kg.test
+
+    out = eng.query_tails(test[:, 0], test[:, 1], k=E)
+    np.testing.assert_array_equal(
+        _derived_ranks(out, test[:, 2]), ranks["raw_ranks"]["tail"])
+    out = eng.query_heads(test[:, 2], test[:, 1], k=E)
+    np.testing.assert_array_equal(
+        _derived_ranks(out, test[:, 0]), ranks["raw_ranks"]["head"])
+
+    # filtered: exclude the known candidates other than each query's gold
+    # (the eval filter's predicate) and re-derive the rank
+    for side, gold_col, mask in (("tail", 2, masks[0]),
+                                 ("head", 0, masks[1])):
+        gold = test[:, gold_col]
+        ex = mask.copy()
+        ex[ex == gold[:, None]] = E
+        q = (test[:, 0], test[:, 1]) if side == "tail" else (
+            test[:, 2], test[:, 1])
+        fn = eng.query_tails if side == "tail" else eng.query_heads
+        out = fn(*q, k=E, exclude=ex)
+        np.testing.assert_array_equal(
+            _derived_ranks(out, gold), ranks["filtered_ranks"][side],
+            err_msg=f"filtered {side}")
+
+
+def test_engine_rank_matches_eval_exactly(trained, tiny_kg):
+    """engine.rank() IS the eval scan — array-equal ranks, raw+filtered."""
+    masks = tiny_kg.eval_filter_candidates()
+    ranks = eval_device.entity_ranks_device(
+        trained.params, tiny_kg.test, trained.norm, masks,
+        model=trained.model)
+    eng = trained.engine(n_workers=2)
+    np.testing.assert_array_equal(
+        eng.rank(tiny_kg.test, "tail"), ranks["raw_ranks"]["tail"])
+    np.testing.assert_array_equal(
+        eng.rank(tiny_kg.test, "head"), ranks["raw_ranks"]["head"])
+    np.testing.assert_array_equal(
+        eng.rank(tiny_kg.test, "tail", cand_masks=masks[0]),
+        ranks["filtered_ranks"]["tail"])
+
+
+def test_engine_sharded_and_chunk_invariance(trained, tiny_kg):
+    """Worker sharding and chunk size change the layout, never the
+    answer."""
+    test = tiny_kg.test[:40]
+    ref = trained.query_tails(test[:, 0], test[:, 1], k=7)
+    for kw in ({"n_workers": 4}, {"chunk": 8}, {"n_workers": 2, "chunk": 16}):
+        got = trained.query_tails(test[:, 0], test[:, 1], k=7, **kw)
+        np.testing.assert_array_equal(got.ids, ref.ids, err_msg=str(kw))
+        np.testing.assert_array_equal(got.energies, ref.energies)
+
+
+def test_filtered_query_excludes_known(trained, tiny_kg):
+    """filtered=True never returns an already-known tail of (h, r)."""
+    by_hr, _ = tiny_kg.known_index()
+    test = tiny_kg.test[:30]
+    out = trained.query_tails(test[:, 0], test[:, 1], k=10, filtered=True)
+    for i, (h, r, _) in enumerate(test):
+        known = set(by_hr.get((int(h), int(r)), []))
+        live = [t for t, e in zip(out.ids[i], out.energies[i])
+                if np.isfinite(e)]
+        assert not (set(live) & known), (i, known)
+
+
+def test_score_matches_model_energy(trained, tiny_kg):
+    from repro.core.models import get_model
+
+    test = tiny_kg.test[:16]
+    got = trained.score(test[:, 0], test[:, 1], test[:, 2])
+    want = np.asarray(get_model("transe").energy(
+        trained.params, test, trained.norm))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_engine_scalar_and_standalone(trained):
+    """The engine works standalone (no KnowledgeBase) and accepts scalar
+    ids by broadcasting."""
+    eng = KGQueryEngine(trained.model, trained.params, norm=trained.norm)
+    out = eng.query_tails(3, 1, k=4)
+    assert out.ids.shape == (1, 4)
+    out2 = eng.query_tails([3, 5, 9], 1, k=4)   # scalar relation broadcast
+    assert out2.ids.shape == (3, 4)
+    np.testing.assert_array_equal(out2.ids[0], out.ids[0])
