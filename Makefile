@@ -2,7 +2,8 @@
 # local runs, and CI all use the tier-1 command from ROADMAP.md.
 PY ?= python
 
-.PHONY: test test-fast test-slow quickstart bench bench-check lint golden
+.PHONY: test test-fast test-slow quickstart bench bench-latency bench-check \
+	serve lint golden
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -24,6 +25,19 @@ quickstart:
 # BENCH_trace.json (quality-vs-epoch curves + in-loop eval overhead).
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run_all
+
+# Just the serving-tier latency bench (open-loop Poisson traffic through
+# KGServer -> p50/p99 + sustained QPS), printed without touching the
+# committed BENCH_latency.json baseline.
+bench-latency:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_latency
+
+# Serving-tier smoke: train a small KG, stand up KGServer, and drive
+# open-loop traffic at it through the launcher.
+serve:
+	PYTHONPATH=src $(PY) -m repro.launch.train --kg transe \
+		--kg-epochs 4 --kg-entities 500 --kg-triplets 3000 \
+		--kg-serve --kg-qps 200 --kg-requests 300
 
 # The CI bench-regression gate, runnable locally: quick profile into a
 # scratch dir, compared against the committed baselines (30% band).

@@ -1,0 +1,216 @@
+"""Serving-tier latency under open-loop Poisson traffic
+(BENCH_latency.json) — the millions-of-users number.
+
+bench_serve measures *offline* throughput: pre-formed batches through
+``KGQueryEngine``.  A live service never sees pre-formed batches; it
+sees individual requests arriving at some rate whether or not it is
+keeping up (open-loop), and its contract is the latency distribution it
+sustains.  This bench drives ``serve.KGServer`` exactly that way:
+
+  * **Open-loop cells** — per (batching config, target QPS): a driver
+    thread submits single ``(h, r, ?)`` queries at Poisson arrival times
+    and never waits for answers (queueing delay is *measured*, not
+    masked — the classic closed-loop mistake).  Reported per cell:
+    sustained queries/sec (completions over the full span including
+    drain), p50/p99 queue-to-answer latency, cache hit rate, mean wave
+    size, and the steady-state recompile count across the mixed-size
+    wave stream the Poisson process produces (== 0: every wave lands on
+    a bucket ``warmup()`` pre-compiled).
+  * **Capacity cells** — per config: every request submitted at once,
+    the continuous batcher forms maximal waves; completions/sec is the
+    queue-discipline ceiling (the number open-loop rates must stay
+    under), through the same request path the open-loop cells use.
+
+Rates are chosen sub-saturation for every config (service time of a
+bucket-1 wave is ~0.3-0.5 ms on the dev container) so the latency
+numbers are stable enough to regression-gate: ``check_regression.py``
+holds ``*_per_s`` fields to a lower bound, ``*_ms`` latencies to an
+upper bound (a wider band than throughput — tails are noisier), and
+``steady_recompiles`` to no-worse-than-baseline (0).
+
+Measurement discipline: every open-loop cell runs ``REPEATS`` times;
+rate fields report the median (as the other benches do) and latency
+percentiles report the **min** across repeats — a scheduler stall on a
+shared runner inflates one repeat's tail by 10x (observed), and the
+best-of-3 p99 still exposes any systematic pessimization (a recompile
+per wave, a de-batched queue, a host sync) while ignoring the stall.
+
+``quick=True`` is the CI bench-regression profile: a cross-section of
+the grid with identical per-cell work, so rows match the committed
+baselines exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core.models import KGConfig, get_model
+from repro.data import kg as kg_lib
+from repro.kb import KnowledgeBase
+from repro.serve import KGServer
+
+DIM = 32
+K = 10
+REPEATS = 3            # open-loop repeats per cell (median rates, min tails)
+N_REQUESTS = 2000      # per open-loop cell
+N_BURST = 2048         # per capacity cell
+UNIQUE = 500           # distinct (h, r) pairs per cell — repeats hit the
+                       # LRU answer cache, as hot production traffic would
+RATES = (500, 2000)    # offered QPS per config (sub-saturation, see above)
+TIMEOUT_S = 120
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchConfig:
+    label: str
+    max_batch: int
+    max_wait_us: int
+
+
+CONFIGS = (
+    BatchConfig("unbatched", 1, 0),
+    BatchConfig("batch16_wait1ms", 16, 1000),
+    BatchConfig("batch64_wait2ms", 64, 2000),
+)
+# quick profile: the no-batching reference at the low rate + the mid
+# batching config at the high rate (same per-cell work as the full grid)
+QUICK_CELLS = (("unbatched", 500), ("batch16_wait1ms", 2000))
+
+
+def build():
+    # same graph regime as bench_serve: E big enough that scoring all
+    # entities is real work
+    return kg_lib.synthetic_kg(1, n_entities=1000, n_relations=10,
+                               n_triplets=4000)
+
+
+def _make_kb(graph, model: str) -> KnowledgeBase:
+    kgm = get_model(model)
+    kcfg = KGConfig(n_entities=graph.n_entities,
+                    n_relations=graph.n_relations, dim=DIM)
+    params = kgm.init_params(jax.random.PRNGKey(0), kcfg)
+    return KnowledgeBase(kgm, params, graph=graph, norm="l1")
+
+
+def _query_pool(graph, seed: int, n: int):
+    """(heads, rels) drawn from ``UNIQUE`` distinct test-split pairs."""
+    rng = np.random.default_rng(seed)
+    uniq = rng.choice(len(graph.test), size=min(UNIQUE, len(graph.test)),
+                      replace=False)
+    picks = graph.test[rng.choice(uniq, size=n)]
+    return picks[:, 0], picks[:, 1]
+
+
+def _drain(futures) -> list:
+    return [f.result(timeout=TIMEOUT_S) for f in futures]
+
+
+def _capacity(server: KGServer, graph, seed: int) -> float:
+    """Completions/sec with every request enqueued at once — the queue
+    discipline's ceiling through the full submit path."""
+    heads, rels = _query_pool(graph, seed, N_BURST)
+    server.clear_cache()
+    t0 = time.perf_counter()
+    futures = [server.submit("tails", h, r, k=K)
+               for h, r in zip(heads, rels)]
+    _drain(futures)
+    return N_BURST / (time.perf_counter() - t0)
+
+
+def _open_loop(server: KGServer, graph, rate: float, seed: int) -> dict:
+    """One open-loop Poisson cell: submit at arrival times, measure the
+    queue-to-answer latency distribution and the sustained rate."""
+    heads, rels = _query_pool(graph, seed, N_REQUESTS)
+    rng = np.random.default_rng(seed + 1)
+    arrivals = rng.exponential(1.0 / rate, size=N_REQUESTS).cumsum()
+    server.clear_cache()
+    futures = []
+    t0 = time.perf_counter()
+    for h, r, t_arr in zip(heads, rels, arrivals):
+        lag = t_arr - (time.perf_counter() - t0)
+        if lag > 0:
+            time.sleep(lag)
+        futures.append(server.submit("tails", h, r, k=K))
+    t_submit_done = time.perf_counter()
+    answers = _drain(futures)
+    t_end = time.perf_counter()
+    lat_ms = np.array([a.latency_s for a in answers]) * 1e3
+    # cache hits answer in ~µs and dominate the overall percentiles under
+    # hot traffic; the *_compute_* percentiles are the latency a cache
+    # miss pays end to end (queueing + batching wait + the compiled wave)
+    compute_ms = np.array(
+        [a.latency_s for a in answers if not a.cached]) * 1e3
+    if compute_ms.size == 0:
+        compute_ms = lat_ms
+    return {
+        "offered_queries_per_s": round(N_REQUESTS / (t_submit_done - t0), 1),
+        "sustained_queries_per_s": round(N_REQUESTS / (t_end - t0), 1),
+        "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+        "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+        "p50_compute_ms": round(float(np.percentile(compute_ms, 50)), 3),
+        "p99_compute_ms": round(float(np.percentile(compute_ms, 99)), 3),
+        "cache_hit_rate": round(
+            sum(a.cached for a in answers) / len(answers), 3),
+    }
+
+
+def run(verbose: bool = True, model: str = "transe", quick: bool = False):
+    graph = build()
+    kb = _make_kb(graph, model)
+    rows = []
+    for cfg in CONFIGS:
+        cells = [r for r in RATES
+                 if not quick or (cfg.label, r) in QUICK_CELLS]
+        if not cells:
+            continue
+        server = KGServer(kb, max_batch=cfg.max_batch,
+                          max_wait_us=cfg.max_wait_us, default_k=K)
+        # pre-compile every bucket this config can admit: the open-loop
+        # stream produces mixed wave sizes and none of them may recompile
+        server.warmup(kinds=("tails",), filtered=False)
+        try:
+            capacity = _capacity(server, graph, seed=7)
+            for rate in cells:
+                before = server.stats()
+                reps = [_open_loop(server, graph, rate,
+                                   seed=100 + rate + 17 * i)
+                        for i in range(REPEATS)]
+                cell = {
+                    k: round(float(
+                        min(r[k] for r in reps) if k.endswith("_ms")
+                        else np.median([r[k] for r in reps])), 3)
+                    for k in reps[0]
+                }
+                stats = server.stats()
+                cell_waves = stats.waves - before.waves
+                cell_rows = (stats.mean_wave * stats.waves
+                             - before.mean_wave * before.waves)
+                row = {
+                    "model": model,
+                    "task": f"query_tails_top{K}",
+                    "config": cfg.label,
+                    "max_batch": cfg.max_batch,
+                    "max_wait_us": cfg.max_wait_us,
+                    "target_qps": rate,
+                    "n_requests": N_REQUESTS,
+                    "unique_queries": UNIQUE,
+                    **cell,
+                    "capacity_queries_per_s": round(capacity, 1),
+                    "mean_batch": round(
+                        cell_rows / cell_waves if cell_waves else 0.0, 2),
+                    "steady_recompiles": stats.steady_recompiles,
+                }
+                rows.append(row)
+                if verbose:
+                    print(",".join(f"{k}={v}" for k, v in row.items()),
+                          flush=True)
+        finally:
+            server.stop()
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,22 +1,31 @@
 """Bench-regression gate: compare a fresh benchmark run against the
-committed ``BENCH_*.json`` baselines and fail on big throughput drops.
+committed ``BENCH_*.json`` baselines and fail on big perf drops.
 
     PYTHONPATH=src python -m benchmarks.check_regression \
         --baseline-dir . --fresh-dir ci-bench [--tolerance 0.30]
 
-For every JSON name present in both directories, rows are matched on their
-identity fields (model / paradigm / task / workers / ...), and every
-throughput field (``*_per_s``) of a matched row must satisfy
+For every JSON name present in both directories, rows are matched on
+their identity fields (model / paradigm / task / workers / batching
+config / ...) and every *measured* field of a matched row is held to its
+band:
 
-    fresh >= baseline * (1 - tolerance)
+  * throughput (``*_per_s``):      fresh >= baseline * (1 - tolerance)
+  * latency (``*_ms``):            fresh <= baseline * (1 + latency-tol)
+    (default 1.0 — tails on shared runners are noisier than rates even
+    after bench_latency's min-of-repeats; 2x still catches a recompiling
+    or de-batched serve path, which is 10-100x)
+  * recompiles (``*_recompiles``): fresh <= baseline  (the serving
+    tier's committed baseline is 0 — any steady-state recompile is a
+    bucketing bug, not noise, so no band applies)
 
-Rows only one side has (e.g. the W in {2, 8} cells a ``--quick`` run
-skips) are ignored, so the CI quick profile compares exactly the cells it
-reran.  Speedup ratios and the trace bench's curves are *recorded*, not
-gated — absolute rates on shared CI runners are noisy enough already,
-which is why the default band is a generous 30%: this catches
-order-of-magnitude pessimizations (a de-jitted hot path, an accidental
-host sync per epoch), not percent-level drift.
+Rows only one side has (e.g. the cells a ``--quick`` run skips) are
+ignored, so the CI quick profile compares exactly the cells it reran.
+Speedup ratios, cache-hit rates, mean batch sizes, and the trace bench's
+curves are *recorded*, not gated — absolute numbers on shared CI runners
+are noisy enough already, which is why the default band is a generous
+30%: this catches order-of-magnitude pessimizations (a de-jitted hot
+path, an accidental host sync per epoch, a recompiling serve path), not
+percent-level drift.
 """
 from __future__ import annotations
 
@@ -26,23 +35,31 @@ import os
 import sys
 
 DEFAULT_NAMES = ("BENCH_pipeline.json", "BENCH_eval.json",
-                 "BENCH_serve.json")
+                 "BENCH_serve.json", "BENCH_latency.json")
 RATE_SUFFIX = "_per_s"
+# measured (non-identity) fields: gated bands or recorded-only
+MEASURED_SUFFIXES = (RATE_SUFFIX, "_speedup", "_ms", "_rate",
+                     "_recompiles")
+MEASURED_FIELDS = frozenset({"mean_batch"})
+
+
+def _measured(field: str) -> bool:
+    return (field in MEASURED_FIELDS
+            or any(field.endswith(s) for s in MEASURED_SUFFIXES))
 
 
 def _row_key(row: dict) -> tuple:
-    """Identity of a bench row: every non-rate scalar field."""
+    """Identity of a bench row: every non-measured scalar field."""
     return tuple(sorted(
         (k, v) for k, v in row.items()
-        if not k.endswith(RATE_SUFFIX)
-        and not k.endswith("_speedup")
-        and not isinstance(v, (list, dict))
+        if not _measured(k) and not isinstance(v, (list, dict))
     ))
 
 
-def compare(baseline: dict, fresh: dict, tolerance: float) -> list:
-    """Regressions between two bench payloads: one message per rate field
-    of a matched row that dropped below the band."""
+def compare(baseline: dict, fresh: dict, tolerance: float,
+            latency_tolerance: float = 1.0) -> list:
+    """Regressions between two bench payloads: one message per gated
+    field of a matched row that left its band."""
     base_rows = {_row_key(r): r for r in baseline.get("rows", [])}
     problems = []
     matched = 0
@@ -52,18 +69,28 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list:
             continue
         matched += 1
         for field, fresh_val in row.items():
-            if not field.endswith(RATE_SUFFIX):
-                continue
             base_val = base.get(field)
-            if not isinstance(base_val, (int, float)) or base_val <= 0:
+            if not isinstance(base_val, (int, float)):
                 continue
-            floor = base_val * (1.0 - tolerance)
-            if fresh_val < floor:
+            bad = None
+            tol = tolerance
+            if field.endswith(RATE_SUFFIX) and base_val > 0:
+                floor = base_val * (1.0 - tolerance)
+                if fresh_val < floor:
+                    bad = f"{fresh_val} < {floor:.2f}"
+            elif field.endswith("_ms") and base_val > 0:
+                tol = latency_tolerance
+                ceil = base_val * (1.0 + latency_tolerance)
+                if fresh_val > ceil:
+                    bad = f"{fresh_val} > {ceil:.2f}"
+            elif field.endswith("_recompiles"):
+                if fresh_val > base_val:
+                    bad = f"{fresh_val} > {base_val}"
+            if bad is not None:
                 ident = ", ".join(f"{k}={v}" for k, v in _row_key(row))
                 problems.append(
-                    f"  {field} [{ident}]: {fresh_val} < "
-                    f"{floor:.2f} (baseline {base_val}, "
-                    f"tolerance {tolerance:.0%})")
+                    f"  {field} [{ident}]: {bad} (baseline {base_val}, "
+                    f"tolerance {tol:.0%})")
     if matched == 0:
         problems.append(
             "  no rows matched between baseline and fresh run — identity "
@@ -81,6 +108,8 @@ def main() -> int:
                     help="bench JSON filenames to compare")
     ap.add_argument("--tolerance", type=float, default=0.30,
                     help="allowed fractional drop per rate field")
+    ap.add_argument("--latency-tolerance", type=float, default=1.0,
+                    help="allowed fractional rise per *_ms latency field")
     args = ap.parse_args()
 
     failed = False
@@ -98,7 +127,8 @@ def main() -> int:
             baseline = json.load(f)
         with open(fresh_path) as f:
             fresh = json.load(f)
-        problems = compare(baseline, fresh, args.tolerance)
+        problems = compare(baseline, fresh, args.tolerance,
+                           args.latency_tolerance)
         if problems:
             print(f"{name}: REGRESSION", flush=True)
             print("\n".join(problems), flush=True)

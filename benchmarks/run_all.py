@@ -8,9 +8,12 @@ Always runs the pipeline bench (host vs device epochs/sec, W in {1,2,4,8},
 both paradigms -> ``BENCH_pipeline.json``), the eval bench (host vs device
 eval-engine queries/sec on filtered entity inference, W in {1,2,4,8}
 -> ``BENCH_eval.json``), the trace bench (quality-vs-epoch curves per
-merge strategy + in-loop eval overhead -> ``BENCH_trace.json``), and the
+merge strategy + in-loop eval overhead -> ``BENCH_trace.json``), the
 serve bench (batched KnowledgeBase top-k queries/sec vs a per-query host
-loop, W in {1,2,4} -> ``BENCH_serve.json``).
+loop, W in {1,2,4} -> ``BENCH_serve.json``), and the latency bench
+(open-loop Poisson traffic through the continuous-batching ``KGServer``:
+p50/p99 latency, sustained QPS, capacity, steady-state recompiles per
+batching config -> ``BENCH_latency.json``).
 
 ``--quick`` is the CI bench-regression profile: the W in {1, 4}
 cross-section of the grids (and single-repeat trace overhead) — the
@@ -56,6 +59,7 @@ def main() -> None:
     ap.add_argument("--eval-out", default="BENCH_eval.json")
     ap.add_argument("--trace-out", default="BENCH_trace.json")
     ap.add_argument("--serve-out", default="BENCH_serve.json")
+    ap.add_argument("--latency-out", default="BENCH_latency.json")
     ap.add_argument("--out-dir", default=".",
                     help="directory the BENCH_*.json files are written to")
     ap.add_argument("--quick", action="store_true",
@@ -66,7 +70,8 @@ def main() -> None:
                     help="also run the printed-only benchmark suites")
     args = ap.parse_args()
 
-    from benchmarks import bench_eval, bench_pipeline, bench_serve, bench_trace
+    from benchmarks import (bench_eval, bench_latency, bench_pipeline,
+                            bench_serve, bench_trace)
 
     os.makedirs(args.out_dir, exist_ok=True)
 
@@ -149,6 +154,27 @@ def main() -> None:
         },
         "rows": serve_rows,
     }, path(args.serve_out))
+
+    print("== bench:latency ==", flush=True)
+    t0 = time.time()
+    latency_rows = bench_latency.run(verbose=True, model=args.model,
+                                     quick=args.quick)
+    print(f"== bench:latency done ({time.time() - t0:.0f}s) ==", flush=True)
+    _write({
+        "bench": "latency",
+        **_env(),
+        "config": {
+            "n_requests": bench_latency.N_REQUESTS,
+            "n_burst": bench_latency.N_BURST,
+            "unique_queries": bench_latency.UNIQUE,
+            "dim": bench_latency.DIM,
+            "k": bench_latency.K,
+            "rates_qps": list(bench_latency.RATES),
+            "graph": "synthetic_kg(1, n_entities=1000, n_relations=10, "
+                     "n_triplets=4000)",
+        },
+        "rows": latency_rows,
+    }, path(args.latency_out))
 
     if args.full:
         from benchmarks import run as run_mod

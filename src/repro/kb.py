@@ -39,6 +39,7 @@ the filtered-ranking convention applied to serving).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, Optional
 
 import numpy as np
@@ -67,6 +68,8 @@ class KnowledgeBase:
     meta: Dict = dataclasses.field(default_factory=dict)
     _engines: Dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
+    _fingerprint: Optional[str] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def __post_init__(self):
         self.model = get_model(self.model)
@@ -89,6 +92,28 @@ class KnowledgeBase:
     @property
     def dim(self) -> int:
         return int(self.params["ent"].shape[1])
+
+    def fingerprint(self) -> str:
+        """Content identity of this artifact: a short sha256 over the model
+        name, norm, every parameter table's bytes, and the graph's
+        ``KG.fingerprint()`` digests.  Two artifacts answer every query
+        identically iff their fingerprints match, which is exactly what an
+        answer cache needs as a key — ``serve.KGServer`` keys its LRU on
+        this and invalidates on a ``swap()`` that changes it.  Computed
+        once and cached (tables and splits are immutable by repo
+        convention)."""
+        if self._fingerprint is None:
+            h = hashlib.sha256()
+            h.update(f"{self.model.name}:{self.norm}".encode())
+            for name in sorted(self.params):
+                arr = np.ascontiguousarray(np.asarray(self.params[name]))
+                h.update(f":{name}:{arr.dtype}:{arr.shape}".encode())
+                h.update(arr.tobytes())
+            if self.graph is not None:
+                for key, val in sorted(self.graph.fingerprint().items()):
+                    h.update(f":{key}={val}".encode())
+            self._fingerprint = h.hexdigest()[:16]
+        return self._fingerprint
 
     # -- persistence -------------------------------------------------------
 

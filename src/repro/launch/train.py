@@ -118,24 +118,51 @@ def _run_kg(args) -> None:
               f"{metrics['triplet_classification_acc']:.4f}")
 
     if args.kg_serve:
-        # serve a sample of link-prediction traffic from the trained
-        # KnowledgeBase: one compiled batched top-k per query family,
-        # sharded over the training worker count
-        kb = res.kb
-        n = min(5, len(graph.test))
-        h, r, t = (graph.test[:n, i] for i in range(3))
-        tails = kb.query_tails(h, r, k=5, filtered=True,
-                               n_workers=args.kg_workers)
-        rels = kb.query_relations(h, t, k=3, n_workers=args.kg_workers)
-        print(f"serving sample traffic ({n} queries, top-k on device):")
-        for i in range(n):
+        _serve_traffic(args, res.kb, graph)
+
+
+def _serve_traffic(args, kb, graph) -> None:
+    """Open-loop Poisson traffic through the live serving tier: single
+    queries arrive at --kg-qps whether or not the server keeps up, the
+    continuous batcher forms them into pre-compiled bucket waves, and
+    the printed stats are the latency distribution actually sustained."""
+    import time
+
+    import numpy as np
+
+    from repro.serve import KGServer
+
+    rng = np.random.default_rng(args.seed)
+    n = args.kg_requests
+    picks = graph.test[rng.integers(0, len(graph.test), size=n)]
+    arrivals = rng.exponential(1.0 / args.kg_qps, size=n).cumsum()
+    with KGServer(kb, max_batch=16, max_wait_us=2000, default_k=5,
+                  warm=True) as server:
+        futures = []
+        t0 = time.perf_counter()
+        for (h, r, _), t_arr in zip(picks, arrivals):
+            lag = t_arr - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            futures.append(server.submit("tails", h, r, filtered=True))
+        answers = [f.result(timeout=120) for f in futures]
+        span = time.perf_counter() - t0
+        st = server.stats()
+        print(f"served {n} queries at {args.kg_qps:.0f} offered qps "
+              f"(sustained {n / span:.0f} qps): "
+              f"p50={st.p50_ms:.2f}ms p99={st.p99_ms:.2f}ms | "
+              f"waves={st.waves} mean_batch={st.mean_wave:.1f} "
+              f"cache_hits={st.cache_hits}/{st.requests} "
+              f"warm_compiles={st.warm_compiles} "
+              f"steady_recompiles={st.steady_recompiles}")
+        for i in range(min(3, n)):
+            h, r, t = picks[i]
+            a = answers[i]
             cand = ", ".join(
-                f"{e}:{s:.2f}" for e, s in
-                zip(tails.ids[i], tails.energies[i]) if s != float("inf"))
-            print(f"  (h={h[i]}, r={r[i]}, ?) -> tails [{cand}]  "
-                  f"gold={t[i]}")
-            print(f"  (h={h[i]}, ?, t={t[i]}) -> relations "
-                  f"{[int(x) for x in rels.ids[i]]}  gold={r[i]}")
+                f"{e}:{s:.2f}" for e, s in zip(a.ids, a.energies)
+                if s != float("inf"))
+            print(f"  (h={h}, r={r}, ?) -> tails [{cand}]  gold={t}  "
+                  f"[kb={a.fingerprint} cached={a.cached}]")
 
 
 def main(argv=None):
@@ -195,9 +222,16 @@ def main(argv=None):
                          "--kg-ckpt-dir and train to --kg-epochs total — "
                          "bit-identical to the unbroken run")
     ap.add_argument("--kg-serve", action="store_true",
-                    help="after training, answer a sample of batched "
-                         "link-prediction queries from the trained "
-                         "KnowledgeBase (device top-k engine)")
+                    help="after training, stand up the live serving tier "
+                         "(serve.KGServer: continuous batching, bucket "
+                         "warmup, answer cache) and drive open-loop "
+                         "Poisson link-prediction traffic through it")
+    ap.add_argument("--kg-qps", type=float, default=200.0,
+                    help="offered open-loop arrival rate for --kg-serve "
+                         "(requests fire on a Poisson clock whether or "
+                         "not the server keeps up)")
+    ap.add_argument("--kg-requests", type=int, default=500,
+                    help="number of queries --kg-serve drives")
     ap.add_argument("--kg-eval-engine", default=None,
                     choices=["host", "device"],
                     help="run the three-task eval protocol after training: "

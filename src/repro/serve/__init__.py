@@ -1,5 +1,24 @@
-"""Serving substrate: the LM KV-cache engine with batched prefill/decode
-(``engine.py``) and the device-resident KG link-prediction query engine
-(``kg_engine.py`` — what ``repro.kb.KnowledgeBase`` answers traffic with).
+"""Serving substrate — two unrelated workloads share this package:
+
+  * **Token-LM serving** (``engine.py``): the seed substrate's KV-cache
+    ``Engine`` with batched prefill/decode for the ``repro.models`` zoo.
+    It has nothing to do with the knowledge-graph work.
+  * **KG link-prediction serving** — the paper's artifact under traffic:
+
+      - ``kg_engine.KGQueryEngine`` (PR 5): the *batch* face.  One
+        compiled top-k computation per pre-formed query batch, query
+        axis sharded over workers; what ``repro.kb.KnowledgeBase``
+        answers offline batches with.
+      - ``server.KGServer`` (PR 6): the *live* face.  Individual
+        requests arrive asynchronously; a batcher thread forms them
+        into continuously-batched waves (``max_batch`` / ``max_wait_us``),
+        pads each wave to a pre-compiled power-of-two bucket (zero
+        steady-state recompiles), answers hot queries from a
+        fingerprint-keyed LRU cache, and hot-swaps KnowledgeBase
+        artifacts with zero downtime.  Its contract is *time* —
+        p50/p99 latency and sustained QPS (benchmarks/bench_latency.py)
+        — on top of the engine's bit-exact answers.
 """
 from repro.serve.kg_engine import KGQueryEngine, QueryResult  # noqa: F401
+from repro.serve.server import (  # noqa: F401
+    KGServer, ServedAnswer, ServerStats)

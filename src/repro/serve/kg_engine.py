@@ -181,9 +181,11 @@ class KGQueryEngine:
 
     # -- layout helpers (shared with the eval engine) ----------------------
 
-    def _shard_queries(self, triplets: np.ndarray, exclude):
+    def _shard_queries(self, triplets: np.ndarray, exclude,
+                       chunk: Optional[int] = None):
         Q = len(triplets)
-        S, C, Qp = eval_device._layout(Q, self.chunk, self.n_workers)
+        S, C, Qp = eval_device._layout(
+            Q, self.chunk if chunk is None else chunk, self.n_workers)
         W = self.n_workers
         q = eval_device._shard(
             eval_device._pad_rows(np.asarray(triplets, np.int32), Qp),
@@ -212,32 +214,42 @@ class KGQueryEngine:
     # -- queries -----------------------------------------------------------
 
     def query_tails(self, heads, rels, k: int = 10,
-                    exclude: Optional[np.ndarray] = None) -> QueryResult:
+                    exclude: Optional[np.ndarray] = None,
+                    chunk: Optional[int] = None) -> QueryResult:
         """Top-k tail completions of ``(h, r, ?)`` for a batch of (heads,
         rels) id arrays.  ``exclude`` drops known candidates (padded id
-        rows; see class docstring)."""
+        rows; see class docstring).  ``chunk`` overrides the engine's
+        per-scan-step chunk for this call — ``KGServer`` passes its padded
+        bucket size here so every admitted wave lands on a pre-compiled
+        ``(W, 1, bucket, ...)`` shape instead of the engine's default
+        eval-sized layout."""
         return self._entity_topk(
-            self._pair_triplets(heads, rels, "tail"), "tail", k, exclude)
+            self._pair_triplets(heads, rels, "tail"), "tail", k, exclude,
+            chunk)
 
     def query_heads(self, tails, rels, k: int = 10,
-                    exclude: Optional[np.ndarray] = None) -> QueryResult:
+                    exclude: Optional[np.ndarray] = None,
+                    chunk: Optional[int] = None) -> QueryResult:
         """Top-k head completions of ``(?, r, t)``."""
         return self._entity_topk(
-            self._pair_triplets(tails, rels, "head"), "head", k, exclude)
+            self._pair_triplets(tails, rels, "head"), "head", k, exclude,
+            chunk)
 
-    def _entity_topk(self, triplets, side, k, exclude) -> QueryResult:
+    def _entity_topk(self, triplets, side, k, exclude,
+                     chunk: Optional[int] = None) -> QueryResult:
         k = min(int(k), self.n_entities)
-        q, ex, Q = self._shard_queries(triplets, exclude)
+        q, ex, Q = self._shard_queries(triplets, exclude, chunk)
         ids, energies = _entity_topk_device(
             self.model, self.params, q, ex, side=side, norm=self.norm,
             k=k, backend=self.backend, mesh=self.mesh, axis_name="workers")
         return QueryResult(_unshard_k(ids, Q), _unshard_k(energies, Q))
 
-    def query_relations(self, heads, tails, k: int = 10) -> QueryResult:
+    def query_relations(self, heads, tails, k: int = 10,
+                        chunk: Optional[int] = None) -> QueryResult:
         """Top-k relations linking ``(h, ?, t)`` pairs."""
         k = min(int(k), self.n_relations)
         triplets = self._pair_triplets(heads, tails, "relation")
-        q, _, Q = self._shard_queries(triplets, None)
+        q, _, Q = self._shard_queries(triplets, None, chunk)
         ids, energies = _relation_topk_device(
             self.model, self.params, q, norm=self.norm, k=k,
             backend=self.backend, mesh=self.mesh, axis_name="workers")

@@ -1,0 +1,353 @@
+"""Tests for the live serving tier (serve/server.py — ``KGServer``).
+
+The serving tier's determinism contract: a served answer is
+**bit-identical** to calling the bound artifact's ``KGQueryEngine``
+directly with the same query — whatever wave the continuous batcher
+formed around it, whichever power-of-two bucket padded it, whether it
+came from the LRU answer cache or a fresh compiled wave, and on
+whichever side of a zero-downtime ``swap()`` it was admitted.  Plus the
+shape story: after ``warmup()``, a mixed-size query stream triggers zero
+steady-state recompiles; and the cache story: a swap that changes the
+artifact fingerprint invalidates the answer cache, one that doesn't
+keeps it.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.models import KGConfig, get_model
+from repro.data import kg as kg_lib
+from repro.kb import KnowledgeBase
+from repro.serve import KGServer
+
+MAX_BATCH = 8
+WAIT_US = 5000
+
+
+def _make_kb(graph, seed: int = 0) -> KnowledgeBase:
+    model = get_model("transe")
+    cfg = KGConfig(n_entities=graph.n_entities,
+                   n_relations=graph.n_relations, dim=8)
+    params = model.init_params(jax.random.PRNGKey(seed), cfg)
+    return KnowledgeBase(model, params, graph=graph, norm="l1")
+
+
+@pytest.fixture(scope="module")
+def kb(tiny_kg):
+    return _make_kb(tiny_kg, seed=0)
+
+
+@pytest.fixture(scope="module")
+def uniq(tiny_kg):
+    """Test-split indices with pairwise-distinct (h, r) — so tests that
+    count cache hits/misses never collide on a duplicated query pair."""
+    pairs = tiny_kg.test[:, :2]
+    _, first = np.unique(pairs, axis=0, return_index=True)
+    return np.sort(first)
+
+
+@pytest.fixture()
+def server(kb):
+    srv = KGServer(kb, max_batch=MAX_BATCH, max_wait_us=WAIT_US,
+                   default_k=10, warm=True)
+    yield srv
+    srv.stop()
+
+
+def _wave(server, kind, a_ids, b_ids, **kw):
+    """Submit a batch while admission is paused, then release it — the
+    batcher admits exactly this set as one wave (sizes <= max_batch)."""
+    server.pause()
+    futs = [server.submit(kind, a, b, **kw)
+            for a, b in zip(a_ids, b_ids)]
+    server.resume()
+    return [f.result(timeout=30) for f in futs]
+
+
+# ---------------------------------------------------------------------------
+# Answer parity: cache hit/miss, every bucket size, pad slots
+# ---------------------------------------------------------------------------
+
+def test_single_query_parity_and_cache(server, kb, tiny_kg, uniq):
+    eng = kb.engine()
+    rows = tiny_kg.test[uniq[:4]]
+    for h, r, _ in rows:
+        ans = server.query_tails(h, r)
+        direct = eng.query_tails([h], [r], k=10)
+        assert not ans.cached
+        assert ans.fingerprint == kb.fingerprint()
+        np.testing.assert_array_equal(ans.ids, direct.ids[0])
+        np.testing.assert_array_equal(ans.energies, direct.energies[0])
+    before = server.stats()
+    for h, r, _ in rows:            # identical queries: all cache hits,
+        ans = server.query_tails(h, r)   # answers still bit-identical
+        direct = eng.query_tails([h], [r], k=10)
+        assert ans.cached
+        np.testing.assert_array_equal(ans.ids, direct.ids[0])
+        np.testing.assert_array_equal(ans.energies, direct.energies[0])
+    after = server.stats()
+    assert after.cache_hits - before.cache_hits == len(rows)
+    assert after.cache_misses == before.cache_misses
+    assert after.waves == before.waves      # hits never reach the batcher
+
+
+@pytest.mark.parametrize("size", [1, 2, 3, 4, 5, 8])
+def test_wave_parity_every_bucket(server, kb, tiny_kg, uniq, size):
+    """One wave per size: every bucket (1, 2, 4, 8), including partially
+    padded ones, answers bit-identically to a direct engine batch."""
+    eng = kb.engine()
+    rows = tiny_kg.test[uniq[10:10 + size]]
+    h, r = rows[:, 0], rows[:, 1]
+    before = server.stats()
+    answers = _wave(server, "tails", h, r, k=7)
+    direct = eng.query_tails(h, r, k=7)
+    for i, ans in enumerate(answers):
+        np.testing.assert_array_equal(ans.ids, direct.ids[i])
+        np.testing.assert_array_equal(ans.energies, direct.energies[i])
+    after = server.stats()
+    assert after.waves - before.waves == 1
+    bucket = 1 << (size - 1).bit_length() if size > 1 else 1
+    assert after.bucket_waves.get(bucket, 0) == \
+        before.bucket_waves.get(bucket, 0) + 1
+
+
+def test_pad_slots_do_not_leak(server, kb, tiny_kg, uniq):
+    """A wave of 3 rides a bucket of 4; each answer equals the engine's
+    answer for a batch of exactly one — pad rows never touch live rows."""
+    eng = kb.engine()
+    rows = tiny_kg.test[uniq[20:23]]
+    answers = _wave(server, "tails", rows[:, 0], rows[:, 1], k=6)
+    for ans, (h, r, _) in zip(answers, rows):
+        direct = eng.query_tails([h], [r], k=6)
+        np.testing.assert_array_equal(ans.ids, direct.ids[0])
+        np.testing.assert_array_equal(ans.energies, direct.energies[0])
+
+
+def test_heads_and_relations_parity(server, kb, tiny_kg, uniq):
+    eng = kb.engine()
+    rows = tiny_kg.test[uniq[25:30]]
+    h, r, t = rows[:, 0], rows[:, 1], rows[:, 2]
+    heads = _wave(server, "heads", t, r, k=9)
+    direct = eng.query_heads(t, r, k=9)
+    for i, ans in enumerate(heads):
+        np.testing.assert_array_equal(ans.ids, direct.ids[i])
+        np.testing.assert_array_equal(ans.energies, direct.energies[i])
+    rels = _wave(server, "relations", h, t, k=3)
+    direct = eng.query_relations(h, t, k=3)
+    for i, ans in enumerate(rels):
+        np.testing.assert_array_equal(ans.ids, direct.ids[i])
+        np.testing.assert_array_equal(ans.energies, direct.energies[i])
+
+
+def test_filtered_and_explicit_exclusion_parity(server, kb, tiny_kg, uniq):
+    rows = tiny_kg.test[uniq[30:34]]
+    h, r = rows[:, 0], rows[:, 1]
+    answers = _wave(server, "tails", h, r, k=8, filtered=True)
+    direct = kb.query_tails(h, r, k=8, filtered=True)
+    for i, ans in enumerate(answers):
+        np.testing.assert_array_equal(ans.ids, direct.ids[i])
+        np.testing.assert_array_equal(ans.energies, direct.energies[i])
+    # explicit blacklist: excluded ids never appear, answers match the
+    # engine given the same padded exclusion row
+    eng = kb.engine()
+    block = tuple(int(x) for x in direct.ids[0][:3])
+    ans = server.query_tails(h[0], r[0], k=8, exclude=block)
+    ex = np.array([sorted(block)], np.int32)
+    ref = eng.query_tails([h[0]], [r[0]], k=8, exclude=ex)
+    np.testing.assert_array_equal(ans.ids, ref.ids[0])
+    np.testing.assert_array_equal(ans.energies, ref.energies[0])
+    assert not set(block) & set(ans.ids.tolist())
+
+
+# ---------------------------------------------------------------------------
+# Bucketing: zero steady-state recompiles across a mixed-size stream
+# ---------------------------------------------------------------------------
+
+def test_mixed_stream_zero_steady_recompiles(server, tiny_kg, uniq):
+    """After warmup, a stream mixing every wave size (and filtered and
+    unfiltered exclusion shapes) at the warmed k never recompiles."""
+    idx = 0
+    for size in (1, 3, 8, 2, 5, 4, 7, 6, 1, 8):
+        rows = tiny_kg.test[uniq[idx:idx + size]]
+        idx += size
+        _wave(server, "tails", rows[:, 0], rows[:, 1],
+              filtered=bool(size % 2))
+    st = server.stats()
+    assert st.steady_recompiles == 0, st
+    # (warm_compiles may be 0 here: the jit cache is process-global, so
+    # earlier tests can have pre-compiled every shape warmup targets)
+
+
+# ---------------------------------------------------------------------------
+# Hot swap: drain old, admit new, exactly one artifact per answer
+# ---------------------------------------------------------------------------
+
+def test_swap_mid_wave_drains_against_old_artifact(kb, tiny_kg, uniq):
+    """A swap landing while a wave is in flight: the wave already bound
+    the old artifact and answers from it; the next admission sees the
+    new one.  Both sides are bit-checked against their own engine."""
+    kb2 = _make_kb(tiny_kg, seed=1)
+    assert kb2.fingerprint() != kb.fingerprint()
+    srv = KGServer(kb, max_batch=4, max_wait_us=WAIT_US, default_k=10,
+                   warm=True)
+    try:
+        swapped = threading.Event()
+
+        def mid_wave_swap(kind, size, bucket, tenant, fp):
+            if not swapped.is_set():
+                swapped.set()
+                srv.swap(kb2)       # flips the pointer mid-flight
+
+        srv.on_wave_start = mid_wave_swap
+        rows = tiny_kg.test[uniq[40:43]]
+        h, r = rows[:, 0], rows[:, 1]
+        old_wave = _wave(srv, "tails", h, r)
+        assert swapped.is_set()
+        direct_old = kb.engine().query_tails(h, r, k=10)
+        for i, ans in enumerate(old_wave):
+            assert ans.fingerprint == kb.fingerprint()
+            np.testing.assert_array_equal(ans.ids, direct_old.ids[i])
+            np.testing.assert_array_equal(
+                ans.energies, direct_old.energies[i])
+        # everything admitted after the flip answers from the new KB
+        new_ans = srv.query_tails(h[0], r[0])
+        direct_new = kb2.engine().query_tails([h[0]], [r[0]], k=10)
+        assert new_ans.fingerprint == kb2.fingerprint()
+        assert not new_ans.cached   # old-KB answers were invalidated
+        np.testing.assert_array_equal(new_ans.ids, direct_new.ids[0])
+        np.testing.assert_array_equal(
+            new_ans.energies, direct_new.energies[0])
+    finally:
+        srv.on_wave_start = None
+        srv.stop()
+
+
+def test_queued_requests_admit_the_new_artifact(kb, tiny_kg, uniq):
+    """Requests still queued (not yet admitted) when swap() flips the
+    pointer are answered by the NEW artifact — binding happens at
+    admission, so no answer ever mixes artifacts."""
+    kb2 = _make_kb(tiny_kg, seed=2)
+    srv = KGServer(kb, max_batch=4, max_wait_us=WAIT_US, default_k=10,
+                   warm=True)
+    try:
+        rows = tiny_kg.test[uniq[45:47]]
+        srv.pause()
+        futs = [srv.submit("tails", h, r) for h, r, _ in rows]
+        srv.swap(kb2)
+        srv.resume()
+        direct = kb2.engine().query_tails(rows[:, 0], rows[:, 1], k=10)
+        for i, f in enumerate(futs):
+            ans = f.result(timeout=30)
+            assert ans.fingerprint == kb2.fingerprint()
+            np.testing.assert_array_equal(ans.ids, direct.ids[i])
+            np.testing.assert_array_equal(ans.energies, direct.energies[i])
+    finally:
+        srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# Answer cache vs artifact identity
+# ---------------------------------------------------------------------------
+
+def test_swap_with_new_fingerprint_invalidates_cache(kb, tiny_kg, uniq):
+    """The ISSUE's guard: a swap() to a KB whose graph (here: graph AND
+    params) fingerprint differs must invalidate the LRU answer cache."""
+    other_graph = kg_lib.synthetic_kg(7, n_entities=tiny_kg.n_entities,
+                                      n_relations=tiny_kg.n_relations,
+                                      n_triplets=800)
+    kb_other = _make_kb(other_graph, seed=3)
+    assert other_graph.fingerprint() != tiny_kg.fingerprint()
+    assert kb_other.fingerprint() != kb.fingerprint()
+    srv = KGServer(kb, max_batch=4, max_wait_us=WAIT_US, default_k=10,
+                   warm=True)
+    try:
+        h, r, _ = tiny_kg.test[uniq[50]]
+        assert not srv.query_tails(h, r).cached
+        assert srv.query_tails(h, r).cached          # primed
+        srv.swap(kb_other)
+        st = srv.stats()
+        assert st.swaps == 1 and st.cache_invalidations == 1
+        ans = srv.query_tails(h, r)                  # miss again, new KB
+        assert not ans.cached
+        assert ans.fingerprint == kb_other.fingerprint()
+        direct = kb_other.engine().query_tails([h], [r], k=10)
+        np.testing.assert_array_equal(ans.ids, direct.ids[0])
+    finally:
+        srv.stop()
+
+
+def test_swap_with_same_fingerprint_keeps_cache(kb, tiny_kg, uniq):
+    """Identical content => identical fingerprint => the cache survives
+    the swap (the keys could never go stale)."""
+    twin = KnowledgeBase(kb.model, kb.params, graph=kb.graph, norm=kb.norm)
+    assert twin.fingerprint() == kb.fingerprint()
+    srv = KGServer(kb, max_batch=4, max_wait_us=WAIT_US, default_k=10,
+                   warm=True)
+    try:
+        h, r, _ = tiny_kg.test[uniq[51]]
+        assert not srv.query_tails(h, r).cached
+        srv.swap(twin)
+        st = srv.stats()
+        assert st.swaps == 1 and st.cache_invalidations == 0
+        assert srv.query_tails(h, r).cached
+    finally:
+        srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# Multi-KB tenancy, stats, error surface
+# ---------------------------------------------------------------------------
+
+def test_multi_tenant_isolation(kb, tiny_kg, uniq):
+    kb_b = _make_kb(tiny_kg, seed=4)
+    srv = KGServer(kb, max_batch=4, max_wait_us=WAIT_US, default_k=10,
+                   warm=True)
+    try:
+        srv.add_tenant("b", kb_b)
+        h, r, _ = tiny_kg.test[uniq[52]]
+        a = srv.query_tails(h, r)
+        b = srv.query_tails(h, r, tenant="b")
+        assert a.fingerprint == kb.fingerprint()
+        assert b.fingerprint == kb_b.fingerprint()
+        assert not b.cached     # cache keys are fingerprint-scoped
+        np.testing.assert_array_equal(
+            a.ids, kb.engine().query_tails([h], [r], k=10).ids[0])
+        np.testing.assert_array_equal(
+            b.ids, kb_b.engine().query_tails([h], [r], k=10).ids[0])
+    finally:
+        srv.stop()
+
+
+def test_stats_and_error_surface(kb, tiny_kg, uniq):
+    srv = KGServer(kb, max_batch=4, max_wait_us=WAIT_US, default_k=10,
+                   slo_p99_ms=60_000.0)
+    try:
+        with pytest.raises(ValueError, match="kind"):
+            srv.submit("tail", 0, 0)
+        with pytest.raises(ValueError, match="exclusion"):
+            srv.submit("relations", 0, 0, filtered=True)
+        with pytest.raises(KeyError, match="tenant"):
+            srv.submit("tails", 0, 0, tenant="nope")
+        h, r, _ = tiny_kg.test[uniq[53]]
+        srv.query_tails(h, r)
+        st = srv.stats()
+        assert st.completed == st.requests == 1
+        assert st.p50_ms <= st.p99_ms
+        assert st.slo_met is True   # a minute of headroom on one query
+    finally:
+        srv.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        srv.submit("tails", 0, 0)
+
+
+def test_filtered_needs_graph(kb):
+    bare = KnowledgeBase(kb.model, kb.params, graph=None, norm=kb.norm)
+    srv = KGServer(bare, max_batch=2, max_wait_us=WAIT_US)
+    try:
+        with pytest.raises(ValueError, match="graph"):
+            srv.submit("tails", 0, 0, filtered=True)
+        srv.query_tails(0, 0)       # unfiltered serving needs no graph
+    finally:
+        srv.stop()
