@@ -1,0 +1,257 @@
+"""Million-entity scaling: sparse vs dense Reduce transport (epochs/sec +
+merge wire bytes), TSV ingest throughput, and a large-graph round trip.
+
+The sparse transport's claim (core/merge.py transport contract) is that a
+Reduce only needs the rows the round's touch stats mark updated.  How much
+that buys depends entirely on scale: on small graphs every row is touched
+and the delta buffers degenerate to the dense exchange; at n_entities ~
+1e6 with realistic triple counts, a round touches a few percent of the
+entity table and the dense exchange is almost all dead weight.  This bench
+records that trajectory:
+
+* ``task=train`` rows — one per graph size: steady-state device-pipeline
+  epochs/sec (vmap, W=4, sgd/average) per transport, plus per-merge wire
+  bytes three ways: ``dense_merge_bytes`` (analytic: W full tables +
+  touch stats), ``sparse_merge_bytes`` (analytic: the static padded
+  capacity buffers the sparse transport actually allocates), and
+  ``touched_merge_bytes`` (measured: rows actually touched in a real
+  epoch's batches + negatives, the payload a capacity-exact transport
+  would ship).  Deterministic identities aside, only the ``*_per_s``
+  fields are nondeterministic.
+* ``task=ingest`` row — ``data/datasets.py`` streamed TSV loader
+  lines/sec on a generated file, with a fingerprint cross-check against
+  the in-RAM reference loader.
+* ``task=roundtrip`` row — fit -> evaluate through the public API on a
+  1e6-entity graph with the sparse transport (the dense comparison at
+  that size is the ``task=train`` n_entities=1e6 row).
+
+Graphs are uniform-random triples built directly as int32 arrays
+(``synthetic_kg``'s fanout-shaped rejection loop is O(n_draw * N) and
+infeasible at 1e6 entities; transport relative cost only needs scale, not
+graph shape).  ``quick=True`` is the CI cell: the 50k-entity train row +
+the ingest row, measured identically to the committed full baseline so
+``check_regression`` gates them.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import kg as kg_api
+from repro.core import mapreduce
+from repro.core import merge as merge_lib
+from repro.core.models import get_model
+from repro.data import kg as kg_lib
+from repro.data import datasets
+
+DIM = 16
+WORKERS = 4
+STRATEGY = "average"
+# per-size cell config: n_entities -> (n_triplets, batch, timed epochs)
+# n_triplets = max(20_000, N // 20); batch grows with N so the step count
+# stays small and the Reduce is a visible fraction of the epoch
+SIZES = {
+    10_000: (20_000, 256, 6),
+    50_000: (20_000, 256, 4),
+    100_000: (20_000, 512, 4),
+    1_000_000: (50_000, 4_096, 2),
+}
+QUICK_SIZES = (50_000,)
+REPEATS = 3
+INGEST_LINES = 100_000
+ROUNDTRIP_N = 1_000_000
+ROUNDTRIP_EVAL = 16     # held-out triples scored against all 1e6 entities
+
+
+def random_kg(n_entities: int, n_triplets: int, n_relations: int = 100,
+              n_eval: int = 0, seed: int = 0) -> kg_lib.KG:
+    """Uniform-random triples as direct int32 arrays — O(N) at any scale."""
+    rng = np.random.default_rng(seed)
+
+    def draw(n):
+        return np.stack([
+            rng.integers(0, n_entities, n),
+            rng.integers(0, n_relations, n),
+            rng.integers(0, n_entities, n),
+        ], axis=1).astype(np.int32)
+
+    empty = np.zeros((0, 3), np.int32)
+    return kg_lib.KG(n_entities, n_relations, draw(n_triplets),
+                     draw(n_eval) if n_eval else empty,
+                     draw(n_eval) if n_eval else empty)
+
+
+def _epochs_per_sec(graph, model_name, transport, batch, epochs,
+                    repeats=REPEATS) -> float:
+    """Steady-state device-pipeline rate: one compiled block of ``epochs``
+    epochs per measurement, compilation absorbed by a warm-up call."""
+    kgm = get_model(model_name)
+    kcfg, mcfg = kg_api.make_configs(
+        graph, model=model_name, paradigm="sgd", n_workers=WORKERS,
+        backend="vmap", batch_size=batch, dim=DIM, learning_rate=0.05,
+        strategy=STRATEGY, pipeline="device", block_epochs=epochs,
+        merge_transport=transport)
+    part = kg_lib.partition_balanced(0, graph.train, WORKERS)
+    block_fn = mapreduce.make_block_fn(
+        mcfg, kcfg, jnp.asarray(part), model=kgm, seed=0)
+    key = jax.random.PRNGKey(0)
+    params = kgm.init_params(jax.random.split(key)[1], kcfg)
+    epoch_ids = jnp.arange(epochs, dtype=jnp.int32)
+
+    out, losses = block_fn(params, epoch_ids)          # compile
+    jax.block_until_ready(losses)
+    rates = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out, losses = block_fn(params, epoch_ids)
+        jax.block_until_ready((out, losses))
+        rates.append(epochs / (time.perf_counter() - t0))
+    del out, losses, params
+    return float(np.median(rates))
+
+
+def _wire_bytes(graph, model_name, batch) -> tuple:
+    """(dense, sparse-capacity, measured-touched) bytes per Reduce.
+
+    Dense ships W stacked tables plus the two per-row touch stats the
+    merge consumes: W * n_rows * (k + 2) * 4.  Sparse ships the padded
+    capacity buffers: W * C * (k + 3) * 4 (row values + int32 index +
+    count + loss).  Measured replaces C with the rows actually touched in
+    a real epoch's batches + sampled negatives — what a capacity-exact
+    transport would ship."""
+    kgm = get_model(model_name)
+    kcfg, _ = kg_api.make_configs(
+        graph, model=model_name, n_workers=WORKERS, batch_size=batch,
+        dim=DIM)
+    part = kg_lib.partition_balanced(0, graph.train, WORKERS)
+    pos = kg_lib.epoch_batches(0, 0, part, batch)          # (W, S, B, 3)
+    neg = np.asarray(kgm.make_negatives(jax.random.PRNGKey(1),
+                                        jnp.asarray(pos), kcfg))
+    n_steps = pos.shape[1]
+    sizes = {"ent": graph.n_entities, "rel": graph.n_relations}
+    params = kgm.init_params(jax.random.PRNGKey(0), kcfg)
+    dense = sparse = touched = 0
+    for name, table in params.items():
+        role = kgm.roles[name]
+        n_rows, k = sizes[role], table.shape[1]
+        cap = merge_lib.touched_capacity(n_rows, batch, n_steps, 1, role)
+        n_touched = sum(
+            len(np.unique(np.concatenate(
+                [np.asarray(a).ravel() for a in
+                 ([pos[w, :, :, 0], pos[w, :, :, 2],
+                   neg[w, :, :, 0], neg[w, :, :, 2]] if role == "ent"
+                  else [pos[w, :, :, 1], neg[w, :, :, 1]])])))
+            for w in range(WORKERS))
+        dense += WORKERS * n_rows * (k + 2) * 4
+        sparse += WORKERS * cap * (k + 3) * 4
+        touched += n_touched * (k + 3) * 4
+    return dense, sparse, touched
+
+
+def _ingest_row(verbose: bool) -> dict:
+    """Streamed-loader throughput on a generated TSV + fingerprint
+    cross-check against the in-RAM reference loader."""
+    tri = random_kg(20_000, INGEST_LINES, seed=3).train
+    with tempfile.TemporaryDirectory() as d:
+        datasets.write_tsv(os.path.join(d, "train.txt"), tri)
+        t0 = time.perf_counter()
+        kg1 = datasets.load_dataset(d)
+        dt = time.perf_counter() - t0
+        fp_ok = kg1.fingerprint() == kg_lib.load_tsv_dir(d).fingerprint()
+    row = {
+        "task": "ingest",
+        "n_lines": INGEST_LINES,
+        "fingerprint_matches_reference": bool(fp_ok),
+        "load_lines_per_s": round(INGEST_LINES / dt, 1),
+    }
+    if verbose:
+        print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+    return row
+
+
+def _roundtrip_row(model_name: str, verbose: bool) -> dict:
+    """fit -> evaluate through the public API at ROUNDTRIP_N entities with
+    the sparse transport (dense at this size: the task=train row)."""
+    n_triplets, batch, _ = SIZES[ROUNDTRIP_N]
+    graph = random_kg(ROUNDTRIP_N, n_triplets, n_eval=ROUNDTRIP_EVAL,
+                      seed=5)
+    t0 = time.perf_counter()
+    res = kg_api.fit(graph, model=model_name, paradigm="sgd",
+                     n_workers=WORKERS, backend="vmap", batch_size=batch,
+                     dim=DIM, learning_rate=0.05, strategy=STRATEGY,
+                     pipeline="device", merge_transport="sparse", epochs=1,
+                     seed=0)
+    fit_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    metrics = kg_api.evaluate(res.params, model_name, graph,
+                              engine="device", n_workers=WORKERS)
+    eval_s = time.perf_counter() - t0
+    n_queries = 2 * len(graph.test)        # head + tail entity inference
+    row = {
+        "task": "roundtrip",
+        "model": model_name,
+        "transport": "sparse",
+        "workers": WORKERS,
+        "n_entities": ROUNDTRIP_N,
+        "n_triplets": n_triplets,
+        "eval_triples": len(graph.test),
+        "fit_epochs_per_s": round(1.0 / fit_s, 4),
+        "eval_queries_per_s": round(n_queries / eval_s, 2),
+        "test_mean_rank": float(
+            metrics["entity_filtered"]["mean_rank"]),
+    }
+    if verbose:
+        print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+    return row
+
+
+def run(verbose: bool = True, model: str = "transe", quick: bool = False):
+    """``quick=True`` is the CI bench-regression cell: the 50k-entity
+    train row + the ingest row, measured exactly as the committed
+    full-sweep baseline measures them (same epochs/batch per size), so
+    the shared rows stay comparable."""
+    rows = []
+    sizes = QUICK_SIZES if quick else tuple(SIZES)
+    for n_entities in sizes:
+        n_triplets, batch, epochs = SIZES[n_entities]
+        graph = random_kg(n_entities, n_triplets, seed=1)
+        dense_b, sparse_b, touched_b = _wire_bytes(graph, model, batch)
+        per = {
+            t: _epochs_per_sec(graph, model, t, batch, epochs,
+                               repeats=2 if n_entities >= 1_000_000
+                               else REPEATS)
+            for t in ("dense", "sparse")
+        }
+        row = {
+            "task": "train",
+            "model": model,
+            "paradigm": "sgd",
+            "strategy": STRATEGY,
+            "workers": WORKERS,
+            "n_entities": n_entities,
+            "n_triplets": n_triplets,
+            "batch": batch,
+            "epochs": epochs,
+            "dense_epochs_per_s": round(per["dense"], 3),
+            "sparse_epochs_per_s": round(per["sparse"], 3),
+            "sparse_speedup": round(per["sparse"] / per["dense"], 2),
+            "dense_merge_bytes": dense_b,
+            "sparse_merge_bytes": sparse_b,
+            "touched_merge_bytes": touched_b,
+        }
+        rows.append(row)
+        if verbose:
+            print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+    rows.append(_ingest_row(verbose))
+    if not quick:
+        rows.append(_roundtrip_row(model, verbose))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

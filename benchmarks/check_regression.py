@@ -17,6 +17,9 @@ band:
   * recompiles (``*_recompiles``): fresh <= baseline  (the serving
     tier's committed baseline is 0 — any steady-state recompile is a
     bucketing bug, not noise, so no band applies)
+  * wire bytes (``*_bytes``):      fresh <= baseline  (the scale bench's
+    merge payload sizes are deterministic functions of the transport's
+    capacity formula — growing them is a transport regression, not noise)
 
 Rows only one side has (e.g. the cells a ``--quick`` run skips) are
 ignored, so the CI quick profile compares exactly the cells it reran.
@@ -35,11 +38,12 @@ import os
 import sys
 
 DEFAULT_NAMES = ("BENCH_pipeline.json", "BENCH_eval.json",
-                 "BENCH_serve.json", "BENCH_latency.json")
+                 "BENCH_serve.json", "BENCH_latency.json",
+                 "BENCH_scale.json")
 RATE_SUFFIX = "_per_s"
 # measured (non-identity) fields: gated bands or recorded-only
 MEASURED_SUFFIXES = (RATE_SUFFIX, "_speedup", "_ms", "_rate",
-                     "_recompiles")
+                     "_recompiles", "_bytes", "_rank")
 MEASURED_FIELDS = frozenset({"mean_batch"})
 
 
@@ -83,7 +87,7 @@ def compare(baseline: dict, fresh: dict, tolerance: float,
                 ceil = base_val * (1.0 + latency_tolerance)
                 if fresh_val > ceil:
                     bad = f"{fresh_val} > {ceil:.2f}"
-            elif field.endswith("_recompiles"):
+            elif field.endswith(("_recompiles", "_bytes")):
                 if fresh_val > base_val:
                     bad = f"{fresh_val} > {base_val}"
             if bad is not None:

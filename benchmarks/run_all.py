@@ -13,7 +13,11 @@ serve bench (batched KnowledgeBase top-k queries/sec vs a per-query host
 loop, W in {1,2,4} -> ``BENCH_serve.json``), and the latency bench
 (open-loop Poisson traffic through the continuous-batching ``KGServer``:
 p50/p99 latency, sustained QPS, capacity, steady-state recompiles per
-batching config -> ``BENCH_latency.json``).
+batching config -> ``BENCH_latency.json``), and the scale bench (sparse
+vs dense Reduce transport epochs/sec + merge wire bytes vs graph size up
+to 1e6 entities, TSV ingest throughput, large-graph fit->evaluate round
+trip -> ``BENCH_scale.json``; ``--quick`` keeps the 50k-entity cell +
+ingest row).
 
 ``--quick`` is the CI bench-regression profile: the W in {1, 4}
 cross-section of the grids (and single-repeat trace overhead) — the
@@ -60,6 +64,7 @@ def main() -> None:
     ap.add_argument("--trace-out", default="BENCH_trace.json")
     ap.add_argument("--serve-out", default="BENCH_serve.json")
     ap.add_argument("--latency-out", default="BENCH_latency.json")
+    ap.add_argument("--scale-out", default="BENCH_scale.json")
     ap.add_argument("--out-dir", default=".",
                     help="directory the BENCH_*.json files are written to")
     ap.add_argument("--quick", action="store_true",
@@ -71,7 +76,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_eval, bench_latency, bench_pipeline,
-                            bench_serve, bench_trace)
+                            bench_scale, bench_serve, bench_trace)
 
     os.makedirs(args.out_dir, exist_ok=True)
 
@@ -175,6 +180,27 @@ def main() -> None:
         },
         "rows": latency_rows,
     }, path(args.latency_out))
+
+    print("== bench:scale ==", flush=True)
+    t0 = time.time()
+    scale_rows = bench_scale.run(verbose=True, model=args.model,
+                                 quick=args.quick)
+    print(f"== bench:scale done ({time.time() - t0:.0f}s) ==", flush=True)
+    _write({
+        "bench": "scale",
+        **_env(),
+        "config": {
+            "dim": bench_scale.DIM,
+            "workers": bench_scale.WORKERS,
+            "strategy": bench_scale.STRATEGY,
+            "sizes": {str(n): list(v)
+                      for n, v in bench_scale.SIZES.items()},
+            "repeats": bench_scale.REPEATS,
+            "ingest_lines": bench_scale.INGEST_LINES,
+            "graph": "random_kg (uniform int32 triples)",
+        },
+        "rows": scale_rows,
+    }, path(args.scale_out))
 
     if args.full:
         from benchmarks import run as run_mod

@@ -80,7 +80,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Callable, Optional
 
 import jax
@@ -94,7 +93,8 @@ from repro.core import models as kg_models
 from repro.core import trace as trace_lib
 from repro.core.models.base import EpochStats, KGConfig, KGModel, Params, apply_gradients
 from repro.data import kg as kg_lib
-from repro.parallel.util import shard_map as _shard_map
+from repro.parallel.util import all_gather_deltas, shard_map as _shard_map
+from repro.util import warn_fresh
 
 
 @dataclasses.dataclass(frozen=True)
@@ -181,7 +181,9 @@ def resume_config(tcfg: KGConfig, cfg: MapReduceConfig) -> dict:
     schedule, paradigm/pipeline/strategy, and the scalar hyperparameters.
     ``backend`` is deliberately absent (vmap and shard_map are proved
     equivalent, so resuming a vmap checkpoint on a real mesh is fine), as
-    is ``block_epochs`` (block-size invariance)."""
+    are ``block_epochs`` (block-size invariance) and ``merge_transport``
+    (the sparse transport is bit-identical to dense, so a dense-trained
+    checkpoint resumes under sparse transport and vice versa)."""
     return {
         "paradigm": cfg.paradigm,
         "pipeline": cfg.pipeline,
@@ -242,6 +244,13 @@ class MapReduceConfig:
     paradigm: str = "sgd"           # 'sgd' | 'bgd'
     strategy: str = "average"       # merge_lib.STRATEGIES (sgd paradigm only)
     reduce_impl: str = "psum"       # 'psum' | 'allgather' (shard_map backend)
+    # Reduce wire format: 'dense' exchanges whole tables (the reference);
+    # 'sparse' exchanges only rows the round's touch stats mark updated, as
+    # statically-sized padded delta buffers — bit-identical results (see
+    # the transport contract in core/merge.py).  Under shard_map, sparse
+    # transport supersedes reduce_impl (the packed buffers are all-gathered;
+    # there is nothing to psum).
+    merge_transport: str = "dense"  # 'dense' | 'sparse'
     backend: str = "vmap"           # 'vmap' | 'shard_map'
     batch_size: int = 256
     partition: str = "balanced"     # 'balanced' | 'stratified'
@@ -263,6 +272,8 @@ class MapReduceConfig:
             raise ValueError(f"bad paradigm {self.paradigm!r}")
         if self.paradigm == "sgd" and self.strategy not in merge_lib.STRATEGIES:
             raise ValueError(f"bad strategy {self.strategy!r}")
+        if self.merge_transport not in ("dense", "sparse"):
+            raise ValueError(f"bad merge_transport {self.merge_transport!r}")
         if self.backend not in ("vmap", "shard_map"):
             raise ValueError(f"bad backend {self.backend!r}")
         if self.pipeline not in ("host", "device"):
@@ -317,6 +328,95 @@ def _merge_tables_stacked(
     return out
 
 
+def _virgin_repeats(tcfg: KGConfig, n_steps: int, k_epochs: int) -> int:
+    """How many times a row *no* step touched has been through the model's
+    constraint projection by Reduce time: once per epoch start
+    (``normalize='epoch'``), once per step (``'step'``), never
+    (``'none'``)."""
+    if tcfg.normalize == "epoch":
+        return k_epochs
+    if tcfg.normalize == "step":
+        return k_epochs * n_steps
+    return 0
+
+
+def _merge_tables_sparse_stacked(
+    model: KGModel,
+    strategy: str,
+    stacked: Params,
+    stats,
+    merge_key: jax.Array,
+    base: Params,                # the shared round-input params
+    tcfg: KGConfig,
+    batch_size: int,
+    n_steps: int,
+    k_epochs: int,
+) -> Params:
+    """Sparse-transport Reduce of the stacked params: pack each worker's
+    touched rows into static-capacity delta buffers, merge only the union
+    candidate rows, scatter into the evolved base table — bit-identical to
+    :func:`_merge_tables_stacked` (same sorted-name order and per-table
+    fold-out keys)."""
+    roles = model.param_roles()
+    names = sorted(stacked.keys())
+    keys = jax.random.split(merge_key, len(names))
+    m = _virgin_repeats(tcfg, n_steps, k_epochs)
+    out = {}
+    for name, key in zip(names, keys):
+        count, loss = _stats_for_role(stats, roles[name])
+        n_rows = stacked[name].shape[1]
+        cap = merge_lib.touched_capacity(
+            n_rows, batch_size, n_steps, k_epochs, roles[name])
+        pack = functools.partial(
+            merge_lib.pack_delta, capacity=cap, n_rows=n_rows)
+        idx, vals, cnt, lss = jax.vmap(pack)(stacked[name], count, loss)
+        out[name] = merge_lib.merge_sparse_stacked(
+            strategy, idx, vals, cnt, lss, stats.mean_loss,
+            stacked[name][0], base[name],
+            functools.partial(model.normalize_rows, name), m, key)
+    return out
+
+
+def _merge_tables_sparse_collective(
+    model: KGModel,
+    cfg: MapReduceConfig,
+    local: Params,
+    stats,
+    worker_loss: jax.Array,      # scalar, this worker's round loss
+    merge_key: jax.Array,
+    base: Params,                # the shared round-input params
+    tcfg: KGConfig,
+    n_steps: int,
+    k_epochs: int,
+) -> Params:
+    """Sparse-transport Reduce inside shard_map: all-gather each table's
+    packed delta buffers — the transport's only cross-worker traffic,
+    O(W·C·k) wire bytes instead of whole tables — then replay the stacked
+    sparse merge on every worker.  The replayed math is *identical* to the
+    vmap backend's, so the two backends agree bitwise under sparse
+    transport (the dense psum path agrees only to tolerance).
+    ``cfg.reduce_impl`` is ignored: there is nothing to psum.  Must run
+    inside shard_map over ``cfg.axis_name``."""
+    roles = model.param_roles()
+    names = sorted(local.keys())
+    keys = jax.random.split(merge_key, len(names))
+    m = _virgin_repeats(tcfg, n_steps, k_epochs)
+    wl = jax.lax.all_gather(worker_loss, cfg.axis_name)          # (W,)
+    out = {}
+    for name, key in zip(names, keys):
+        count, loss = _stats_for_role(stats, roles[name])
+        n_rows = local[name].shape[0]
+        cap = merge_lib.touched_capacity(
+            n_rows, cfg.batch_size, n_steps, k_epochs, roles[name])
+        packed = merge_lib.pack_delta(local[name], count, loss, cap, n_rows)
+        idx, vals, cnt, lss = all_gather_deltas(packed, cfg.axis_name)
+        out[name] = merge_lib.merge_sparse_stacked(
+            cfg.strategy, idx, vals, cnt, lss, wl,
+            local[name], base[name],
+            functools.partial(model.normalize_rows, name), m, key)
+    return out
+
+
 def sgd_epoch_vmap(
     params: Params,
     pos: jax.Array,              # (W, S, B, 3)
@@ -328,9 +428,17 @@ def sgd_epoch_vmap(
 ) -> tuple[Params, jax.Array]:
     """Map (vmapped local epochs from shared params) + Reduce (stacked)."""
     model = _resolve(cfg, model)
-    run = functools.partial(model.run_epoch, cfg=tcfg)
+    run = functools.partial(
+        model.run_epoch, cfg=tcfg,
+        sparse_apply=cfg.merge_transport == "sparse")
     stacked, stats = jax.vmap(run, in_axes=(None, 0, 0))(params, pos, neg)
-    merged = _merge_tables_stacked(model, cfg.strategy, stacked, stats, merge_key)
+    if cfg.merge_transport == "sparse":
+        merged = _merge_tables_sparse_stacked(
+            model, cfg.strategy, stacked, stats, merge_key, params, tcfg,
+            cfg.batch_size, pos.shape[1], 1)
+    else:
+        merged = _merge_tables_stacked(
+            model, cfg.strategy, stacked, stats, merge_key)
     return merged, jnp.mean(stats.mean_loss)
 
 
@@ -379,9 +487,16 @@ def sgd_epoch_shard(
 
     def worker(params, pos_w, neg_w):
         # pos_w: (1, S, B, 3) — this shard's subset
-        local, stats = model.run_epoch(params, pos_w[0], neg_w[0], tcfg)
-        out = _merge_tables_collective(
-            model, cfg, local, stats, stats.mean_loss, merge_key)
+        local, stats = model.run_epoch(
+            params, pos_w[0], neg_w[0], tcfg,
+            sparse_apply=cfg.merge_transport == "sparse")
+        if cfg.merge_transport == "sparse":
+            out = _merge_tables_sparse_collective(
+                model, cfg, local, stats, stats.mean_loss, merge_key,
+                params, tcfg, pos_w.shape[1], 1)
+        else:
+            out = _merge_tables_collective(
+                model, cfg, local, stats, stats.mean_loss, merge_key)
         loss = jax.lax.pmean(stats.mean_loss, ax)
         return out, loss
 
@@ -398,6 +513,75 @@ def sgd_epoch_shard(
 # ---------------------------------------------------------------------------
 # BGD paradigm
 # ---------------------------------------------------------------------------
+
+def _bgd_candidate_ids(pos_b: jax.Array, neg_b: jax.Array, role: str,
+                       n_rows: int) -> jax.Array:
+    """Static-size sorted union of the rows one BGD step can reference:
+    positive + corrupted heads and tails (entity-role tables) or the batch
+    relations (relation-role tables), padded with ``n_rows``.  Works on a
+    stacked ``(W, B, 3)`` batch (vmap) or one shard's ``(B, 3)``."""
+    if role == "ent":
+        ids = jnp.concatenate(
+            [pos_b[..., 0], pos_b[..., 2], neg_b[..., 0], neg_b[..., 2]],
+            axis=-1)
+    else:
+        ids = jnp.concatenate([pos_b[..., 1], neg_b[..., 1]], axis=-1)
+    flat = ids.reshape(-1)
+    size = int(min(n_rows, flat.shape[0])) + 1
+    return jnp.unique(flat, size=size, fill_value=n_rows)
+
+
+def _bgd_sparse_update_stacked(
+    model: KGModel, tcfg: KGConfig, params: Params, grads: Params,
+    pos_b: jax.Array, neg_b: jax.Array,
+) -> Params:
+    """Sparse BGD Reduce (vmap backend): autodiff gradients are *exactly*
+    zero at rows a batch never references, so restricting the gradient
+    mean + update to the batches' candidate rows is bit-identical to the
+    dense update (``p - lr·0 == p``, sign of zero included — scatter-add
+    grads are ``+0.0`` at unreferenced rows)."""
+    roles = model.param_roles()
+    out = {}
+    for name in params:
+        n_rows = params[name].shape[0]
+        cand = _bgd_candidate_ids(pos_b, neg_b, roles[name], n_rows)
+        gc = jnp.mean(
+            jnp.take(grads[name], cand, axis=1, mode="fill", fill_value=0.0),
+            axis=0)
+        pc = jnp.take(params[name], cand, axis=0, mode="fill", fill_value=0.0)
+        out[name] = params[name].at[cand].set(
+            pc - tcfg.learning_rate * gc, mode="drop")
+    return out
+
+
+def _bgd_sparse_update_collective(
+    model: KGModel, cfg: MapReduceConfig, tcfg: KGConfig, params: Params,
+    grads: Params, pos_b: jax.Array, neg_b: jax.Array,
+) -> Params:
+    """Sparse BGD Reduce (shard_map): each worker packs its gradient rows
+    at its own batch's candidate ids, all-gathers the packed buffers
+    (O(W·C·k) wire bytes instead of a whole-table pmean), and replays the
+    stacked mean + update — bitwise equal to the vmap backend (the dense
+    pmean path agrees only to tolerance).  Must run inside shard_map."""
+    roles = model.param_roles()
+    ax = cfg.axis_name
+    out = {}
+    for name in params:
+        n_rows = params[name].shape[0]
+        own = _bgd_candidate_ids(pos_b, neg_b, roles[name], n_rows)
+        gvals = jnp.take(grads[name], own, axis=0, mode="fill", fill_value=0.0)
+        idx, vals = all_gather_deltas((own, gvals), ax)
+        cand = merge_lib.sparse_candidates(idx, n_rows)
+        zero = jnp.zeros((cand.shape[0], vals.shape[-1]), vals.dtype)
+        svals = jax.vmap(
+            merge_lib.lookup_rows, in_axes=(0, 0, None, None, None)
+        )(idx, vals, cand, zero, n_rows)
+        gc = jnp.mean(svals, axis=0)
+        pc = jnp.take(params[name], cand, axis=0, mode="fill", fill_value=0.0)
+        out[name] = params[name].at[cand].set(
+            pc - tcfg.learning_rate * gc, mode="drop")
+    return out
+
 
 def bgd_epoch_vmap(
     params: Params,
@@ -423,8 +607,12 @@ def bgd_epoch_vmap(
         losses, grads = jax.vmap(
             lambda p, n: model.batch_gradients(params, p, n, tcfg)
         )(pos_b, neg_b)
-        grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
-        params = apply_gradients(params, grads, tcfg.learning_rate)
+        if cfg.merge_transport == "sparse":
+            params = _bgd_sparse_update_stacked(
+                model, tcfg, params, grads, pos_b, neg_b)
+        else:
+            grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+            params = apply_gradients(params, grads, tcfg.learning_rate)
         if tcfg.normalize == "step":
             params = model.normalize(params)
         return (params, loss_sum + jnp.mean(losses)), None
@@ -455,11 +643,19 @@ def _bgd_epoch_collective(
         params, loss_sum = carry
         pos_b, neg_b = batch
         loss, grads = model.batch_gradients(params, pos_b, neg_b, tcfg)
-        grads = jax.lax.pmean(grads, ax)              # the BGD Reduce
-        params = apply_gradients(params, grads, tcfg.learning_rate)
+        if cfg.merge_transport == "sparse":
+            params = _bgd_sparse_update_collective(
+                model, cfg, tcfg, params, grads, pos_b, neg_b)
+            # mean of all-gathered losses: bitwise the vmap backend's loss
+            # (pmean agrees only to tolerance)
+            loss_red = jnp.mean(jax.lax.all_gather(loss, ax))
+        else:
+            grads = jax.lax.pmean(grads, ax)          # the BGD Reduce
+            params = apply_gradients(params, grads, tcfg.learning_rate)
+            loss_red = jax.lax.pmean(loss, ax)
         if tcfg.normalize == "step":
             params = model.normalize(params)
-        return (params, loss_sum + jax.lax.pmean(loss, ax)), None
+        return (params, loss_sum + loss_red), None
 
     (params, loss_sum), _ = jax.lax.scan(
         step, (params, jnp.zeros((), tcfg.dtype)), (pos, neg)
@@ -574,7 +770,9 @@ def make_block_fn(
     n_w = partitioned.shape[1]
     ax = cfg.axis_name
     k_data, k_neg, k_merge, k_part = _device_keys(seed)
-    run = functools.partial(model.run_epoch, cfg=tcfg)
+    run = functools.partial(
+        model.run_epoch, cfg=tcfg,
+        sparse_apply=cfg.merge_transport == "sparse")
 
     def block_part(epoch_ids: jax.Array) -> jax.Array:
         """The (W, N_w, 3) partition in effect for this whole block (vmap
@@ -635,6 +833,8 @@ def make_block_fn(
         part = block_part(epoch_ids)
 
         def round_body(stacked, eids):           # eids: (K,) one merge round
+            base = jax.tree.map(lambda x: x[0], stacked)  # shared round input
+
             def local_epoch(carry, e):
                 stacked, acc = carry
                 pos, neg = epoch_data(e, part)
@@ -645,9 +845,14 @@ def make_block_fn(
             (stacked, acc), losses = jax.lax.scan(
                 local_epoch, (stacked, _zero_stats(tcfg, (W,))), eids)
             acc = dataclasses.replace(acc, mean_loss=acc.mean_loss / K)
-            merged = _merge_tables_stacked(
-                model, cfg.strategy, stacked, acc,
-                jax.random.fold_in(k_merge, eids[-1]))
+            mk = jax.random.fold_in(k_merge, eids[-1])
+            if cfg.merge_transport == "sparse":
+                merged = _merge_tables_sparse_stacked(
+                    model, cfg.strategy, stacked, acc, mk, base, tcfg,
+                    B, n_w // B, K)
+            else:
+                merged = _merge_tables_stacked(
+                    model, cfg.strategy, stacked, acc, mk)
             return _broadcast(merged), losses
 
         stacked, losses = jax.lax.scan(
@@ -670,19 +875,27 @@ def make_block_fn(
             w = jax.lax.axis_index(ax)
             part_w = worker_block_part(epoch_ids, w, part_w[0])
 
-            def round_body(local, eids):
+            def round_body(base, eids):
+                # the carry is the shared merged params — the round input
                 def local_epoch(carry, e):
                     local, acc = carry
                     pos, neg = worker_epoch_data(e, w, part_w)
-                    local, stats = model.run_epoch(local, pos, neg, tcfg)
+                    local, stats = model.run_epoch(
+                        local, pos, neg, tcfg,
+                        sparse_apply=cfg.merge_transport == "sparse")
                     acc = jax.tree.map(jnp.add, acc, stats)
                     return (local, acc), jax.lax.pmean(stats.mean_loss, ax)
 
                 (local, acc), losses = jax.lax.scan(
-                    local_epoch, (local, _zero_stats(tcfg)), eids)
-                out = _merge_tables_collective(
-                    model, cfg, local, acc, acc.mean_loss / K,
-                    jax.random.fold_in(k_merge, eids[-1]))
+                    local_epoch, (base, _zero_stats(tcfg)), eids)
+                mk = jax.random.fold_in(k_merge, eids[-1])
+                if cfg.merge_transport == "sparse":
+                    out = _merge_tables_sparse_collective(
+                        model, cfg, local, acc, acc.mean_loss / K, mk,
+                        base, tcfg, n_w // B, K)
+                else:
+                    out = _merge_tables_collective(
+                        model, cfg, local, acc, acc.mean_loss / K, mk)
                 return out, losses
 
             params, losses = jax.lax.scan(
@@ -905,7 +1118,10 @@ def train(
             f"{n_w} to use every triplet every epoch.")
         if cfg.strict_batching:
             raise ValueError(msg)
-        warnings.warn(msg, stacklevel=2)
+        # warn_fresh, not warnings.warn: the process-wide warning registry
+        # would swallow the report for every later fit() in this process,
+        # even though each run drops its own counts
+        warn_fresh(msg, stacklevel=2)
 
     head_prob = None
     if tcfg.sampling == "bern":

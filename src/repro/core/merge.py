@@ -26,6 +26,48 @@ Two execution paths with identical semantics:
 A "table" here is one embedding matrix ``(N, k)`` with its per-key stats
 ``count (N,)`` / ``loss (N,)``; callers apply the merge per table ('ent',
 'rel').
+
+Transport contract (``MapReduceConfig.merge_transport``)
+--------------------------------------------------------
+
+Both execution paths above ship *whole tables* per Reduce — O(W·N·k)
+(all_gather) or O(N·k) (psum) wire bytes per table regardless of how few
+rows the round actually updated.  The **sparse** transport replaces the
+exchanged payload with compact per-worker *delta buffers* while producing
+bit-identical merged tables:
+
+  * **pack** (:func:`pack_delta`): each worker gathers the rows its touch
+    stats mark updated (``count > 0``) into ``(C, k)`` value / ``(C,)``
+    count / loss buffers plus a sorted ``(C,)`` row-id vector.
+  * **capacity / padding rule** (:func:`touched_capacity`): ``C`` is a
+    *static* upper bound on touched rows per round —
+    ``min(n_rows, f · batch_size · steps_per_epoch · merge_every)`` with
+    ``f = 4`` for entity-role tables (positive + corrupted heads and
+    tails) and ``f = 1`` for relation-role tables (corruption preserves
+    the relation) — so the device pipeline's ``lax.scan`` block compiles
+    once; unused slots are padded with the out-of-range row id ``n_rows``
+    (values 0, dropped by every consumer via ``mode="fill"`` gathers and
+    ``mode="drop"`` scatters).
+  * **merge** (:func:`merge_sparse_stacked`): the union of all workers'
+    touched ids (:func:`sparse_candidates`) is the only row set merged.
+    Per worker, a candidate row it did not touch is reconstructed as the
+    *virgin* value — ``m`` chained applications of the model's row-local
+    ``normalize_rows`` to the round-input row, ``m`` = merged epochs
+    (``normalize="epoch"``), merged steps (``"step"``) or 0 — which is
+    exactly what that worker's dense copy holds there.  Every strategy
+    then runs the dense per-row math on the ``(W, U, k)`` candidate
+    slices (all dense reductions here are per-row, so slicing is
+    bit-exact), and the result is scattered into the evolved base table.
+    Rows no worker touched keep the base value (selection strategies) or
+    the dense plain-mean-of-identical-copies (averaging strategies, which
+    only differs from the copy itself when W is not a power of two — see
+    :func:`sparse_untouched_base`).
+
+The sparse transport is *bit-identical* to the dense stacked/allgather
+numerics for every strategy; under ``shard_map`` it all-gathers the packed
+buffers (O(W·C·k) wire bytes) and replays the same stacked math, so vmap
+and shard_map agree bitwise (a strengthening of the dense psum path's
+tolerance-level agreement).  Dense remains the default and the reference.
 """
 from __future__ import annotations
 
@@ -232,3 +274,208 @@ def merge_allgather(
     losses = jax.lax.all_gather(loss, axis)
     wl = jax.lax.all_gather(worker_loss, axis)                   # (W,)
     return merge_stacked(strategy, stacked, counts, losses, wl, key)
+
+
+# ---------------------------------------------------------------------------
+# Sparse delta transport (merge_transport="sparse") — see module docstring
+# ---------------------------------------------------------------------------
+
+def touched_capacity(
+    n_rows: int, batch_size: int, steps_per_epoch: int, merge_every: int,
+    role: str,
+) -> int:
+    """Static per-worker delta-buffer capacity for one Reduce round.
+
+    One SGD step touches at most ``4 * batch_size`` entity rows (positive +
+    corrupted heads and tails) and ``batch_size`` relation rows (corruption
+    keeps the relation), so ``f·B·S·K`` bounds a round of ``K`` local
+    epochs of ``S`` steps; never more than the table itself."""
+    per_step = (4 if role == "ent" else 1) * batch_size
+    return int(min(n_rows, per_step * steps_per_epoch * merge_every))
+
+
+def pack_delta(
+    table: jax.Array, count: jax.Array, loss: jax.Array,
+    capacity: int, n_rows: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One worker's padded delta buffer: the rows its touch stats mark
+    updated.  Returns ``(idx, vals, cnt, lss)`` with ``idx`` the sorted
+    ``(capacity,)`` touched row ids padded with ``n_rows`` and the others
+    the corresponding ``(capacity, k)`` / ``(capacity,)`` gathers
+    (zero-filled at pads).
+
+    The compaction is a cumsum + scatter rather than ``jnp.nonzero(...,
+    size=capacity)``: the batched (vmapped-over-workers) lowering of
+    sized nonzero sorts all ``n_rows`` elements per worker, which at 1e6
+    rows costs more than the entire dense merge; cumsum + drop-scatter is
+    a linear pass and produces the identical sorted-ascending id vector.
+    """
+    mask = count > 0
+    slot = jnp.where(mask, jnp.cumsum(mask) - 1, capacity)
+    idx = jnp.full((capacity,), n_rows, slot.dtype).at[slot].set(
+        jnp.arange(n_rows, dtype=slot.dtype), mode="drop")
+    vals = jnp.take(table, idx, axis=0, mode="fill", fill_value=0.0)
+    cnt = jnp.take(count, idx, mode="fill", fill_value=0.0)
+    lss = jnp.take(loss, idx, mode="fill", fill_value=0.0)
+    return idx, vals, cnt, lss
+
+
+def sparse_candidates(idx: jax.Array, n_rows: int) -> jax.Array:
+    """Union of every worker's touched row ids: ``idx`` is the stacked
+    ``(W, C)`` id vectors; returns a sorted unique id vector of static size
+    ``min(n_rows, W·C) + 1`` padded with ``n_rows`` (the +1 slot absorbs
+    the pad id itself whenever any buffer is underfull)."""
+    W, C = idx.shape
+    size = int(min(n_rows, W * C)) + 1
+    return jnp.unique(idx.reshape(-1), size=size, fill_value=n_rows)
+
+
+def lookup_rows(
+    idx: jax.Array, vals: jax.Array, cand: jax.Array, virgin: jax.Array,
+    n_rows: int,
+) -> jax.Array:
+    """Reconstruct one worker's rows at the candidate ids: its packed value
+    where ``cand`` appears in the (sorted) ``idx``, the shared ``virgin``
+    row otherwise."""
+    C = idx.shape[0]
+    pos = jnp.clip(jnp.searchsorted(idx, cand), 0, C - 1)
+    found = (idx[pos] == cand) & (cand < n_rows)
+    return jnp.where(found[:, None], vals[pos], virgin)
+
+
+def lookup_delta(
+    idx: jax.Array, vals: jax.Array, cnt: jax.Array, lss: jax.Array,
+    cand: jax.Array, virgin: jax.Array, n_rows: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Reconstruct one worker's table slice + touch stats at the candidate
+    rows: packed values where the worker touched the row, the shared
+    ``virgin`` value (and zero count/loss, matching the dense stats) where
+    it did not.  ``idx`` must be sorted, as :func:`pack_delta` emits."""
+    C = idx.shape[0]
+    pos = jnp.clip(jnp.searchsorted(idx, cand), 0, C - 1)
+    found = (idx[pos] == cand) & (cand < n_rows)
+    val = jnp.where(found[:, None], vals[pos], virgin)
+    c = jnp.where(found, cnt[pos], 0.0)
+    l = jnp.where(found, lss[pos], 0.0)
+    return val, c, l
+
+
+def virgin_rows(rows, normalize_row_fn, repeats: int):
+    """The value every worker's copy of an *untouched* row holds at Reduce
+    time: ``repeats`` chained applications of the model's row-local
+    constraint projection to the round-input row (repeats = epochs merged
+    for ``normalize="epoch"``, steps merged for ``"step"``, 0 for
+    ``"none"``).
+
+    Chained applications run through ``fori_loop``, never unrolled: in the
+    dense path each projection lives in its own scan iteration, and
+    unrolling here lets XLA fuse consecutive projections into one kernel
+    whose rounding drifts from the dense path by an ulp — the loop
+    boundary pins each application to the standalone rounding."""
+    if repeats == 0:
+        return rows
+    if repeats == 1:
+        return normalize_row_fn(rows)
+    return jax.lax.fori_loop(0, repeats, lambda _, r: normalize_row_fn(r), rows)
+
+
+def sparse_untouched_base(strategy: str, local: jax.Array, W: int) -> jax.Array:
+    """Merged value of rows *no* worker touched, from one worker's local
+    copy (all copies agree there).  Selection strategies return one of the
+    identical copies — the copy itself, exactly.  The averaging strategies
+    compute the plain mean over W identical copies, which is bit-identical
+    to the copy only when W is a power of two; otherwise replay the dense
+    reduction on a broadcast so the float rounding matches the dense path
+    exactly.  The barrier keeps XLA's algebraic simplifier from collapsing
+    the reduce-of-broadcast into ``x * W / W`` inside a fused program —
+    that rewrite rounds 1 ulp away from the dense path's genuine W-way
+    sum on rare values."""
+    if strategy not in ("average", "average_all") or (W & (W - 1)) == 0:
+        return local
+    stacked = jax.lax.optimization_barrier(
+        jnp.broadcast_to(local, (W,) + local.shape))
+    return jnp.mean(stacked, axis=0)
+
+
+def merge_candidates(
+    strategy: str,
+    cand: jax.Array,          # (U,) sorted candidate row ids, padded n_rows
+    svals: jax.Array,         # (W, U, k) reconstructed rows per worker
+    scnt: jax.Array,          # (W, U)
+    sloss: jax.Array,         # (W, U)
+    worker_loss: jax.Array,   # (W,)
+    n_rows: int,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """:func:`merge_stacked` restricted to the candidate rows.  Every dense
+    reduction is per-row (sums/argmax over the worker axis), so running it
+    on the ``(W, U, k)`` slices is bit-identical to slicing the dense
+    output.  'random' still draws its full ``(W, n_rows)`` priority matrix
+    (RNG output depends on shape) and gathers the candidate columns."""
+    if strategy == "average":
+        w = scnt[..., None]
+        total = jnp.sum(w, axis=0)
+        weighted = jnp.sum(svals * w, axis=0)
+        # real candidates always have total > 0; the plain-mean branch is
+        # only reachable at pad rows, whose output is dropped.
+        return jnp.where(
+            total > 0, weighted / jnp.maximum(total, 1.0), jnp.mean(svals, axis=0)
+        )
+    if strategy == "average_all":
+        return jnp.mean(svals, axis=0)
+    if strategy == "random":
+        if key is None:
+            raise ValueError("'random' strategy needs a PRNG key")
+        W = svals.shape[0]
+        u_full = _random_priorities(key, W, n_rows)              # (W, n_rows)
+        u = jnp.take(u_full, cand, axis=1, mode="fill", fill_value=0.0)
+        priority = jnp.where(scnt > 0, u, -_BIG)
+        any_touch = jnp.any(scnt > 0, axis=0)
+        priority = jnp.where(any_touch[None, :], priority, u)
+        return _select_by_priority_stacked(svals, priority)
+    if strategy == "miniloss_perkey":
+        mean_loss = jnp.where(scnt > 0, sloss / jnp.maximum(scnt, 1.0), _BIG)
+        return _select_by_priority_stacked(svals, -mean_loss)
+    if strategy == "miniloss_global":
+        return svals[jnp.argmin(worker_loss)]
+    raise ValueError(f"unknown strategy {strategy!r}; want one of {STRATEGIES}")
+
+
+def apply_delta(base: jax.Array, cand: jax.Array, rows: jax.Array) -> jax.Array:
+    """Scatter merged candidate rows into the evolved base table; pad
+    candidates (id == n_rows, out of range) drop out."""
+    return base.at[cand].set(rows, mode="drop")
+
+
+def merge_sparse_stacked(
+    strategy: str,
+    idx: jax.Array,           # (W, C) packed row ids
+    vals: jax.Array,          # (W, C, k)
+    cnts: jax.Array,          # (W, C)
+    losses: jax.Array,        # (W, C)
+    worker_loss: jax.Array,   # (W,)
+    local: jax.Array,         # (N, k) any one worker's full table
+    base: jax.Array,          # (N, k) the shared round-input table
+    normalize_row_fn,
+    repeats: int,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Merge packed delta buffers from W workers into the full table —
+    bit-identical to :func:`merge_stacked` on the dense copies.  ``local``
+    supplies untouched-row values (any worker's copy: they agree there);
+    ``base`` + ``normalize_row_fn``/``repeats`` reconstruct what a
+    *partially* untouched candidate row evolved into per worker."""
+    W = idx.shape[0]
+    n_rows = base.shape[0]
+    cand = sparse_candidates(idx, n_rows)
+    virgin = virgin_rows(
+        jnp.take(base, cand, axis=0, mode="fill", fill_value=0.0),
+        normalize_row_fn, repeats,
+    )
+    svals, scnt, sloss = jax.vmap(
+        lookup_delta, in_axes=(0, 0, 0, 0, None, None, None)
+    )(idx, vals, cnts, losses, cand, virgin, n_rows)
+    rows = merge_candidates(
+        strategy, cand, svals, scnt, sloss, worker_loss, n_rows, key
+    )
+    return apply_delta(sparse_untouched_base(strategy, local, W), cand, rows)

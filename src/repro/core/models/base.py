@@ -145,6 +145,25 @@ class KGModel:
         out["ent"] = unit_rows(params["ent"])
         return out
 
+    def normalize_rows(self, name: str, rows: jax.Array) -> jax.Array:
+        """Row-local restriction of :meth:`normalize` for table ``name``:
+        the projection applied to a ``(n, k)`` slice of rows.
+
+        Contract (the sparse Reduce transport depends on it): for every
+        table, ``normalize(params)[name][ids] == normalize_rows(name,
+        params[name][ids])`` **bitwise** — i.e. the constraint projection
+        touches each row independently, so a merge that only ships touched
+        rows can reconstruct what an *untouched* row evolved into (``m``
+        chained projections of its round-input value) without seeing the
+        full table.  A model whose projection couples rows (e.g. a
+        table-global rescale) must not be trained with
+        ``merge_transport="sparse"``; tests/test_sparse_transport.py pins
+        the contract per registered model.  Default matches the default
+        ``normalize``: unit-L2 rows for ``"ent"``, identity elsewhere."""
+        if name == "ent":
+            return unit_rows(rows)
+        return rows
+
     def param_roles(self) -> Dict[str, str]:
         return dict(self.roles)
 
@@ -275,17 +294,85 @@ class KGModel:
             params = self.normalize(params)
         return params, loss
 
+    def _compact_batch(
+        self, params: Params, pos: jax.Array, neg: jax.Array, cfg: KGConfig
+    ) -> tuple[dict, Params, jax.Array, jax.Array]:
+        """Candidate row sets + compact tables + remapped triplets for one
+        batch: every row the batch references, deduplicated, with static
+        capacity (4B entity / 2B relation slots, padded with the
+        out-of-range id ``n_rows`` so scatters drop them)."""
+        ent_ids = jnp.concatenate([pos[:, 0], pos[:, 2], neg[:, 0], neg[:, 2]])
+        rel_ids = jnp.concatenate([pos[:, 1], neg[:, 1]])
+        E, R = cfg.n_entities, cfg.n_relations
+        cand = {
+            "ent": jnp.unique(ent_ids, size=int(min(E, ent_ids.shape[0])),
+                              fill_value=E),
+            "rel": jnp.unique(rel_ids, size=int(min(R, rel_ids.shape[0])),
+                              fill_value=R),
+        }
+        roles = self.param_roles()
+        compact = {
+            name: jnp.take(params[name], cand[roles[name]], axis=0,
+                           mode="fill", fill_value=0.0)
+            for name in params
+        }
+
+        def remap(t):
+            return jnp.stack([
+                jnp.searchsorted(cand["ent"], t[:, 0]),
+                jnp.searchsorted(cand["rel"], t[:, 1]),
+                jnp.searchsorted(cand["ent"], t[:, 2]),
+            ], axis=1).astype(t.dtype)
+
+        return cand, compact, remap(pos), remap(neg)
+
+    def sgd_step_sparse(
+        self, params: Params, pos: jax.Array, neg: jax.Array, cfg: KGConfig
+    ) -> tuple[Params, jax.Array]:
+        """:meth:`sgd_step` touching only the rows the batch references —
+        the ParaGraphE idiom, and the Map-phase half of the sparse
+        transport (``merge_transport="sparse"``): per step the tables see
+        one O(batch) gather and one O(batch) scatter instead of a
+        table-sized gradient materialization.
+
+        Bitwise-identical to the dense step: the energy evaluated on the
+        gathered compact tables computes the same floats (gathers
+        compose), its gradient is the same per-row scatter-add of the same
+        cotangents in the same update order (just into compact buffers),
+        and a row no batch id references has gradient exactly ``+0.0``
+        under the dense step (``p - lr*0 == p`` bitwise), so skipping it
+        changes nothing.  tests/test_sparse_transport.py pins the
+        equivalence across models, strategies, and pipelines."""
+        cand, compact, pos_c, neg_c = self._compact_batch(
+            params, pos, neg, cfg)
+        loss, grads = jax.value_and_grad(self.margin_loss)(
+            compact, pos_c, neg_c, margin=cfg.margin, norm=cfg.norm
+        )
+        roles = self.param_roles()
+        params = {
+            name: params[name].at[cand[roles[name]]].set(
+                compact[name] - cfg.learning_rate * grads[name], mode="drop")
+            for name in params
+        }
+        if cfg.normalize == "step":
+            params = self.normalize(params)
+        return params, loss
+
     def run_epoch(
         self,
         params: Params,
         pos_batches: jax.Array,     # (S, B, 3) minibatches of training triplets
         neg_batches: jax.Array,     # (S, B, 3) corrupted counterparts
         cfg: KGConfig,
+        sparse_apply: bool = False,
     ) -> tuple[Params, EpochStats]:
         """One epoch of Algorithm 1 on one worker: constraint projection, then
         scan SGD over the worker's minibatches, tracking the per-key stats
         Reduce needs.  Pure; used by the vmap backend (vmapped over workers)
-        and inside shard_map (per shard)."""
+        and inside shard_map (per shard).  ``sparse_apply`` swaps the step
+        for the bitwise-identical compact-row :meth:`sgd_step_sparse`
+        (engaged by ``merge_transport="sparse"``)."""
+        step = self.sgd_step_sparse if sparse_apply else self.sgd_step
         if cfg.normalize == "epoch":
             params = self.normalize(params)
         E, R = cfg.n_entities, cfg.n_relations
@@ -302,7 +389,7 @@ class KGModel:
             pair = self.per_pair_loss(
                 params, pos, neg, margin=cfg.margin, norm=cfg.norm
             )
-            params, loss = self.sgd_step(params, pos, neg, cfg)
+            params, loss = step(params, pos, neg, cfg)
             stats = _accumulate_touch(stats, pos, neg, pair, E, R)
             return (params, stats, loss_sum + loss), None
 

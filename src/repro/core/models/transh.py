@@ -57,6 +57,14 @@ class TransH(base.KGModel):
         out["norm"] = unit_rows(params["norm"])
         return out
 
+    def normalize_rows(self, name: str, rows: jax.Array) -> jax.Array:
+        """Row-local restriction of :meth:`normalize` (the sparse-transport
+        contract, see base): unit rows for both the entity table and the
+        hyperplane-normal table."""
+        if name in ("ent", "norm"):
+            return unit_rows(rows)
+        return rows
+
     def candidate_energies(
         self, params: Params, triplets: jax.Array, side: str, norm: str = "l1"
     ) -> jax.Array:

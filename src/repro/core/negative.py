@@ -44,17 +44,33 @@ def corrupt_unif(
 
 def bernoulli_stats(triplets: np.ndarray, n_relations: int) -> np.ndarray:
     """tph/(tph+hpt) per relation — probability of corrupting the HEAD
-    (TransH eq. for 'bern' sampling).  Host-side (numpy) preprocessing."""
+    (TransH eq. for 'bern' sampling).  Host-side (numpy) preprocessing.
+
+    One vectorized pass: per-relation triple counts via ``bincount``,
+    per-relation distinct head/tail counts via ``np.unique`` of
+    (entity·R + relation) int64 codes — O((T + R) log T) instead of the
+    old per-relation scan's O(R·T), which dominated preprocessing on
+    real graphs.  Same float64 arithmetic and final float32 rounding as
+    the scan, relation for relation."""
+    t = np.asarray(triplets)
     probs = np.full((n_relations,), 0.5, np.float32)
-    for r in range(n_relations):
-        mask = triplets[:, 1] == r
-        if not mask.any():
-            continue
-        sub = triplets[mask]
-        # tails-per-head / heads-per-tail
-        tph = len(sub) / max(len(np.unique(sub[:, 0])), 1)
-        hpt = len(sub) / max(len(np.unique(sub[:, 2])), 1)
-        probs[r] = tph / (tph + hpt)
+    if len(t) == 0:
+        return probs
+    r = t[:, 1].astype(np.int64)
+    n = np.bincount(r, minlength=n_relations)[:n_relations].astype(np.float64)
+
+    def distinct_per_rel(ent: np.ndarray) -> np.ndarray:
+        codes = np.unique(ent.astype(np.int64) * n_relations + r)
+        return np.bincount(
+            codes % n_relations, minlength=n_relations
+        )[:n_relations].astype(np.float64)
+
+    uh = distinct_per_rel(t[:, 0])    # distinct heads per relation
+    ut = distinct_per_rel(t[:, 2])    # distinct tails per relation
+    seen = n > 0
+    tph = n[seen] / np.maximum(uh[seen], 1.0)   # tails-per-head
+    hpt = n[seen] / np.maximum(ut[seen], 1.0)   # heads-per-tail
+    probs[seen] = (tph / (tph + hpt)).astype(np.float32)
     return probs
 
 

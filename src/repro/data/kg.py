@@ -30,12 +30,13 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import os
-import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.util import warn_fresh
 
 
 @dataclasses.dataclass
@@ -124,7 +125,10 @@ class KG:
                 head_groups, self.n_entities, max_fanout)
             dropped = dropped_t + dropped_h
             if dropped:
-                warnings.warn(
+                # warn_fresh, not warnings.warn: the process-wide registry
+                # would swallow the report for every later graph/eval in
+                # this process, though each drops its own counts
+                warn_fresh(
                     f"max_fanout={max_fanout} truncates the filtered-known "
                     f"candidate masks: {dropped} known candidates dropped "
                     f"across {len(self.test)} test queries "

@@ -71,6 +71,7 @@ def make_configs(
     n_workers: int = 4,
     strategy: str = "average",
     reduce_impl: str = "psum",
+    merge_transport: str = "dense",
     backend: str = "vmap",
     batch_size: int = 256,
     partition: str = "balanced",
@@ -92,7 +93,13 @@ def make_configs(
     (killing residual split bias); ``donate_params`` (default on) donates
     the params buffer through each compiled block so the accelerator holds
     one copy of the tables.  ``pipeline='host'`` (the default) is the
-    original per-epoch loop, preserved bit-for-bit."""
+    original per-epoch loop, preserved bit-for-bit.
+
+    ``merge_transport='sparse'`` makes every Reduce exchange only the rows
+    the round's touch stats mark updated (static-capacity padded delta
+    buffers) instead of whole tables — bit-identical results on every
+    strategy, paradigm, pipeline, and backend (see the transport contract
+    in ``core/merge.py``); 'dense' (the default) is the reference."""
     model = get_model(model)
     kcfg = KGConfig(
         n_entities=kg.n_entities,
@@ -109,6 +116,7 @@ def make_configs(
         paradigm=paradigm,
         strategy=strategy,
         reduce_impl=reduce_impl,
+        merge_transport=merge_transport,
         backend=backend,
         batch_size=batch_size,
         partition=partition,

@@ -34,9 +34,17 @@ def _run_kg(args) -> None:
     from repro import kg as kg_api
     from repro.data import kg as kg_lib
 
-    graph = kg_lib.synthetic_kg(
-        args.seed, n_entities=args.kg_entities, n_relations=15,
-        n_triplets=args.kg_triplets)
+    if args.kg_dataset is not None:
+        from repro.data import datasets
+
+        graph = datasets.load_dataset(args.kg_dataset, seed=args.seed)
+        print(f"loaded {args.kg_dataset}: {graph.n_entities} entities, "
+              f"{graph.n_relations} relations, {len(graph.train)} train / "
+              f"{len(graph.valid)} valid / {len(graph.test)} test triples")
+    else:
+        graph = kg_lib.synthetic_kg(
+            args.seed, n_entities=args.kg_entities, n_relations=15,
+            n_triplets=args.kg_triplets)
     schedule_kw = {}
     if args.kg_pipeline == "device":
         # one compiled scan block per --kg-block-epochs (default: the whole
@@ -77,6 +85,7 @@ def _run_kg(args) -> None:
     res = kg_api.fit(
         graph, model=args.kg, paradigm=args.kg_paradigm,
         n_workers=args.kg_workers, strategy=args.kg_strategy,
+        merge_transport=args.kg_merge_transport,
         backend="vmap", batch_size=256, dim=48,
         learning_rate=args.lr if args.lr is not None else 5e-2,
         epochs=args.kg_epochs, seed=args.seed,
@@ -175,6 +184,16 @@ def main(argv=None):
     ap.add_argument("--kg-paradigm", default="sgd", choices=["sgd", "bgd"])
     ap.add_argument("--kg-workers", type=int, default=4)
     ap.add_argument("--kg-strategy", default="average")
+    ap.add_argument("--kg-merge-transport", default="dense",
+                    choices=["dense", "sparse"],
+                    help="Reduce payload: full tables, or compact "
+                         "touched-row deltas (bit-identical results; "
+                         "sparse wins at large entity counts)")
+    ap.add_argument("--kg-dataset", default=None, metavar="PATH",
+                    help="train on a real TSV dataset (head<TAB>relation"
+                         "<TAB>tail; a file or a dir with train/valid/"
+                         "test.txt) instead of the synthetic graph; "
+                         "--kg-entities/--kg-triplets are ignored")
     ap.add_argument("--kg-epochs", type=int, default=30)
     ap.add_argument("--kg-entities", type=int, default=2000)
     ap.add_argument("--kg-triplets", type=int, default=20000)

@@ -76,6 +76,17 @@ def worker_map(fn, *, backend: str, mesh=None, axis_name: str = "workers"):
     return run
 
 
+def all_gather_deltas(packed, axis_name: str):
+    """All-gather a worker's packed sparse-delta buffers across the named
+    shard_map axis: every leaf of the pytree (row ids, values, counts,
+    losses — see ``core/merge.pack_delta``) gains a leading ``(W, ...)``
+    worker axis, ordered by axis index.  This is the sparse transport's
+    only cross-worker traffic: O(W·C·k) wire bytes per table instead of
+    the dense paths' O(W·N·k) all_gather / O(N·k)-per-psum, with C the
+    static touched-row capacity."""
+    return jax.tree.map(lambda x: jax.lax.all_gather(x, axis_name), packed)
+
+
 def _ambient_mesh():
     try:
         m = jax.sharding.get_abstract_mesh()

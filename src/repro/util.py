@@ -1,0 +1,34 @@
+"""Small cross-cutting helpers with no better home.
+
+``warn_fresh`` exists because Python's warning machinery dedupes
+"default"-action warnings on (message, category, lineno) in a per-module
+registry that lives for the whole *process*: a data-quality warning (the
+dropped batch-size remainder in ``core/mapreduce.train``, the
+``max_fanout`` eval truncation in ``data/kg.KG``) fires for the first
+fit()/evaluate() call and is silently swallowed for every later call in
+the same process — even though each run drops different counts under a
+different config.  These are once-per-*run* reports, not
+once-per-process ones.
+"""
+from __future__ import annotations
+
+import sys
+import warnings
+
+
+def warn_fresh(msg: str, category: type = UserWarning,
+               stacklevel: int = 2) -> None:
+    """``warnings.warn(msg, category, stacklevel=...)`` minus the
+    per-process once-only dedupe: each call hands ``warn_explicit`` a
+    fresh registry, so every fit/eval call surfaces its own report while
+    remaining an ordinary warning for filters, ``-W error`` and
+    ``pytest.warns``."""
+    frame = sys._getframe(stacklevel)
+    warnings.warn_explicit(
+        msg,
+        category,
+        frame.f_code.co_filename,
+        frame.f_lineno,
+        module=frame.f_globals.get("__name__", "<unknown>"),
+        registry={},
+    )
