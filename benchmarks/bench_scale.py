@@ -18,6 +18,15 @@ records that trajectory:
   epoch's batches + negatives, the payload a capacity-exact transport
   would ship).  Deterministic identities aside, only the ``*_per_s``
   fields are nondeterministic.
+* ``task=shard_table`` rows — the replicated-table memory wall and what
+  sharding buys past it: per graph size, for W in {2, 4, 8}, the
+  entity-table bytes each device keeps resident between merge steps under
+  ``table_sharding="sharded"`` (``table_per_device_bytes`` ~ 1/W of
+  ``replicated_table_bytes``, both analytic from the contiguous-block
+  row split, both regression-gated as ``*_bytes``), plus a measured
+  ``sharded_epochs_per_s`` at the bench's training worker count so the
+  bit-identical sharded Reduce's rate is gated alongside the replicated
+  transports.
 * ``task=ingest`` row — ``data/datasets.py`` streamed TSV loader
   lines/sec on a generated file, with a fingerprint cross-check against
   the in-RAM reference loader.
@@ -62,6 +71,7 @@ SIZES = {
     1_000_000: (50_000, 4_096, 2),
 }
 QUICK_SIZES = (50_000,)
+SHARD_WORKERS = (2, 4, 8)     # per-device residency cells per graph size
 REPEATS = 3
 INGEST_LINES = 100_000
 ROUNDTRIP_N = 1_000_000
@@ -87,7 +97,8 @@ def random_kg(n_entities: int, n_triplets: int, n_relations: int = 100,
 
 
 def _epochs_per_sec(graph, model_name, transport, batch, epochs,
-                    repeats=REPEATS) -> float:
+                    repeats=REPEATS,
+                    table_sharding="replicated") -> float:
     """Steady-state device-pipeline rate: one compiled block of ``epochs``
     epochs per measurement, compilation absorbed by a warm-up call."""
     kgm = get_model(model_name)
@@ -95,7 +106,7 @@ def _epochs_per_sec(graph, model_name, transport, batch, epochs,
         graph, model=model_name, paradigm="sgd", n_workers=WORKERS,
         backend="vmap", batch_size=batch, dim=DIM, learning_rate=0.05,
         strategy=STRATEGY, pipeline="device", block_epochs=epochs,
-        merge_transport=transport)
+        merge_transport=transport, table_sharding=table_sharding)
     part = kg_lib.partition_balanced(0, graph.train, WORKERS)
     block_fn = mapreduce.make_block_fn(
         mcfg, kcfg, jnp.asarray(part), model=kgm, seed=0)
@@ -151,6 +162,37 @@ def _wire_bytes(graph, model_name, batch) -> tuple:
         sparse += WORKERS * cap * (k + 3) * 4
         touched += n_touched * (k + 3) * 4
     return dense, sparse, touched
+
+
+def _shard_table_rows(graph, model_name, batch, epochs, verbose,
+                      repeats=REPEATS) -> list:
+    """task=shard_table rows for one graph size (module docstring): the
+    per-device entity-table residency at each W in SHARD_WORKERS, plus
+    the measured sharded-Reduce rate at the bench's training worker
+    count.  Both byte fields are deterministic functions of the
+    contiguous-block split, so the ``*_bytes`` gate holds them exactly."""
+    rows = []
+    n = graph.n_entities
+    for wv in SHARD_WORKERS:
+        row = {
+            "task": "shard_table",
+            "model": model_name,
+            "workers": wv,
+            "n_entities": n,
+            "table_sharding": "sharded",
+            "table_per_device_bytes":
+                merge_lib.shard_rows(n, wv) * DIM * 4,
+            "replicated_table_bytes": n * DIM * 4,
+        }
+        if wv == WORKERS:
+            row["sharded_epochs_per_s"] = round(
+                _epochs_per_sec(graph, model_name, "sparse", batch,
+                                epochs, repeats=repeats,
+                                table_sharding="sharded"), 3)
+        rows.append(row)
+        if verbose:
+            print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+    return rows
 
 
 def _ingest_row(verbose: bool) -> dict:
@@ -247,6 +289,9 @@ def run(verbose: bool = True, model: str = "transe", quick: bool = False):
         rows.append(row)
         if verbose:
             print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+        rows.extend(_shard_table_rows(
+            graph, model, batch, epochs, verbose,
+            repeats=2 if n_entities >= 1_000_000 else REPEATS))
     rows.append(_ingest_row(verbose))
     if not quick:
         rows.append(_roundtrip_row(model, verbose))

@@ -15,9 +15,10 @@ loop, W in {1,2,4} -> ``BENCH_serve.json``), and the latency bench
 p50/p99 latency, sustained QPS, capacity, steady-state recompiles per
 batching config -> ``BENCH_latency.json``), and the scale bench (sparse
 vs dense Reduce transport epochs/sec + merge wire bytes vs graph size up
-to 1e6 entities, TSV ingest throughput, large-graph fit->evaluate round
-trip -> ``BENCH_scale.json``; ``--quick`` keeps the 50k-entity cell +
-ingest row).
+to 1e6 entities, sharded-table per-device residency + sharded-Reduce
+rate at W in {2,4,8}, TSV ingest throughput, large-graph fit->evaluate
+round trip -> ``BENCH_scale.json``; ``--quick`` keeps the 50k-entity
+train + shard_table cells + ingest row).
 
 ``--quick`` is the CI bench-regression profile: the W in {1, 4}
 cross-section of the grids (and single-repeat trace overhead) — the
@@ -195,6 +196,7 @@ def main() -> None:
             "strategy": bench_scale.STRATEGY,
             "sizes": {str(n): list(v)
                       for n, v in bench_scale.SIZES.items()},
+            "shard_workers": list(bench_scale.SHARD_WORKERS),
             "repeats": bench_scale.REPEATS,
             "ingest_lines": bench_scale.INGEST_LINES,
             "graph": "random_kg (uniform int32 triples)",

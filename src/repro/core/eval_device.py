@@ -51,9 +51,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import PartitionSpec as P
+
 from repro.core import eval as host_eval
+from repro.core import merge as merge_lib
 from repro.core.models import KGModel, Params, get_model
-from repro.parallel.util import worker_map
+from repro.parallel.util import shard_map, worker_map
 
 RankMetrics = host_eval.RankMetrics
 
@@ -90,6 +93,41 @@ def _shard(arr: np.ndarray, W: int, S: int, C: int) -> jax.Array:
 def _unshard(out: jax.Array, n: int) -> np.ndarray:
     """(W, S, C) rank grid -> (n,) host vector in original query order."""
     return np.asarray(out).reshape(-1)[:n]
+
+
+def _pad_ent_tables(model: KGModel, params: Params, padded_E: int) -> Params:
+    """Zero-pad every entity-role table to ``padded_E`` rows so the
+    ``n_shards`` equal row blocks of the sharded scan tile it exactly.
+    Pad rows are dead weight only: the rank / top-k math masks candidates
+    by ``id < n_entities``, so their (finite) scores never count."""
+    roles = model.param_roles()
+    out = dict(params)
+    for name, arr in params.items():
+        if roles.get(name) != "ent":
+            continue
+        arr = jnp.asarray(arr)
+        if arr.shape[0] < padded_E:
+            pad = jnp.zeros((padded_E - arr.shape[0],) + arr.shape[1:],
+                            arr.dtype)
+            arr = jnp.concatenate([arr, pad], axis=0)
+        out[name] = arr
+    return out
+
+
+def _check_sharded_mesh(backend: str, mesh, n_shards: int,
+                        axis_name: str = "workers") -> None:
+    """The sharded scan assigns row block ``i`` to mesh position ``i``, so
+    under shard_map the mesh axis must be exactly ``n_shards`` wide (vmap
+    simulates the shards on one device and needs no mesh)."""
+    if backend != "shard_map":
+        return
+    if mesh is None:
+        raise ValueError("backend='shard_map' needs a mesh")
+    if mesh.shape[axis_name] != n_shards:
+        raise ValueError(
+            f"table_sharding='sharded' over shard_map needs mesh axis "
+            f"{axis_name!r} of size {n_shards} (= n_workers), got "
+            f"{mesh.shape[axis_name]}")
 
 
 # ---------------------------------------------------------------------------
@@ -193,6 +231,159 @@ def _entity_ranks_device(
     return run(params, queries, tail_cands, head_cands)
 
 
+# ---------------------------------------------------------------------------
+# Sharded tables: shard-local candidate scan + exact cross-shard combine
+# ---------------------------------------------------------------------------
+
+def _shard_slice_parts(model, params, q, side, norm, gold_ids, lo, n):
+    """One shard's ``(C, n)`` score slice over candidate rows
+    ``[lo, lo + n)`` plus the gold entity's partial score: the owning
+    shard reads it out of its slice, every other shard contributes +inf,
+    so a min across shards is *bitwise* the gold score the replicated
+    scan reads out of the full matrix."""
+    s = model.candidate_slice_energies(params, q, side, norm, lo=lo, n=n)
+    off = gold_ids - lo
+    own = (off >= 0) & (off < n)
+    gp = jnp.where(
+        own,
+        jnp.take_along_axis(s, jnp.clip(off, 0, n - 1)[:, None],
+                            axis=1)[:, 0],
+        jnp.inf)
+    return s, gp
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "model", "norm", "backend", "axis_name", "mesh", "n_shards",
+        "n_entities", "relations"),
+)
+def _entity_ranks_sharded(
+    model: KGModel,
+    params: Params,          # entity-role tables padded to n_shards * R
+    queries: jax.Array,      # (S, C, 3) — the query axis is NOT split
+    tail_cands: jax.Array,   # (S, C, Pt)
+    head_cands: jax.Array,   # (S, C, Ph)
+    *,
+    norm: str,
+    backend: str,
+    mesh,
+    axis_name: str,
+    n_shards: int,
+    n_entities: int,
+    relations: bool = False,
+) -> Dict[str, jax.Array]:
+    """``_entity_ranks_device`` with the *candidate* axis sharded instead
+    of the query axis: each of ``n_shards`` shards scans only its
+    contiguous block of ``R = shard_rows(E, W)`` entity rows
+    (``candidate_slice_energies``) and the per-shard partials combine
+    exactly —
+
+      * gold score: owner's value via min / ``pmin`` (returns an operand
+        bit-exactly; every non-owner holds +inf),
+      * raw rank:   1 + an **integer** sum of per-shard strictly-better
+        counts (padded columns masked by ``id < E``; int addition is
+        associative, so the partition can't perturb the total),
+      * filtered:   each known candidate is owned by exactly one shard,
+        which checks it against the combined gold; counts int-sum.
+
+    Ranks are therefore bitwise the replicated scan's, per strategy and
+    backend (tests/test_sharded_tables.py).  ``vmap`` stacks the shard
+    axis on one device; ``shard_map`` places block ``i`` on mesh position
+    ``i`` (mesh axis width must equal ``n_shards``)."""
+    E, W = n_entities, n_shards
+    R = merge_lib.shard_rows(E, W)
+    cdtype = queries.dtype
+
+    def relation_out(q):
+        scores = model.relation_energies(params, q, norm)
+        gold = scores[jnp.arange(scores.shape[0]), q[:, 1]]
+        return 1 + jnp.sum(scores < gold[:, None], axis=1).astype(jnp.int32)
+
+    if backend == "vmap":
+        los = (jnp.arange(W, dtype=cdtype) * R).astype(cdtype)
+        cols = los[:, None] + jnp.arange(R, dtype=cdtype)[None, :]  # (W, R)
+        live = cols < E
+
+        def side_ranks(q, cands, side):
+            gold_ids = q[:, 2] if side == "tail" else q[:, 0]
+            s_all, gp_all = jax.vmap(
+                lambda lo: _shard_slice_parts(
+                    model, params, q, side, norm, gold_ids, lo, R)
+            )(los)                               # (W, C, R), (W, C)
+            gold = jnp.min(gp_all, axis=0)
+            raw = 1 + jnp.sum(
+                (s_all < gold[None, :, None]) & live[:, None, :],
+                axis=(0, 2)).astype(jnp.int32)
+            c_off = cands[None, :, :] - los[:, None, None]
+            inr = (c_off >= 0) & (c_off < R) & (cands[None] < E)
+            cv = jnp.take_along_axis(
+                s_all, jnp.clip(c_off, 0, R - 1), axis=2)
+            better = (inr & (cv < gold[None, :, None])
+                      & (cands[None] != gold_ids[None, :, None]))
+            filt = raw - jnp.sum(better, axis=(0, 2)).astype(jnp.int32)
+            return raw, jnp.maximum(filt, 1)
+
+        def body(_, inp):
+            q, tc, hc = inp
+            raw_t, filt_t = side_ranks(q, tc, "tail")
+            raw_h, filt_h = side_ranks(q, hc, "head")
+            out = {
+                "tail_raw": raw_t, "tail_filtered": filt_t,
+                "head_raw": raw_h, "head_filtered": filt_h,
+            }
+            if relations:
+                out["relation"] = relation_out(q)
+            return None, out
+
+        _, outs = jax.lax.scan(
+            body, None, (queries, tail_cands, head_cands))
+        return outs
+
+    def per_shard(params, q_all, tc_all, hc_all):
+        lo = (jax.lax.axis_index(axis_name) * R).astype(cdtype)
+        live = (lo + jnp.arange(R, dtype=cdtype)) < E
+
+        def side_ranks(q, cands, side):
+            gold_ids = q[:, 2] if side == "tail" else q[:, 0]
+            s, gp = _shard_slice_parts(
+                model, params, q, side, norm, gold_ids, lo, R)
+            gold = jax.lax.pmin(gp, axis_name)
+            cnt = jnp.sum((s < gold[:, None]) & live[None, :],
+                          axis=1).astype(jnp.int32)
+            raw = 1 + jax.lax.psum(cnt, axis_name)
+            c_off = cands - lo
+            inr = (c_off >= 0) & (c_off < R) & (cands < E)
+            cv = jnp.take_along_axis(s, jnp.clip(c_off, 0, R - 1), axis=1)
+            better = (inr & (cv < gold[:, None])
+                      & (cands != gold_ids[:, None]))
+            filt = raw - jax.lax.psum(
+                jnp.sum(better, axis=1).astype(jnp.int32), axis_name)
+            return raw, jnp.maximum(filt, 1)
+
+        def body(_, inp):
+            q, tc, hc = inp
+            raw_t, filt_t = side_ranks(q, tc, "tail")
+            raw_h, filt_h = side_ranks(q, hc, "head")
+            out = {
+                "tail_raw": raw_t, "tail_filtered": filt_t,
+                "head_raw": raw_h, "head_filtered": filt_h,
+            }
+            if relations:
+                # every shard computes the full relation scan identically
+                # (the relation table is never sharded)
+                out["relation"] = relation_out(q)
+            return None, out
+
+        _, outs = jax.lax.scan(body, None, (q_all, tc_all, hc_all))
+        return outs
+
+    fn = shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(P(), P(), P(), P()), out_specs=P(), check_vma=False)
+    return fn(params, queries, tail_cands, head_cands)
+
+
 def entity_ranks_device(
     params: Params,
     test: np.ndarray,
@@ -206,6 +397,7 @@ def entity_ranks_device(
     mesh=None,
     fused: Optional[bool] = None,
     relations: bool = False,
+    table_sharding: str = "replicated",
 ) -> Dict[str, np.ndarray]:
     """Per-query entity-inference ranks from the device engine, in test
     order: ``{"raw_ranks": {"tail", "head"}, "filtered_ranks": {...}}`` —
@@ -214,13 +406,33 @@ def entity_ranks_device(
 
     ``relations=True`` additionally returns ``"relation_ranks"`` (the
     gold-relation rank per query), computed in the *same* scan body — the
-    fused protocol pass ``evaluate_all_device`` runs."""
+    fused protocol pass ``evaluate_all_device`` runs.
+
+    ``table_sharding="sharded"`` shards the *candidate* axis instead of
+    the query axis: ``n_workers`` shards each scan only their contiguous
+    entity-row block and the partial ranks combine exactly
+    (``_entity_ranks_sharded``) — ranks stay bitwise identical to the
+    replicated scan."""
     model = get_model(model)
-    fused = _resolve_fused(model, fused)
+    if table_sharding not in ("replicated", "sharded"):
+        raise ValueError(
+            f"table_sharding must be 'replicated' or 'sharded', got "
+            f"{table_sharding!r}")
+    sharded = table_sharding == "sharded"
+    if sharded:
+        if fused:
+            raise ValueError(
+                "fused=True is incompatible with table_sharding='sharded' "
+                "(the Pallas rank kernel streams the full entity table)")
+        fused = False
+    else:
+        fused = _resolve_fused(model, fused)
     test = np.asarray(test, np.int32)
     Q = len(test)
     E = params["ent"].shape[0]
-    S, C, Qp = _layout(Q, chunk, n_workers)
+    # sharded mode keeps every query on every shard (W=1 in the layout):
+    # the candidate axis, not the query axis, is what splits W ways
+    S, C, Qp = _layout(Q, chunk, 1 if sharded else n_workers)
     W = n_workers
 
     if cand_masks is None:
@@ -230,13 +442,23 @@ def entity_ranks_device(
         tails, heads = empty, empty
     else:
         tails, heads = cand_masks
-    q = _shard(_pad_rows(test, Qp), W, S, C)
-    tc = _shard(_pad_rows(np.asarray(tails, np.int32), Qp), W, S, C)
-    hc = _shard(_pad_rows(np.asarray(heads, np.int32), Qp), W, S, C)
+    layout_W = 1 if sharded else W
+    q = _shard(_pad_rows(test, Qp), layout_W, S, C)
+    tc = _shard(_pad_rows(np.asarray(tails, np.int32), Qp), layout_W, S, C)
+    hc = _shard(_pad_rows(np.asarray(heads, np.int32), Qp), layout_W, S, C)
 
-    outs = _entity_ranks_device(
-        model, params, q, tc, hc, norm=norm, backend=backend, mesh=mesh,
-        axis_name="workers", fused=fused, relations=relations)
+    if sharded:
+        _check_sharded_mesh(backend, mesh, W)
+        R = merge_lib.shard_rows(E, W)
+        padded = _pad_ent_tables(model, params, W * R)
+        outs = _entity_ranks_sharded(
+            model, padded, q[0], tc[0], hc[0], norm=norm, backend=backend,
+            mesh=mesh, axis_name="workers", n_shards=W, n_entities=E,
+            relations=relations)
+    else:
+        outs = _entity_ranks_device(
+            model, params, q, tc, hc, norm=norm, backend=backend, mesh=mesh,
+            axis_name="workers", fused=fused, relations=relations)
     out = {"raw_ranks": {
         "tail": _unshard(outs["tail_raw"], Q),
         "head": _unshard(outs["head_raw"], Q),
@@ -263,12 +485,14 @@ def entity_inference_device(
     backend: str = "vmap",
     mesh=None,
     fused: Optional[bool] = None,
+    table_sharding: str = "replicated",
 ) -> Dict[str, RankMetrics]:
     """Device-engine entity inference: raw (and, with ``cand_masks``,
     filtered) metrics identical to the host reference."""
     ranks = entity_ranks_device(
         params, test, norm, cand_masks, model=model, chunk=chunk,
-        n_workers=n_workers, backend=backend, mesh=mesh, fused=fused)
+        n_workers=n_workers, backend=backend, mesh=mesh, fused=fused,
+        table_sharding=table_sharding)
     raw = ranks["raw_ranks"]
     out = {"raw": host_eval._metrics_from_ranks(
         np.concatenate([raw["tail"], raw["head"]]))}
@@ -412,6 +636,7 @@ def evaluate_all_device(
     mesh=None,
     fused: Optional[bool] = None,
     max_fanout: Optional[int] = None,
+    table_sharding: str = "replicated",
 ) -> Dict[str, object]:
     """All three paper tasks on the device engine — same output dict as the
     host ``evaluate_all`` (which dispatches here for ``engine="device"``).
@@ -427,13 +652,15 @@ def evaluate_all_device(
     ``"shard_map"`` over a real mesh axis — pass ``mesh``).  ``fused``
     forces the Pallas ``rank_topk`` path on or off (default: auto).
     ``max_fanout`` caps the padded filter-mask width
-    (``KG.eval_filter_candidates``); leave ``None`` for exact filtering."""
+    (``KG.eval_filter_candidates``); leave ``None`` for exact filtering.
+    ``table_sharding="sharded"`` swaps in the shard-local candidate scan
+    (exact cross-shard combine — metrics unchanged bitwise)."""
     model = get_model(model)
     masks = kg.eval_filter_candidates(max_fanout) if filtered else None
     ranks = entity_ranks_device(
         params, kg.test, norm, masks, model=model, chunk=chunk,
         n_workers=n_workers, backend=backend, mesh=mesh, fused=fused,
-        relations=True)
+        relations=True, table_sharding=table_sharding)
     raw = ranks["raw_ranks"]
     rp = host_eval._metrics_from_ranks(ranks["relation_ranks"])
     tc = triplet_classification_device(

@@ -93,6 +93,7 @@ from repro.core import models as kg_models
 from repro.core import trace as trace_lib
 from repro.core.models.base import EpochStats, KGConfig, KGModel, Params, apply_gradients
 from repro.data import kg as kg_lib
+from repro.parallel.sharding import kg_partitions, kg_table_shardings
 from repro.parallel.util import all_gather_deltas, shard_map as _shard_map
 from repro.util import warn_fresh
 
@@ -181,9 +182,12 @@ def resume_config(tcfg: KGConfig, cfg: MapReduceConfig) -> dict:
     schedule, paradigm/pipeline/strategy, and the scalar hyperparameters.
     ``backend`` is deliberately absent (vmap and shard_map are proved
     equivalent, so resuming a vmap checkpoint on a real mesh is fine), as
-    are ``block_epochs`` (block-size invariance) and ``merge_transport``
+    are ``block_epochs`` (block-size invariance), ``merge_transport``
     (the sparse transport is bit-identical to dense, so a dense-trained
-    checkpoint resumes under sparse transport and vice versa)."""
+    checkpoint resumes under sparse transport and vice versa),
+    ``table_sharding`` (the shard-routed merge is bit-identical to the
+    replicated one, so checkpoints move freely between layouts), and
+    ``touched_capacity`` (any validated capacity packs the same rows)."""
     return {
         "paradigm": cfg.paradigm,
         "pipeline": cfg.pipeline,
@@ -266,6 +270,23 @@ class MapReduceConfig:
     # caller-provided resume params first, so user buffers are never
     # invalidated.
     donate_params: Optional[bool] = None
+    # 'replicated' keeps every worker's full (N, k) tables — the reference.
+    # 'sharded' gives each of the n_workers shards ownership of a contiguous
+    # row block of every table: the Reduce routes each worker's sparse delta
+    # buffers to the owning shard (per-shard candidate union + local merge,
+    # no full-table all_gather — see the "Sharded tables" section of
+    # core/merge.py) and, on the shard_map backend's device pipeline, the
+    # tables rest sharded over the mesh axis between blocks (~1/W per-device
+    # table bytes).  Bit-identical to replicated for every strategy x
+    # paradigm x pipeline x backend.  Requires merge_transport='sparse'.
+    table_sharding: str = "replicated"
+    # sparse transport: static per-round delta-buffer capacity override
+    # (touched rows per worker per table).  None = the analytic
+    # merge_lib.touched_capacity bound.  An override below the bound would
+    # make pack_delta silently drop rows, so train() validates it against
+    # the bound and raises before any epoch runs; the runtime overflow
+    # check (delta_overflow) is the second seatbelt.
+    touched_capacity: Optional[int] = None
 
     def __post_init__(self):
         if self.paradigm not in ("sgd", "bgd"):
@@ -274,6 +295,28 @@ class MapReduceConfig:
             raise ValueError(f"bad strategy {self.strategy!r}")
         if self.merge_transport not in ("dense", "sparse"):
             raise ValueError(f"bad merge_transport {self.merge_transport!r}")
+        if self.table_sharding not in ("replicated", "sharded"):
+            raise ValueError(f"bad table_sharding {self.table_sharding!r}")
+        if self.table_sharding == "sharded" and self.merge_transport != "sparse":
+            raise ValueError(
+                "table_sharding='sharded' routes sparse delta buffers to "
+                "their owning shards — it needs merge_transport='sparse' "
+                "(the dense transport exchanges whole tables, which is the "
+                "replicated layout by definition)")
+        if self.touched_capacity is not None:
+            if self.merge_transport != "sparse":
+                raise ValueError(
+                    "touched_capacity sizes the sparse transport's delta "
+                    "buffers — set merge_transport='sparse' or drop it")
+            if self.paradigm != "sgd":
+                raise ValueError(
+                    "touched_capacity is an SGD-paradigm knob (the BGD "
+                    "sparse update sizes its buffers exactly from the "
+                    "batch shape)")
+            if self.touched_capacity < 1:
+                raise ValueError(
+                    f"touched_capacity must be >= 1 (or None for the "
+                    f"analytic bound), got {self.touched_capacity}")
         if self.backend not in ("vmap", "shard_map"):
             raise ValueError(f"bad backend {self.backend!r}")
         if self.pipeline not in ("host", "device"):
@@ -328,6 +371,45 @@ def _merge_tables_stacked(
     return out
 
 
+def _delta_capacity(
+    cfg: MapReduceConfig, n_rows: int, n_steps: int, k_epochs: int, role: str
+) -> int:
+    """The static delta-buffer capacity for one table: the analytic
+    :func:`merge_lib.touched_capacity` bound, or the user override
+    (validated >= the bound by :func:`_check_touched_capacity` before any
+    epoch runs; clamped to the table like the bound itself)."""
+    if cfg.touched_capacity is not None:
+        return int(min(n_rows, cfg.touched_capacity))
+    return merge_lib.touched_capacity(
+        n_rows, cfg.batch_size, n_steps, k_epochs, role)
+
+
+def _check_touched_capacity(
+    cfg: MapReduceConfig, tcfg: KGConfig, model: KGModel, n_steps: int
+) -> None:
+    """Fail fast at train() time when a user capacity override is below the
+    analytic touched-rows bound for any table role — pack_delta's
+    drop-scatter would silently discard the overflow rows otherwise."""
+    if cfg.touched_capacity is None or cfg.merge_transport != "sparse":
+        return
+    if cfg.paradigm != "sgd":
+        return
+    rows = {"ent": tcfg.n_entities, "rel": tcfg.n_relations}
+    K = cfg.schedule.merge_every
+    for role in sorted(set(model.param_roles().values())):
+        n_rows = rows[role]
+        bound = merge_lib.touched_capacity(
+            n_rows, cfg.batch_size, n_steps, K, role)
+        if min(n_rows, cfg.touched_capacity) < bound:
+            raise ValueError(
+                f"touched_capacity={cfg.touched_capacity} is below the "
+                f"analytic bound {bound} for {role!r}-role tables "
+                f"({n_steps} steps x batch_size {cfg.batch_size} x "
+                f"merge_every {K}): pack_delta would silently drop touched "
+                "rows and corrupt the merge.  Raise the override or pass "
+                "None to use the bound.")
+
+
 def _virgin_repeats(tcfg: KGConfig, n_steps: int, k_epochs: int) -> int:
     """How many times a row *no* step touched has been through the model's
     constraint projection by Reduce time: once per epoch start
@@ -342,39 +424,52 @@ def _virgin_repeats(tcfg: KGConfig, n_steps: int, k_epochs: int) -> int:
 
 def _merge_tables_sparse_stacked(
     model: KGModel,
-    strategy: str,
+    cfg: MapReduceConfig,
     stacked: Params,
     stats,
     merge_key: jax.Array,
     base: Params,                # the shared round-input params
     tcfg: KGConfig,
-    batch_size: int,
     n_steps: int,
     k_epochs: int,
-) -> Params:
+) -> tuple[Params, jax.Array]:
     """Sparse-transport Reduce of the stacked params: pack each worker's
     touched rows into static-capacity delta buffers, merge only the union
     candidate rows, scatter into the evolved base table — bit-identical to
     :func:`_merge_tables_stacked` (same sorted-name order and per-table
-    fold-out keys)."""
+    fold-out keys).  With ``cfg.table_sharding='sharded'`` the merge is
+    routed per owning shard (still bit-identical).
+
+    Returns ``(params, overflow)`` — ``overflow`` is the worst per-table
+    touched-capacity excess this round (int32 scalar, 0 under the analytic
+    bound); the train drivers raise on a positive value because
+    ``pack_delta`` would have silently dropped that many rows' updates."""
     roles = model.param_roles()
     names = sorted(stacked.keys())
     keys = jax.random.split(merge_key, len(names))
     m = _virgin_repeats(tcfg, n_steps, k_epochs)
     out = {}
+    overflow = jnp.zeros((), jnp.int32)
     for name, key in zip(names, keys):
         count, loss = _stats_for_role(stats, roles[name])
         n_rows = stacked[name].shape[1]
-        cap = merge_lib.touched_capacity(
-            n_rows, batch_size, n_steps, k_epochs, roles[name])
+        cap = _delta_capacity(cfg, n_rows, n_steps, k_epochs, roles[name])
+        overflow = jnp.maximum(overflow, merge_lib.delta_overflow(count, cap))
         pack = functools.partial(
             merge_lib.pack_delta, capacity=cap, n_rows=n_rows)
         idx, vals, cnt, lss = jax.vmap(pack)(stacked[name], count, loss)
-        out[name] = merge_lib.merge_sparse_stacked(
-            strategy, idx, vals, cnt, lss, stats.mean_loss,
-            stacked[name][0], base[name],
-            functools.partial(model.normalize_rows, name), m, key)
-    return out
+        if cfg.table_sharding == "sharded":
+            out[name] = merge_lib.merge_sparse_sharded_stacked(
+                cfg.strategy, idx, vals, cnt, lss, stats.mean_loss,
+                stacked[name][0], base[name],
+                functools.partial(model.normalize_rows, name), m, key,
+                n_shards=cfg.n_workers)
+        else:
+            out[name] = merge_lib.merge_sparse_stacked(
+                cfg.strategy, idx, vals, cnt, lss, stats.mean_loss,
+                stacked[name][0], base[name],
+                functools.partial(model.normalize_rows, name), m, key)
+    return out, overflow
 
 
 def _merge_tables_sparse_collective(
@@ -388,33 +483,47 @@ def _merge_tables_sparse_collective(
     tcfg: KGConfig,
     n_steps: int,
     k_epochs: int,
-) -> Params:
+) -> tuple[Params, jax.Array]:
     """Sparse-transport Reduce inside shard_map: all-gather each table's
     packed delta buffers — the transport's only cross-worker traffic,
     O(W·C·k) wire bytes instead of whole tables — then replay the stacked
-    sparse merge on every worker.  The replayed math is *identical* to the
-    vmap backend's, so the two backends agree bitwise under sparse
-    transport (the dense psum path agrees only to tolerance).
-    ``cfg.reduce_impl`` is ignored: there is nothing to psum.  Must run
-    inside shard_map over ``cfg.axis_name``."""
+    sparse merge on every worker, or, with
+    ``cfg.table_sharding='sharded'``, merge only this shard's owned
+    candidate block and all-gather the merged blocks
+    (:func:`merge_lib.merge_sparse_sharded_collective`).  The replayed
+    math is *identical* to the vmap backend's, so the two backends agree
+    bitwise under sparse transport (the dense psum path agrees only to
+    tolerance).  ``cfg.reduce_impl`` is ignored: there is nothing to
+    psum.  Must run inside shard_map over ``cfg.axis_name``.
+
+    Returns ``(params, overflow)`` with ``overflow`` pmax-ed over workers
+    (replicated) — see :func:`_merge_tables_sparse_stacked`."""
     roles = model.param_roles()
     names = sorted(local.keys())
     keys = jax.random.split(merge_key, len(names))
     m = _virgin_repeats(tcfg, n_steps, k_epochs)
     wl = jax.lax.all_gather(worker_loss, cfg.axis_name)          # (W,)
     out = {}
+    overflow = jnp.zeros((), jnp.int32)
     for name, key in zip(names, keys):
         count, loss = _stats_for_role(stats, roles[name])
         n_rows = local[name].shape[0]
-        cap = merge_lib.touched_capacity(
-            n_rows, cfg.batch_size, n_steps, k_epochs, roles[name])
+        cap = _delta_capacity(cfg, n_rows, n_steps, k_epochs, roles[name])
+        overflow = jnp.maximum(overflow, merge_lib.delta_overflow(count, cap))
         packed = merge_lib.pack_delta(local[name], count, loss, cap, n_rows)
         idx, vals, cnt, lss = all_gather_deltas(packed, cfg.axis_name)
-        out[name] = merge_lib.merge_sparse_stacked(
-            cfg.strategy, idx, vals, cnt, lss, wl,
-            local[name], base[name],
-            functools.partial(model.normalize_rows, name), m, key)
-    return out
+        if cfg.table_sharding == "sharded":
+            out[name] = merge_lib.merge_sparse_sharded_collective(
+                cfg.strategy, idx, vals, cnt, lss, wl,
+                local[name], base[name],
+                functools.partial(model.normalize_rows, name), m,
+                cfg.axis_name, key)
+        else:
+            out[name] = merge_lib.merge_sparse_stacked(
+                cfg.strategy, idx, vals, cnt, lss, wl,
+                local[name], base[name],
+                functools.partial(model.normalize_rows, name), m, key)
+    return out, jax.lax.pmax(overflow, cfg.axis_name)
 
 
 def sgd_epoch_vmap(
@@ -425,21 +534,32 @@ def sgd_epoch_vmap(
     tcfg: KGConfig,
     merge_key: jax.Array,
     model: Optional[KGModel] = None,
+    *,
+    with_overflow: bool = False,
 ) -> tuple[Params, jax.Array]:
-    """Map (vmapped local epochs from shared params) + Reduce (stacked)."""
+    """Map (vmapped local epochs from shared params) + Reduce (stacked).
+
+    ``with_overflow=True`` (the train drivers' contract) appends the
+    round's sparse-transport capacity-overflow scalar to the return —
+    ``(params, loss, overflow)`` — so the host loop can raise before the
+    silently-truncated merge is ever consumed."""
     model = _resolve(cfg, model)
     run = functools.partial(
         model.run_epoch, cfg=tcfg,
         sparse_apply=cfg.merge_transport == "sparse")
     stacked, stats = jax.vmap(run, in_axes=(None, 0, 0))(params, pos, neg)
+    overflow = jnp.zeros((), jnp.int32)
     if cfg.merge_transport == "sparse":
-        merged = _merge_tables_sparse_stacked(
-            model, cfg.strategy, stacked, stats, merge_key, params, tcfg,
-            cfg.batch_size, pos.shape[1], 1)
+        merged, overflow = _merge_tables_sparse_stacked(
+            model, cfg, stacked, stats, merge_key, params, tcfg,
+            pos.shape[1], 1)
     else:
         merged = _merge_tables_stacked(
             model, cfg.strategy, stacked, stats, merge_key)
-    return merged, jnp.mean(stats.mean_loss)
+    loss = jnp.mean(stats.mean_loss)
+    if with_overflow:
+        return merged, loss, overflow
+    return merged, loss
 
 
 def _merge_tables_collective(
@@ -480,8 +600,12 @@ def sgd_epoch_shard(
     merge_key: jax.Array,
     mesh: Mesh,
     model: Optional[KGModel] = None,
+    *,
+    with_overflow: bool = False,
 ) -> tuple[Params, jax.Array]:
-    """Map/Reduce over a real mesh axis via shard_map."""
+    """Map/Reduce over a real mesh axis via shard_map.  ``with_overflow``
+    appends the sparse-transport overflow scalar (replicated, pmax-ed over
+    workers) — see :func:`sgd_epoch_vmap`."""
     model = _resolve(cfg, model)
     ax = cfg.axis_name
 
@@ -490,21 +614,24 @@ def sgd_epoch_shard(
         local, stats = model.run_epoch(
             params, pos_w[0], neg_w[0], tcfg,
             sparse_apply=cfg.merge_transport == "sparse")
+        overflow = jnp.zeros((), jnp.int32)
         if cfg.merge_transport == "sparse":
-            out = _merge_tables_sparse_collective(
+            out, overflow = _merge_tables_sparse_collective(
                 model, cfg, local, stats, stats.mean_loss, merge_key,
                 params, tcfg, pos_w.shape[1], 1)
         else:
             out = _merge_tables_collective(
                 model, cfg, local, stats, stats.mean_loss, merge_key)
         loss = jax.lax.pmean(stats.mean_loss, ax)
+        if with_overflow:
+            return out, loss, overflow
         return out, loss
 
     fn = _shard_map(
         worker,
         mesh=mesh,
         in_specs=(P(), P(ax), P(ax)),
-        out_specs=(P(), P()),
+        out_specs=(P(), P(), P()) if with_overflow else (P(), P()),
         check_vma=False,
     )
     return fn(params, pos, neg)
@@ -532,25 +659,49 @@ def _bgd_candidate_ids(pos_b: jax.Array, neg_b: jax.Array, role: str,
 
 
 def _bgd_sparse_update_stacked(
-    model: KGModel, tcfg: KGConfig, params: Params, grads: Params,
-    pos_b: jax.Array, neg_b: jax.Array,
+    model: KGModel, cfg: MapReduceConfig, tcfg: KGConfig, params: Params,
+    grads: Params, pos_b: jax.Array, neg_b: jax.Array,
 ) -> Params:
     """Sparse BGD Reduce (vmap backend): autodiff gradients are *exactly*
     zero at rows a batch never references, so restricting the gradient
     mean + update to the batches' candidate rows is bit-identical to the
     dense update (``p - lr·0 == p``, sign of zero included — scatter-add
-    grads are ``+0.0`` at unreferenced rows)."""
+    grads are ``+0.0`` at unreferenced rows).  With
+    ``cfg.table_sharding='sharded'`` the candidate set is additionally
+    partitioned into owning row blocks and updated block-by-block — the
+    mean + update never mix rows, so the decomposition is bit-identical
+    (the vmap simulation of the collective routing below)."""
     roles = model.param_roles()
     out = {}
     for name in params:
         n_rows = params[name].shape[0]
         cand = _bgd_candidate_ids(pos_b, neg_b, roles[name], n_rows)
-        gc = jnp.mean(
-            jnp.take(grads[name], cand, axis=1, mode="fill", fill_value=0.0),
-            axis=0)
-        pc = jnp.take(params[name], cand, axis=0, mode="fill", fill_value=0.0)
-        out[name] = params[name].at[cand].set(
-            pc - tcfg.learning_rate * gc, mode="drop")
+        if cfg.table_sharding == "sharded":
+            R = merge_lib.shard_rows(n_rows, cfg.n_workers)
+            table, grad = params[name], grads[name]
+
+            def shard_update(lo, table=table, grad=grad, cand=cand,
+                             n_rows=n_rows, R=R):
+                own = merge_lib.own_candidates(cand, lo, R, n_rows)
+                gc = jnp.mean(
+                    jnp.take(grad, own, axis=1, mode="fill", fill_value=0.0),
+                    axis=0)
+                pc = jnp.take(table, own, axis=0, mode="fill", fill_value=0.0)
+                return own, pc - tcfg.learning_rate * gc
+
+            los = jnp.arange(cfg.n_workers, dtype=cand.dtype) * R
+            owns, rows = jax.lax.map(shard_update, los)
+            out[name] = params[name].at[owns.reshape(-1)].set(
+                rows.reshape(-1, rows.shape[-1]), mode="drop")
+        else:
+            gc = jnp.mean(
+                jnp.take(grads[name], cand, axis=1, mode="fill",
+                         fill_value=0.0),
+                axis=0)
+            pc = jnp.take(params[name], cand, axis=0, mode="fill",
+                          fill_value=0.0)
+            out[name] = params[name].at[cand].set(
+                pc - tcfg.learning_rate * gc, mode="drop")
     return out
 
 
@@ -562,24 +713,36 @@ def _bgd_sparse_update_collective(
     at its own batch's candidate ids, all-gathers the packed buffers
     (O(W·C·k) wire bytes instead of a whole-table pmean), and replays the
     stacked mean + update — bitwise equal to the vmap backend (the dense
-    pmean path agrees only to tolerance).  Must run inside shard_map."""
+    pmean path agrees only to tolerance).  With
+    ``cfg.table_sharding='sharded'`` each worker updates only the candidate
+    block it owns and the updated blocks are all-gathered — same wire
+    class, per-worker update compute cut to its block.  Must run inside
+    shard_map."""
     roles = model.param_roles()
     ax = cfg.axis_name
     out = {}
     for name in params:
         n_rows = params[name].shape[0]
-        own = _bgd_candidate_ids(pos_b, neg_b, roles[name], n_rows)
-        gvals = jnp.take(grads[name], own, axis=0, mode="fill", fill_value=0.0)
-        idx, vals = all_gather_deltas((own, gvals), ax)
+        mine = _bgd_candidate_ids(pos_b, neg_b, roles[name], n_rows)
+        gvals = jnp.take(grads[name], mine, axis=0, mode="fill",
+                         fill_value=0.0)
+        idx, vals = all_gather_deltas((mine, gvals), ax)
         cand = merge_lib.sparse_candidates(idx, n_rows)
+        if cfg.table_sharding == "sharded":
+            R = merge_lib.shard_rows(n_rows, idx.shape[0])
+            lo = (jax.lax.axis_index(ax) * R).astype(cand.dtype)
+            cand = merge_lib.own_candidates(cand, lo, R, n_rows)
         zero = jnp.zeros((cand.shape[0], vals.shape[-1]), vals.dtype)
         svals = jax.vmap(
             merge_lib.lookup_rows, in_axes=(0, 0, None, None, None)
         )(idx, vals, cand, zero, n_rows)
         gc = jnp.mean(svals, axis=0)
         pc = jnp.take(params[name], cand, axis=0, mode="fill", fill_value=0.0)
-        out[name] = params[name].at[cand].set(
-            pc - tcfg.learning_rate * gc, mode="drop")
+        new = pc - tcfg.learning_rate * gc
+        if cfg.table_sharding == "sharded":
+            cand = jax.lax.all_gather(cand, ax).reshape(-1)
+            new = jax.lax.all_gather(new, ax).reshape(-1, new.shape[-1])
+        out[name] = params[name].at[cand].set(new, mode="drop")
     return out
 
 
@@ -609,7 +772,7 @@ def bgd_epoch_vmap(
         )(pos_b, neg_b)
         if cfg.merge_transport == "sparse":
             params = _bgd_sparse_update_stacked(
-                model, tcfg, params, grads, pos_b, neg_b)
+                model, cfg, tcfg, params, grads, pos_b, neg_b)
         else:
             grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
             params = apply_gradients(params, grads, tcfg.learning_rate)
@@ -732,8 +895,13 @@ def make_block_fn(
     head_prob: Optional[jax.Array] = None,
     seed: int = 0,
     donate: bool = False,
+    with_overflow: bool = False,
 ) -> Callable:
-    """Returns jitted ``block_fn(params, epoch_ids) -> (params, losses)``.
+    """Returns jitted ``block_fn(params, epoch_ids) -> (params, losses)``
+    — or ``(params, losses, overflow)`` with ``with_overflow=True``, where
+    ``overflow`` is the block's worst sparse-transport capacity excess
+    (int32 scalar, 0 outside the SGD sparse transport); the device driver
+    opts in and raises on a positive value at block boundaries.
 
     ``epoch_ids`` is a ``(L,)`` int32 array of absolute epoch indices with
     ``L % schedule.merge_every == 0``; the whole block runs as one compiled
@@ -832,7 +1000,8 @@ def make_block_fn(
     def sgd_block_vmap(params: Params, epoch_ids: jax.Array):
         part = block_part(epoch_ids)
 
-        def round_body(stacked, eids):           # eids: (K,) one merge round
+        def round_body(carry, eids):             # eids: (K,) one merge round
+            stacked, ovf = carry
             base = jax.tree.map(lambda x: x[0], stacked)  # shared round input
 
             def local_epoch(carry, e):
@@ -847,17 +1016,22 @@ def make_block_fn(
             acc = dataclasses.replace(acc, mean_loss=acc.mean_loss / K)
             mk = jax.random.fold_in(k_merge, eids[-1])
             if cfg.merge_transport == "sparse":
-                merged = _merge_tables_sparse_stacked(
-                    model, cfg.strategy, stacked, acc, mk, base, tcfg,
-                    B, n_w // B, K)
+                merged, o = _merge_tables_sparse_stacked(
+                    model, cfg, stacked, acc, mk, base, tcfg,
+                    n_w // B, K)
+                ovf = jnp.maximum(ovf, o)
             else:
                 merged = _merge_tables_stacked(
                     model, cfg.strategy, stacked, acc, mk)
-            return _broadcast(merged), losses
+            return (_broadcast(merged), ovf), losses
 
-        stacked, losses = jax.lax.scan(
-            round_body, _broadcast(params), epoch_ids.reshape(-1, K))
-        return jax.tree.map(lambda x: x[0], stacked), losses.reshape(-1)
+        (stacked, ovf), losses = jax.lax.scan(
+            round_body, (_broadcast(params), jnp.zeros((), jnp.int32)),
+            epoch_ids.reshape(-1, K))
+        out = jax.tree.map(lambda x: x[0], stacked)
+        if with_overflow:
+            return out, losses.reshape(-1), ovf
+        return out, losses.reshape(-1)
 
     def bgd_block_vmap(params: Params, epoch_ids: jax.Array):
         part = block_part(epoch_ids)
@@ -875,8 +1049,10 @@ def make_block_fn(
             w = jax.lax.axis_index(ax)
             part_w = worker_block_part(epoch_ids, w, part_w[0])
 
-            def round_body(base, eids):
-                # the carry is the shared merged params — the round input
+            def round_body(carry, eids):
+                # the params carry is the shared merged round input
+                base, ovf = carry
+
                 def local_epoch(carry, e):
                     local, acc = carry
                     pos, neg = worker_epoch_data(e, w, part_w)
@@ -890,21 +1066,26 @@ def make_block_fn(
                     local_epoch, (base, _zero_stats(tcfg)), eids)
                 mk = jax.random.fold_in(k_merge, eids[-1])
                 if cfg.merge_transport == "sparse":
-                    out = _merge_tables_sparse_collective(
+                    out, o = _merge_tables_sparse_collective(
                         model, cfg, local, acc, acc.mean_loss / K, mk,
                         base, tcfg, n_w // B, K)
+                    ovf = jnp.maximum(ovf, o)
                 else:
                     out = _merge_tables_collective(
                         model, cfg, local, acc, acc.mean_loss / K, mk)
-                return out, losses
+                return (out, ovf), losses
 
-            params, losses = jax.lax.scan(
-                round_body, params, epoch_ids.reshape(-1, K))
+            (params, ovf), losses = jax.lax.scan(
+                round_body, (params, jnp.zeros((), jnp.int32)),
+                epoch_ids.reshape(-1, K))
+            if with_overflow:
+                return params, losses.reshape(-1), ovf
             return params, losses.reshape(-1)
 
         fn = _shard_map(
             worker, mesh=mesh,
-            in_specs=(P(), P(ax), P()), out_specs=(P(), P()),
+            in_specs=(P(), P(ax), P()),
+            out_specs=(P(), P(), P()) if with_overflow else (P(), P()),
             check_vma=False,
         )
         return fn(params, partitioned, epoch_ids)
@@ -934,6 +1115,36 @@ def make_block_fn(
         fn = sgd_block_shard if cfg.paradigm == "sgd" else bgd_block_shard
     else:
         fn = sgd_block_vmap if cfg.paradigm == "sgd" else bgd_block_vmap
+
+    if with_overflow and cfg.paradigm == "bgd":
+        # BGD sizes its sparse buffers exactly from the batch shape, so
+        # overflow is impossible — append the constant to keep the driver
+        # contract uniform
+        inner_bgd = fn
+
+        def fn(params, epoch_ids):
+            out, losses = inner_bgd(params, epoch_ids)
+            return out, losses, jnp.zeros((), jnp.int32)
+
+    if cfg.table_sharding == "sharded" and cfg.backend == "shard_map":
+        # rest the tables row-sharded over the mesh axis between blocks:
+        # _train_device places the input params P(axis) and this output
+        # constraint keeps the donated in/out layouts matched, so
+        # per-device table residency stays ~1/W across the run (inside a
+        # block the Map still gathers full tables — see ROADMAP's
+        # sharded-tables item for the fully shard-resident follow-on)
+        inner_layout = fn
+
+        def fn(params, epoch_ids):
+            res = inner_layout(params, epoch_ids)
+            shardings = kg_table_shardings(
+                model.param_roles(), params, mesh, "sharded", axis_name=ax)
+            out = {
+                name: jax.lax.with_sharding_constraint(x, shardings[name])
+                for name, x in res[0].items()
+            }
+            return (out,) + tuple(res[1:])
+
     return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
 
@@ -946,26 +1157,54 @@ def make_epoch_fn(
     tcfg: KGConfig,
     mesh: Optional[Mesh] = None,
     model: Optional[KGModel] = None,
+    *,
+    with_overflow: bool = False,
 ) -> Callable:
-    """Returns jitted ``epoch_fn(params, pos, neg, merge_key) -> (params, loss)``."""
+    """Returns jitted ``epoch_fn(params, pos, neg, merge_key) -> (params,
+    loss)`` — or ``(params, loss, overflow)`` with ``with_overflow=True``
+    (the train driver's contract; BGD appends a constant 0 since its
+    sparse buffers cannot overflow)."""
     model = _resolve(cfg, model)
     if cfg.backend == "shard_map":
         if mesh is None:
             raise ValueError("shard_map backend needs a mesh")
         if cfg.paradigm == "sgd":
             fn = lambda p, pos, neg, k: sgd_epoch_shard(
-                p, pos, neg, cfg, tcfg, k, mesh, model)
+                p, pos, neg, cfg, tcfg, k, mesh, model,
+                with_overflow=with_overflow)
         else:
             fn = lambda p, pos, neg, k: bgd_epoch_shard(
                 p, pos, neg, cfg, tcfg, mesh, model)
     else:
         if cfg.paradigm == "sgd":
             fn = lambda p, pos, neg, k: sgd_epoch_vmap(
-                p, pos, neg, cfg, tcfg, k, model)
+                p, pos, neg, cfg, tcfg, k, model,
+                with_overflow=with_overflow)
         else:
             fn = lambda p, pos, neg, k: bgd_epoch_vmap(
                 p, pos, neg, cfg, tcfg, model)
+    if with_overflow and cfg.paradigm == "bgd":
+        inner = fn
+        fn = lambda p, pos, neg, k: inner(p, pos, neg, k) + (
+            jnp.zeros((), jnp.int32),)
     return jax.jit(fn)
+
+
+def _raise_on_overflow(overflow, last_epoch: int) -> None:
+    """Host-side seatbelt at Reduce boundaries: a positive sparse-transport
+    overflow means :func:`merge_lib.pack_delta` silently dropped that many
+    touched rows' updates this round — the merged tables are corrupt, so
+    stop instead of training on."""
+    n = int(overflow)
+    if n > 0:
+        raise RuntimeError(
+            f"sparse-transport delta overflow at epoch {last_epoch}: a "
+            f"Reduce round touched {n} more rows than the packed buffer "
+            "capacity, so pack_delta dropped their updates and the merge "
+            "is corrupt.  The analytic touched_capacity bound makes this "
+            "impossible — an undersized MapReduceConfig.touched_capacity "
+            "override (or a bound regression) is the cause; raise the "
+            "override or pass None.")
 
 
 @dataclasses.dataclass
@@ -1123,6 +1362,8 @@ def train(
         # even though each run drops its own counts
         warn_fresh(msg, stacklevel=2)
 
+    _check_touched_capacity(cfg, tcfg, model, n_w // cfg.batch_size)
+
     head_prob = None
     if tcfg.sampling == "bern":
         head_prob = jnp.asarray(
@@ -1173,7 +1414,11 @@ def train(
             caller_params=caller_params, writer=writer,
             start_epoch=start_epoch, prior_history=prior_history)
 
-    epoch_fn = make_epoch_fn(cfg, tcfg, mesh, model)
+    # surface sparse-transport capacity overflow at every Reduce (the
+    # loop already syncs float(loss) per epoch, so this costs nothing)
+    with_overflow = cfg.paradigm == "sgd" and cfg.merge_transport == "sparse"
+    epoch_fn = make_epoch_fn(
+        cfg, tcfg, mesh, model, with_overflow=with_overflow)
 
     if cfg.backend == "shard_map":
         assert mesh is not None
@@ -1197,7 +1442,11 @@ def train(
         if cfg.backend == "shard_map":
             pos = jax.device_put(pos, shard)
             neg = jax.device_put(neg, shard)
-        params, loss = epoch_fn(params, pos, neg, k_merge)
+        if with_overflow:
+            params, loss, overflow = epoch_fn(params, pos, neg, k_merge)
+            _raise_on_overflow(overflow, epoch)
+        else:
+            params, loss = epoch_fn(params, pos, neg, k_merge)
         loss = float(loss)
         history.append(loss)
         if callback is not None:
@@ -1267,8 +1516,16 @@ def _train_device(
     if cfg.backend == "shard_map":
         if mesh is None:
             raise ValueError("shard_map backend needs a mesh")
-        part = jax.device_put(part, NamedSharding(mesh, P(cfg.axis_name)))
-        params = jax.device_put(params, NamedSharding(mesh, P()))
+        parts = kg_partitions(cfg.table_sharding, axis_name=cfg.axis_name)
+        part = jax.device_put(part, NamedSharding(mesh, parts.batch))
+        # replicated: every device holds full tables; sharded: each
+        # entity-role table rests row-sharded (~1/W per device) and the
+        # block fn constrains its output to the same layout, keeping
+        # donation in/out matched.  Relation-role (and non-dividing)
+        # tables replicate — see kg_table_shardings.
+        params = jax.device_put(params, kg_table_shardings(
+            model.param_roles(), params, mesh, cfg.table_sharding,
+            axis_name=cfg.axis_name))
 
     donate = cfg.donate_params if cfg.donate_params is not None else True
     if donate and caller_params:
@@ -1276,9 +1533,10 @@ def _train_device(
         # freshly initialized params have no outside owner and skip the copy
         params = jax.tree.map(lambda x: jnp.array(x), params)
 
+    with_overflow = cfg.paradigm == "sgd" and cfg.merge_transport == "sparse"
     block_fn = make_block_fn(
         cfg, tcfg, part, mesh=mesh, model=model, head_prob=head_prob,
-        seed=seed, donate=donate)
+        seed=seed, donate=donate, with_overflow=with_overflow)
 
     eval_every = eval_loop.eval_every if eval_loop is not None else None
     ckpt_every = writer.cfg.every if writer is not None else None
@@ -1311,7 +1569,11 @@ def _train_device(
         if repart is not None:
             length = min(length, repart - start % repart)
         epoch_ids = jnp.arange(start, start + length, dtype=jnp.int32)
-        params, losses = block_fn(params, epoch_ids)
+        if with_overflow:
+            params, losses, overflow = block_fn(params, epoch_ids)
+            _raise_on_overflow(overflow, start + length - 1)
+        else:
+            params, losses = block_fn(params, epoch_ids)
         loss_blocks.append(losses)               # device array per block
         start += length
         if callback is not None:

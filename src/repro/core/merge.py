@@ -47,7 +47,15 @@ bit-identical merged tables:
     the relation) — so the device pipeline's ``lax.scan`` block compiles
     once; unused slots are padded with the out-of-range row id ``n_rows``
     (values 0, dropped by every consumer via ``mode="fill"`` gathers and
-    ``mode="drop"`` scatters).
+    ``mode="drop"`` scatters).  The same drop-scatter makes capacity a
+    **hard correctness bound**: a round touching more than ``C`` rows
+    would silently lose the overflow slots' updates.  The engine
+    therefore counts touched rows on device (:func:`delta_overflow`),
+    surfaces the worst per-table excess at every Reduce boundary, and
+    the train drivers raise on a positive count; a user capacity
+    override below the analytic bound
+    (``MapReduceConfig.touched_capacity``) is rejected at ``train()``
+    time, before any epoch runs.
   * **merge** (:func:`merge_sparse_stacked`): the union of all workers'
     touched ids (:func:`sparse_candidates`) is the only row set merged.
     Per worker, a candidate row it did not touch is reconstructed as the
@@ -68,6 +76,25 @@ numerics for every strategy; under ``shard_map`` it all-gathers the packed
 buffers (O(W·C·k) wire bytes) and replays the same stacked math, so vmap
 and shard_map agree bitwise (a strengthening of the dense psum path's
 tolerance-level agreement).  Dense remains the default and the reference.
+
+Sharded tables (``MapReduceConfig.table_sharding="sharded"``)
+-------------------------------------------------------------
+
+The sparse transport doubles as the routing layer for sharded tables:
+every table is partitioned into W contiguous row blocks
+(:func:`shard_rows`), the candidate union is split per block
+(:func:`own_candidates` — sorted and overflow-free by construction), and
+each shard merges only the candidates it owns
+(:func:`merge_sparse_sharded_stacked`,
+:func:`merge_sparse_sharded_collective`).  Every strategy's math is
+per-row over the worker axis and the blocks partition the union, so the
+shard-routed merge is bit-identical to the monolithic one.  Under
+shard_map the Reduce exchanges packed deltas plus each shard's merged
+own-block — O(W·C·k) wire bytes, never a full-table all_gather — and the
+per-shard merge compute drops to the shard's share of the union.
+(Memory note: 'random' still draws its full ``(W, n_rows)`` priority
+matrix per shard — RNG output is shape-dependent — so that strategy's
+transient footprint does not shrink with sharding.)
 """
 from __future__ import annotations
 
@@ -320,6 +347,18 @@ def pack_delta(
     return idx, vals, cnt, lss
 
 
+def delta_overflow(count: jax.Array, capacity: int) -> jax.Array:
+    """How many touched rows :func:`pack_delta`'s drop-scatter would
+    silently discard for this round: ``max(touched - capacity, 0)``,
+    maxed over any leading worker axis.  Zero by construction under the
+    analytic :func:`touched_capacity` bound; positive only if the
+    capacity was overridden below the real touch count (or the bound is
+    wrong) — the merge drivers surface this at every Reduce boundary and
+    the train pipelines raise on a positive value."""
+    touched = jnp.sum((count > 0).astype(jnp.int32), axis=-1)
+    return jnp.max(jnp.maximum(touched - capacity, 0))
+
+
 def sparse_candidates(idx: jax.Array, n_rows: int) -> jax.Array:
     """Union of every worker's touched row ids: ``idx`` is the stacked
     ``(W, C)`` id vectors; returns a sorted unique id vector of static size
@@ -479,3 +518,129 @@ def merge_sparse_stacked(
         strategy, cand, svals, scnt, sloss, worker_loss, n_rows, key
     )
     return apply_delta(sparse_untouched_base(strategy, local, W), cand, rows)
+
+
+# ---------------------------------------------------------------------------
+# Sharded tables: shard-routed merge (table_sharding="sharded")
+# ---------------------------------------------------------------------------
+
+def shard_rows(n_rows: int, n_shards: int) -> int:
+    """Contiguous row-block size per shard: shard ``s`` owns rows
+    ``[s·R, min((s+1)·R, n_rows))`` with ``R = ceil(n_rows / n_shards)``.
+    Every table is sharded by the same rule, so a row's owner is a pure
+    function of its id."""
+    return -(-n_rows // n_shards)
+
+
+def own_candidates(
+    cand: jax.Array, lo: jax.Array, block: int, n_rows: int
+) -> jax.Array:
+    """One shard's slice of the candidate union: the (still sorted) ids in
+    ``[lo, lo + block)``, compacted into a static ``min(block, U-1) + 1``
+    buffer padded with ``n_rows``.  A shard owns at most ``block`` real
+    rows and ``cand`` carries at most ``U - 1`` real ids, so this buffer
+    can never overflow — no drop risk, unlike :func:`pack_delta`."""
+    U = cand.shape[0]
+    cap = int(min(block, U - 1)) + 1
+    mask = (cand >= lo) & (cand < lo + block) & (cand < n_rows)
+    slot = jnp.where(mask, jnp.cumsum(mask) - 1, cap)
+    return jnp.full((cap,), n_rows, cand.dtype).at[slot].set(cand, mode="drop")
+
+
+def _merge_own_block(
+    strategy, idx, vals, cnts, losses, worker_loss, base,
+    normalize_row_fn, repeats, lo, block, cand, key,
+):
+    """Merge the candidates one shard owns.  Per-candidate math is the
+    exact computation :func:`merge_sparse_stacked` runs at that row —
+    strategies never mix rows, so restricting to an owned block changes
+    nothing bitwise ('random' draws the same full ``(W, n_rows)``
+    priority matrix from the same key and gathers disjoint columns)."""
+    n_rows = base.shape[0]
+    own = own_candidates(cand, lo, block, n_rows)
+    virgin = virgin_rows(
+        jnp.take(base, own, axis=0, mode="fill", fill_value=0.0),
+        normalize_row_fn, repeats,
+    )
+    svals, scnt, sloss = jax.vmap(
+        lookup_delta, in_axes=(0, 0, 0, 0, None, None, None)
+    )(idx, vals, cnts, losses, own, virgin, n_rows)
+    rows = merge_candidates(
+        strategy, own, svals, scnt, sloss, worker_loss, n_rows, key
+    )
+    return own, rows
+
+
+def merge_sparse_sharded_stacked(
+    strategy: str,
+    idx: jax.Array,           # (W, C) packed row ids
+    vals: jax.Array,          # (W, C, k)
+    cnts: jax.Array,          # (W, C)
+    losses: jax.Array,        # (W, C)
+    worker_loss: jax.Array,   # (W,)
+    local: jax.Array,         # (N, k) any one worker's full table
+    base: jax.Array,          # (N, k) the shared round-input table
+    normalize_row_fn,
+    repeats: int,
+    key: jax.Array | None = None,
+    *,
+    n_shards: int,
+) -> jax.Array:
+    """Shard-routed :func:`merge_sparse_stacked`: the candidate union is
+    partitioned into ``n_shards`` contiguous row blocks and each block is
+    merged independently — bit-identical to the monolithic merge because
+    the blocks partition the union and strategy math is per-row.  This is
+    the vmap-backend simulation of the collective path below; the blocks
+    run under ``lax.map`` so transient memory stays one block's worth."""
+    W = idx.shape[0]
+    n_rows = base.shape[0]
+    R = shard_rows(n_rows, n_shards)
+    cand = sparse_candidates(idx, n_rows)
+
+    def shard_merge(lo):
+        return _merge_own_block(
+            strategy, idx, vals, cnts, losses, worker_loss, base,
+            normalize_row_fn, repeats, lo, R, cand, key,
+        )
+
+    los = jnp.arange(n_shards, dtype=cand.dtype) * R
+    owns, rows = jax.lax.map(shard_merge, los)
+    out = sparse_untouched_base(strategy, local, W)
+    return apply_delta(out, owns.reshape(-1), rows.reshape(-1, rows.shape[-1]))
+
+
+def merge_sparse_sharded_collective(
+    strategy: str,
+    idx: jax.Array,           # (W, C) all-gathered packed row ids
+    vals: jax.Array,          # (W, C, k)
+    cnts: jax.Array,          # (W, C)
+    losses: jax.Array,        # (W, C)
+    worker_loss: jax.Array,   # (W,)
+    local: jax.Array,         # (N, k) this shard's full table copy
+    base: jax.Array,          # (N, k) the shared round-input table
+    normalize_row_fn,
+    repeats: int,
+    axis: str,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Shard-routed merge inside ``shard_map`` (mesh axis size == number
+    of shards): this worker merges only the candidate block it owns
+    (``lo = axis_index · R``), then the merged own-blocks are all-gathered
+    — O(W·cap·k) wire bytes, never a full-table all_gather — and every
+    worker scatters all blocks into its base copy.  all_gather returns
+    operands bit-exactly, so the result matches
+    :func:`merge_sparse_sharded_stacked` (and hence the monolithic merge)
+    bitwise on every shard."""
+    W = idx.shape[0]
+    n_rows = base.shape[0]
+    R = shard_rows(n_rows, W)
+    cand = sparse_candidates(idx, n_rows)
+    lo = (jax.lax.axis_index(axis) * R).astype(cand.dtype)
+    own, rows = _merge_own_block(
+        strategy, idx, vals, cnts, losses, worker_loss, base,
+        normalize_row_fn, repeats, lo, R, cand, key,
+    )
+    owns = jax.lax.all_gather(own, axis)                    # (W, cap)
+    rws = jax.lax.all_gather(rows, axis)                    # (W, cap, k)
+    out = sparse_untouched_base(strategy, local, W)
+    return apply_delta(out, owns.reshape(-1), rws.reshape(-1, rws.shape[-1]))

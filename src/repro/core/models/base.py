@@ -185,6 +185,25 @@ class KGModel:
 
         return jax.vmap(one)(jnp.arange(E)).T
 
+    def candidate_slice_energies(
+        self, params: Params, triplets: jax.Array, side: str,
+        norm: str = "l1", *, lo, n: int
+    ) -> jax.Array:
+        """Columns ``[lo, lo + n)`` of :meth:`candidate_energies`:
+        ``(B, 3) -> (B, n)``, the shard-local candidate scan the sharded
+        eval / serving paths run per table shard (``lo`` may be traced,
+        ``n`` is static).
+
+        Contract (tests/test_sharded_tables.py pins it per registered
+        model): **bitwise** equal to slicing the full matrix, so a
+        per-shard scan + cross-shard combine reproduces the replicated
+        ranking exactly.  The generic fallback materializes the full
+        ``(B, E)`` matrix and slices it — always exact, never cheaper;
+        models override to touch only the candidate rows (the caller
+        guarantees ``lo + n <= E``, padding the entity table if needed)."""
+        full = self.candidate_energies(params, triplets, side, norm)
+        return jax.lax.dynamic_slice_in_dim(full, lo, n, axis=1)
+
     def relation_energies(
         self, params: Params, triplets: jax.Array, norm: str = "l1"
     ) -> jax.Array:

@@ -60,6 +60,26 @@ class DistMult(base.KGModel):
             raise ValueError(f"bad side {side!r}")
         return -(fixed * r) @ ent.T                        # (B, E)
 
+    def candidate_slice_energies(
+        self, params: Params, triplets: jax.Array, side: str,
+        norm: str = "l1", *, lo, n: int
+    ) -> jax.Array:
+        """Shard-local scan: the same matmul against only candidate rows
+        ``[lo, lo + n)``.  Each output element is an independent k-length
+        dot product, so the column slice is bitwise the matching columns
+        of :meth:`candidate_energies` (pinned per model by
+        tests/test_sharded_tables.py)."""
+        ent, rel = params["ent"], params["rel"]
+        r = rel[triplets[:, 1]]
+        if side == "tail":
+            fixed = ent[triplets[:, 0]]
+        elif side == "head":
+            fixed = ent[triplets[:, 2]]
+        else:
+            raise ValueError(f"bad side {side!r}")
+        cent = jax.lax.dynamic_slice_in_dim(ent, lo, n, axis=0)
+        return -(fixed * r) @ cent.T                       # (B, n)
+
     def relation_energies(
         self, params: Params, triplets: jax.Array, norm: str = "l1"
     ) -> jax.Array:

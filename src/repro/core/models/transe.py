@@ -62,6 +62,27 @@ class TransE(base.KGModel):
             raise ValueError(f"bad side {side!r}")
         return dissimilarity(diff, norm)
 
+    def candidate_slice_energies(
+        self, params: Params, triplets: jax.Array, side: str,
+        norm: str = "l1", *, lo, n: int
+    ) -> jax.Array:
+        """Shard-local scan: only candidate rows ``[lo, lo + n)`` of the
+        entity table are touched, the query-side lookups stay full-table.
+        Elementwise ops + a per-element norm reduction, so each column is
+        bitwise the corresponding column of :meth:`candidate_energies`."""
+        ent, rel = params["ent"], params["rel"]
+        cent = jax.lax.dynamic_slice_in_dim(ent, lo, n, axis=0)
+        h, r, t = triplets[:, 0], triplets[:, 1], triplets[:, 2]
+        if side == "tail":
+            q = ent[h] + rel[r]                            # (B, k)
+            diff = q[:, None, :] - cent[None, :, :]        # (B, n, k)
+        elif side == "head":
+            q = ent[t] - rel[r]
+            diff = cent[None, :, :] - q[:, None, :]
+        else:
+            raise ValueError(f"bad side {side!r}")
+        return dissimilarity(diff, norm)
+
     def relation_energies(
         self, params: Params, triplets: jax.Array, norm: str = "l1"
     ) -> jax.Array:

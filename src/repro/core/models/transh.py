@@ -86,3 +86,29 @@ class TransH(base.KGModel):
         else:
             raise ValueError(f"bad side {side!r}")
         return dissimilarity(diff, norm)
+
+    def candidate_slice_energies(
+        self, params: Params, triplets: jax.Array, side: str,
+        norm: str = "l1", *, lo, n: int
+    ) -> jax.Array:
+        """Shard-local scan (see base): the per-candidate projection is
+        elementwise in the candidate row, so projecting only rows
+        ``[lo, lo + n)`` gives bitwise the matching columns of
+        :meth:`candidate_energies`."""
+        ent = params["ent"]
+        r = params["rel"][triplets[:, 1]]                  # (B, k)
+        w = unit_rows(params["norm"][triplets[:, 1]])      # (B, k)
+        cent = jax.lax.dynamic_slice_in_dim(ent, lo, n, axis=0)
+        proj_c = cent[None, :, :] - (
+            jnp.sum(cent[None, :, :] * w[:, None, :], axis=-1, keepdims=True)
+            * w[:, None, :]
+        )                                                  # (B, n, k)
+        if side == "tail":
+            hp = _project(ent[triplets[:, 0]], w)
+            diff = (hp + r)[:, None, :] - proj_c
+        elif side == "head":
+            tp = _project(ent[triplets[:, 2]], w)
+            diff = proj_c + (r - tp)[:, None, :]
+        else:
+            raise ValueError(f"bad side {side!r}")
+        return dissimilarity(diff, norm)

@@ -41,6 +41,17 @@ Caching / memory-mapping
 and (with ``mmap=True``, the default) memory-map the arrays, so a
 million-triple graph opens in milliseconds and its triples page in on
 demand.
+
+Cache-validation contract: ``meta.json`` records each source file's size
+and ``mtime_ns`` at write time (``"sources"``), and a cached load is
+served only while every recorded file still exists with the same
+fingerprint and no *new* split file has appeared in a dataset directory
+— any mismatch (including a pre-contract cache with no ``"sources"``
+key) silently re-ingests and rewrites the cache, so editing a TSV never
+leaves a stale cache in play.  The one deliberate exception: when every
+source file is gone (the ship-the-cache, drop-the-raw workflow), a
+complete cache is served as-is — there is nothing to re-ingest from, and
+re-parsing an empty directory would destroy the cache.
 """
 from __future__ import annotations
 
@@ -141,7 +152,27 @@ def _cache_paths(cache_dir: str) -> dict:
     }
 
 
-def _write_cache(cache_dir: str, splits, ent2id, rel2id) -> None:
+def _source_files(path: str) -> dict:
+    """Fingerprint (size + mtime_ns per file) of the TSV sources a cache
+    for ``path`` is built from — what ``meta.json`` records at write time
+    and :func:`_cache_valid` compares on later loads.  Files that vanished
+    are simply omitted (the comparison treats that as a change)."""
+    if os.path.isdir(path):
+        files = {name: os.path.join(path, name) for name in SPLIT_FILES
+                 if os.path.exists(os.path.join(path, name))}
+    else:
+        files = {os.path.basename(path): path}
+    out = {}
+    for name, p in files.items():
+        try:
+            st = os.stat(p)
+        except OSError:
+            continue
+        out[name] = {"size": st.st_size, "mtime_ns": st.st_mtime_ns}
+    return out
+
+
+def _write_cache(cache_dir: str, splits, ent2id, rel2id, sources) -> None:
     os.makedirs(cache_dir, exist_ok=True)
     paths = _cache_paths(cache_dir)
     for name, arr in zip(("train", "valid", "test"), splits):
@@ -152,7 +183,8 @@ def _write_cache(cache_dir: str, splits, ent2id, rel2id) -> None:
         json.dump({"entities": list(ent2id), "relations": list(rel2id)}, f)
     os.replace(paths["vocab"] + ".tmp", paths["vocab"])
     with open(paths["meta"] + ".tmp", "w", encoding="utf-8") as f:
-        json.dump({"n_entities": len(ent2id), "n_relations": len(rel2id)}, f)
+        json.dump({"n_entities": len(ent2id), "n_relations": len(rel2id),
+                   "sources": sources}, f)
     os.replace(paths["meta"] + ".tmp", paths["meta"])
 
 
@@ -160,6 +192,26 @@ def _cache_complete(cache_dir: str) -> bool:
     paths = _cache_paths(cache_dir)
     return all(os.path.exists(paths[k])
                for k in ("train", "valid", "test", "meta"))
+
+
+def _cache_valid(cache_dir: str, path: str) -> bool:
+    """Complete AND fresh (the module-docstring cache-validation
+    contract): every cache file exists and ``meta.json``'s recorded source
+    fingerprints match the TSVs on disk right now.  A missing ``sources``
+    record (a pre-contract cache) is stale — one re-ingest upgrades it.
+    Sources that vanished *entirely* leave nothing to re-ingest from, so a
+    complete cache is then served as-is."""
+    if not _cache_complete(cache_dir):
+        return False
+    with open(_cache_paths(cache_dir)["meta"], encoding="utf-8") as f:
+        meta = json.load(f)
+    recorded = meta.get("sources")
+    if recorded is None:
+        return False
+    current = _source_files(path)
+    if not current:
+        return True
+    return recorded == current
 
 
 def _load_cache(cache_dir: str, mmap: bool) -> KG:
@@ -199,12 +251,17 @@ def load_dataset(
     ``test.txt``) or a single TSV file (deterministically seeded split by
     ``valid_frac``/``test_frac``).  ``cache_dir`` persists the encoded
     int32 splits + vocabulary on first load and reuses them (memory-mapped
-    when ``mmap``) afterwards."""
-    if cache_dir is not None and _cache_complete(cache_dir):
+    when ``mmap``) while the source files are unchanged; an edited source
+    re-ingests and rewrites the cache (see the cache-validation contract
+    in the module docstring)."""
+    if cache_dir is not None and _cache_valid(cache_dir, path):
         return _load_cache(cache_dir, mmap)
+    # fingerprint BEFORE parsing: a source modified mid-parse then makes
+    # the next load stale (conservative) instead of silently current
+    sources = _source_files(path) if cache_dir is not None else None
     splits, ent2id, rel2id = _load_raw(path, valid_frac, test_frac, seed)
     if cache_dir is not None:
-        _write_cache(cache_dir, splits, ent2id, rel2id)
+        _write_cache(cache_dir, splits, ent2id, rel2id, sources)
         return _load_cache(cache_dir, mmap)
     return KG(len(ent2id), len(rel2id), *splits)
 

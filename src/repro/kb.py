@@ -189,17 +189,21 @@ class KnowledgeBase:
     # -- serving -----------------------------------------------------------
 
     def engine(self, *, n_workers: int = 1, backend: str = "vmap",
-               mesh=None, chunk: Optional[int] = None) -> KGQueryEngine:
+               mesh=None, chunk: Optional[int] = None,
+               table_sharding: str = "replicated") -> KGQueryEngine:
         """The device query engine over this artifact's tables; instances
-        are cached per (n_workers, backend, chunk, mesh) so repeated
-        queries reuse compiled computations."""
+        are cached per (n_workers, backend, chunk, mesh, table_sharding)
+        so repeated queries reuse compiled computations.
+        ``table_sharding="sharded"`` serves from the shard-local candidate
+        scan (answers stay bitwise identical — see ``serve/kg_engine``)."""
         key = (n_workers, backend, chunk, id(mesh) if mesh is not None
-               else None)
+               else None, table_sharding)
         if key not in self._engines:
             kw = {} if chunk is None else {"chunk": chunk}
             self._engines[key] = KGQueryEngine(
                 self.model, self.params, norm=self.norm,
-                n_workers=n_workers, backend=backend, mesh=mesh, **kw)
+                n_workers=n_workers, backend=backend, mesh=mesh,
+                table_sharding=table_sharding, **kw)
         return self._engines[key]
 
     def _exclude(self, a, b, side: str) -> np.ndarray:

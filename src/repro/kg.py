@@ -81,6 +81,8 @@ def make_configs(
     repartition_every: Optional[int] = None,
     strict_batching: bool = False,
     donate_params: Optional[bool] = None,
+    table_sharding: str = "replicated",
+    touched_capacity: Optional[int] = None,
 ) -> tuple[KGConfig, mapreduce.MapReduceConfig]:
     """Build the (model hyperparams, engine) config pair ``fit`` uses —
     exposed separately for benchmarks that drive epochs by hand.
@@ -99,7 +101,17 @@ def make_configs(
     the round's touch stats mark updated (static-capacity padded delta
     buffers) instead of whole tables — bit-identical results on every
     strategy, paradigm, pipeline, and backend (see the transport contract
-    in ``core/merge.py``); 'dense' (the default) is the reference."""
+    in ``core/merge.py``); 'dense' (the default) is the reference.
+
+    ``table_sharding='sharded'`` (requires the sparse transport) routes
+    every Reduce to the shard owning each touched row — per-shard
+    candidate unions, local merges, no full-table all-gather — and keeps
+    results bit-identical to 'replicated' on every strategy, paradigm,
+    pipeline, and backend.  ``touched_capacity`` overrides the analytic
+    per-round touched-row bound of the sparse delta buffers (rows per
+    worker per Reduce); an undersized override is rejected at config time
+    and an overflow at run time raises instead of silently dropping
+    updates."""
     model = get_model(model)
     kcfg = KGConfig(
         n_entities=kg.n_entities,
@@ -127,6 +139,8 @@ def make_configs(
             repartition_every=repartition_every),
         strict_batching=strict_batching,
         donate_params=donate_params,
+        table_sharding=table_sharding,
+        touched_capacity=touched_capacity,
     )
     return kcfg, mcfg
 
@@ -296,8 +310,10 @@ def evaluate(
     computation with the query axis optionally sharded over workers —
     identical numbers, benchmarked multiples faster (BENCH_eval.json).
     Device-engine options ride in ``engine_kw``: ``n_workers``, ``backend``
-    ('vmap' | 'shard_map'), ``mesh``, ``chunk``, ``fused``, ``max_fanout``
-    — see ``repro.core.eval_device.evaluate_all_device``."""
+    ('vmap' | 'shard_map'), ``mesh``, ``chunk``, ``fused``, ``max_fanout``,
+    ``table_sharding`` ('replicated' | 'sharded' — the shard-local
+    candidate scan; identical numbers either way) — see
+    ``repro.core.eval_device.evaluate_all_device``."""
     if isinstance(params, kb_lib.KnowledgeBase):
         kb = params
         params = kb.params

@@ -86,6 +86,7 @@ def _run_kg(args) -> None:
         graph, model=args.kg, paradigm=args.kg_paradigm,
         n_workers=args.kg_workers, strategy=args.kg_strategy,
         merge_transport=args.kg_merge_transport,
+        table_sharding=args.kg_table_sharding,
         backend="vmap", batch_size=256, dim=48,
         learning_rate=args.lr if args.lr is not None else 5e-2,
         epochs=args.kg_epochs, seed=args.seed,
@@ -189,6 +190,12 @@ def main(argv=None):
                     help="Reduce payload: full tables, or compact "
                          "touched-row deltas (bit-identical results; "
                          "sparse wins at large entity counts)")
+    ap.add_argument("--kg-table-sharding", default="replicated",
+                    choices=["replicated", "sharded"],
+                    help="'sharded' keeps only this worker's entity-table "
+                         "block resident between merge steps and reduces "
+                         "sparse deltas shard-locally (bit-identical to "
+                         "replicated; requires --kg-merge-transport sparse)")
     ap.add_argument("--kg-dataset", default=None, metavar="PATH",
                     help="train on a real TSV dataset (head<TAB>relation"
                          "<TAB>tail; a file or a dir with train/valid/"

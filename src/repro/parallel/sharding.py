@@ -260,6 +260,70 @@ def _norm_path(path) -> Tuple:
     return tuple(out)
 
 
+# ---------------------------------------------------------------------------
+# KG embedding-table partitions (MapReduceConfig.table_sharding)
+# ---------------------------------------------------------------------------
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class KGPartitions:
+    """Explicit PartitionSpecs for the KG engine's tensors under one
+    ``table_sharding`` profile — the single place the layout is written
+    down: every embedding table ``(N, k)`` takes ``table`` on its row
+    axis, the partitioned triplets ``(W, N_w, 3)`` take ``batch`` on the
+    worker axis, and keys/scalars take ``replicated``."""
+
+    table: P
+    batch: P
+    replicated: P = P()
+
+
+def kg_partitions(table_sharding: str, axis_name: str = "workers") -> KGPartitions:
+    """The partition profile for the KG ``table_sharding`` knob:
+    ``'replicated'`` keeps every table whole on every device (the
+    reference layout); ``'sharded'`` rests each table row-sharded over the
+    worker mesh axis in contiguous blocks — the device layout matching the
+    ``core/merge.shard_rows`` ownership rule, so the shard that merges a
+    row block is the shard that stores it.  The ``table`` spec applies
+    per-table through :func:`kg_table_shardings`, which replicates
+    relation-role and non-dividing tables — at-rest layouts cannot be
+    uneven."""
+    if table_sharding == "sharded":
+        return KGPartitions(table=P(axis_name), batch=P(axis_name))
+    if table_sharding == "replicated":
+        return KGPartitions(table=P(), batch=P(axis_name))
+    raise ValueError(
+        f"bad table_sharding {table_sharding!r}; "
+        "want 'replicated' or 'sharded'")
+
+
+def kg_table_shardings(roles, params, mesh: Mesh, table_sharding: str,
+                       axis_name: str = "workers"):
+    """NamedSharding pytree for a KG params dict under the profile —
+    what ``device_put`` / donation-matching output constraints consume.
+
+    ``roles`` is the model's ``param_roles()`` dict: only entity-role
+    tables rest row-sharded under ``'sharded'`` — relation tables are
+    tiny (their Reduce is not shard-routed) and usually don't divide the
+    mesh axis, so they always replicate.  An entity table whose row count
+    doesn't divide the axis also falls back to replicated: XLA can't lay
+    out uneven shards *at rest* (``device_put`` rejects them), and the
+    fallback is layout-only — training math is identical either way."""
+    W = int(mesh.shape[axis_name])
+    row = NamedSharding(mesh, kg_partitions(table_sharding, axis_name).table)
+    rep = NamedSharding(mesh, P())
+
+    def assign(name, leaf):
+        if (table_sharding == "sharded" and roles.get(name) == "ent"
+                and leaf.shape[0] % W == 0):
+            return row
+        return rep
+
+    return {name: assign(name, leaf) for name, leaf in params.items()}
+
+
 def opt_shardings(opt_struct, params_shardings, mesh: Mesh, profile: str):
     """Optimizer state mirrors param shardings; scalars/factored vectors
     replicate or inherit the matching prefix of the param spec."""

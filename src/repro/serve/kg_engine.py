@@ -42,10 +42,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import eval_device
+from repro.core import merge as merge_lib
 from repro.core.models import KGModel, Params, get_model
-from repro.parallel.util import worker_map
+from repro.parallel.util import shard_map, worker_map
 
 DEFAULT_CHUNK = eval_device.DEFAULT_CHUNK
 
@@ -111,6 +113,105 @@ def _entity_topk_device(
 
 @functools.partial(
     jax.jit,
+    static_argnames=(
+        "model", "side", "norm", "k", "backend", "mesh", "axis_name",
+        "n_shards", "n_entities"),
+)
+def _entity_topk_sharded(
+    model: KGModel,
+    params: Params,          # entity-role tables padded to n_shards * R
+    queries: jax.Array,      # (S, C, 3) — queries replicated, not split
+    exclude: jax.Array,      # (S, C, P) padded candidate ids (pad id = E)
+    *,
+    side: str,
+    norm: str,
+    k: int,
+    backend: str,
+    mesh,
+    axis_name: str,
+    n_shards: int,
+    n_entities: int,
+):
+    """``_entity_topk_device`` with the candidate axis sharded: each shard
+    scans only its contiguous block of ``R = shard_rows(E, W)`` entity
+    rows (``candidate_slice_energies``), takes a local
+    ``top_k(min(k, R))``, and the per-shard lists combine *shard-major*
+    into one ``(C, W*kk)`` union re-top_k'd to ``k``.
+
+    The combine is tie-break exact, not just value exact: ``lax.top_k``
+    breaks energy ties toward the lowest index, the union's shard-major
+    order is globally id-ascending within any tie class (shards hold
+    ascending id ranges; local lists are id-ascending within ties), and
+    every candidate the full-table top-k would pick survives its local
+    cut (at most k-1 candidates precede it anywhere, so certainly within
+    its own shard — and ``kk = R`` keeps whole shards when k exceeds R).
+    Padded rows (id >= E) read +inf before the local cut and excluded ids
+    are masked by the single shard that owns them, exactly as the
+    replicated scan does — so ids *and* energies are bitwise the
+    replicated answer (tests/test_sharded_tables.py)."""
+    E, W = n_entities, n_shards
+    R = merge_lib.shard_rows(E, W)
+    kk = min(k, R)
+    cdtype = queries.dtype
+
+    def local_topk(params, q, ex, lo):
+        s = model.candidate_slice_energies(params, q, side, norm, lo=lo, n=R)
+        col = lo + jnp.arange(R, dtype=cdtype)
+        s = jnp.where(col[None, :] >= E, jnp.inf, s)
+        # exclusion scatter, shard-local: ids outside [lo, lo+R) (and pad
+        # ids >= E) clamp to a real column but scatter -inf — the identity
+        rows = jnp.arange(q.shape[0])[:, None]
+        off = ex - lo
+        valid = (off >= 0) & (off < R) & (ex < E)
+        cols = jnp.clip(off, 0, R - 1)
+        upd = jnp.where(valid, jnp.inf, -jnp.inf)
+        s = s.at[rows, cols].max(upd)
+        neg, idx = jax.lax.top_k(-s, kk)
+        return (lo + idx).astype(jnp.int32), -neg      # (C, kk) each
+
+    def combine(ids_all, en_all):
+        # (W, C, kk), shard-major union: (C, W * kk)
+        C = ids_all.shape[1]
+        ids_u = jnp.moveaxis(ids_all, 0, 1).reshape(C, W * kk)
+        en_u = jnp.moveaxis(en_all, 0, 1).reshape(C, W * kk)
+        neg, j = jax.lax.top_k(-en_u, k)
+        return jnp.take_along_axis(ids_u, j, axis=1), -neg
+
+    if backend == "vmap":
+        los = (jnp.arange(W, dtype=cdtype) * R).astype(cdtype)
+
+        def body(_, inp):
+            q, ex = inp
+            ids_all, en_all = jax.vmap(
+                lambda lo: local_topk(params, q, ex, lo))(los)
+            return None, combine(ids_all, en_all)
+
+        _, out = jax.lax.scan(body, None, (queries, exclude))
+        return out                   # each (S, C, k)
+
+    def per_shard(params, q_all, ex_all):
+        lo = (jax.lax.axis_index(axis_name) * R).astype(cdtype)
+
+        def body(_, inp):
+            q, ex = inp
+            ids, en = local_topk(params, q, ex, lo)
+            # every shard gathers all local lists (axis order = shard
+            # order) and runs the identical combine — outputs replicated
+            ids_all = jax.lax.all_gather(ids, axis_name)
+            en_all = jax.lax.all_gather(en, axis_name)
+            return None, combine(ids_all, en_all)
+
+        _, out = jax.lax.scan(body, None, (q_all, ex_all))
+        return out
+
+    fn = shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(P(), P(), P()), out_specs=P(), check_vma=False)
+    return fn(params, queries, exclude)
+
+
+@functools.partial(
+    jax.jit,
     static_argnames=("model", "norm", "k", "backend", "mesh", "axis_name"))
 def _relation_topk_device(
     model: KGModel,
@@ -156,6 +257,12 @@ class KGQueryEngine:
     n_entities), the exact layout ``KG.known_candidate_masks`` /
     ``KG.eval_filter_candidates`` build — ``KnowledgeBase`` passes known
     neighbors here so served candidates are *new* links.
+
+    ``table_sharding="sharded"`` swaps the full-table scan for the
+    shard-local candidate scan + cross-shard top-k combine
+    (``_entity_topk_sharded``): ``n_workers`` becomes the shard count
+    over the *entity* axis (queries stay whole), and answers — ids and
+    energies — are bitwise the replicated engine's.
     """
 
     def __init__(
@@ -168,7 +275,12 @@ class KGQueryEngine:
         backend: str = "vmap",
         mesh=None,
         chunk: int = DEFAULT_CHUNK,
+        table_sharding: str = "replicated",
     ):
+        if table_sharding not in ("replicated", "sharded"):
+            raise ValueError(
+                f"table_sharding must be 'replicated' or 'sharded', got "
+                f"{table_sharding!r}")
         self.model = get_model(model)
         self.params = params
         self.norm = norm
@@ -176,17 +288,29 @@ class KGQueryEngine:
         self.backend = backend
         self.mesh = mesh
         self.chunk = chunk
+        self.table_sharding = table_sharding
         self.n_entities = int(params["ent"].shape[0])
         self.n_relations = int(params["rel"].shape[0])
+        if table_sharding == "sharded":
+            eval_device._check_sharded_mesh(backend, mesh, n_workers)
+            R = merge_lib.shard_rows(self.n_entities, n_workers)
+            # pad once at construction; rank()/score() keep the original
+            self._padded_params = eval_device._pad_ent_tables(
+                self.model, params, n_workers * R)
+        else:
+            self._padded_params = None
 
     # -- layout helpers (shared with the eval engine) ----------------------
 
     def _shard_queries(self, triplets: np.ndarray, exclude,
-                       chunk: Optional[int] = None):
+                       chunk: Optional[int] = None,
+                       split_queries: bool = True):
         Q = len(triplets)
+        # sharded tables keep every query on every shard (W=1 layout):
+        # the entity axis, not the query axis, is what splits W ways
+        W = self.n_workers if split_queries else 1
         S, C, Qp = eval_device._layout(
-            Q, self.chunk if chunk is None else chunk, self.n_workers)
-        W = self.n_workers
+            Q, self.chunk if chunk is None else chunk, W)
         q = eval_device._shard(
             eval_device._pad_rows(np.asarray(triplets, np.int32), Qp),
             W, S, C)
@@ -238,10 +362,20 @@ class KGQueryEngine:
     def _entity_topk(self, triplets, side, k, exclude,
                      chunk: Optional[int] = None) -> QueryResult:
         k = min(int(k), self.n_entities)
-        q, ex, Q = self._shard_queries(triplets, exclude, chunk)
-        ids, energies = _entity_topk_device(
-            self.model, self.params, q, ex, side=side, norm=self.norm,
-            k=k, backend=self.backend, mesh=self.mesh, axis_name="workers")
+        if self.table_sharding == "sharded":
+            q, ex, Q = self._shard_queries(
+                triplets, exclude, chunk, split_queries=False)
+            ids, energies = _entity_topk_sharded(
+                self.model, self._padded_params, q[0], ex[0], side=side,
+                norm=self.norm, k=k, backend=self.backend, mesh=self.mesh,
+                axis_name="workers", n_shards=self.n_workers,
+                n_entities=self.n_entities)
+        else:
+            q, ex, Q = self._shard_queries(triplets, exclude, chunk)
+            ids, energies = _entity_topk_device(
+                self.model, self.params, q, ex, side=side, norm=self.norm,
+                k=k, backend=self.backend, mesh=self.mesh,
+                axis_name="workers")
         return QueryResult(_unshard_k(ids, Q), _unshard_k(energies, Q))
 
     def query_relations(self, heads, tails, k: int = 10,
@@ -285,6 +419,7 @@ class KGQueryEngine:
         out = eval_device.entity_ranks_device(
             self.params, np.asarray(triplets, np.int32), self.norm, masks,
             model=self.model, chunk=self.chunk, n_workers=self.n_workers,
-            backend=self.backend, mesh=self.mesh, fused=fused)
+            backend=self.backend, mesh=self.mesh, fused=fused,
+            table_sharding=self.table_sharding)
         group = "filtered_ranks" if cand_masks is not None else "raw_ranks"
         return out[group][side]

@@ -20,7 +20,9 @@ recompile, a cold cache, or a restart, ever, on the steady-state path:
     pre-compiled ``(W, 1, bucket, ...)`` shapes.  ``warmup()`` compiles
     every bucket up front; after it, a mixed-size query stream runs with
     **zero steady-state recompiles** (measured against the jit compile
-    cache, not assumed — see ``ServerStats.steady_recompiles``).
+    cache, not assumed — see ``ServerStats.steady_recompiles``;
+    ``recompile_counter`` names the counter actually live, and falling
+    back to the weaker shape registry warns instead of passing silently).
   * **LRU answer cache** — hot ``(h, r, k, exclusion)`` queries are
     answered from an LRU keyed by the owning artifact's
     ``KnowledgeBase.fingerprint()`` (model + tables + graph content), so
@@ -60,6 +62,7 @@ from typing import TYPE_CHECKING, Callable, Dict, Optional, Tuple
 import numpy as np
 
 from repro.serve import kg_engine
+from repro.util import warn_fresh
 
 if TYPE_CHECKING:       # repro.kb imports this package — keep it lazy
     from repro.kb import KnowledgeBase
@@ -74,12 +77,16 @@ def _pow2ceil(n: int) -> int:
 def _engine_cache_size() -> Optional[int]:
     """Total compiled-computation count of the engine's jitted entry
     points — the ground truth behind ``steady_recompiles``.  ``None``
-    when the running jax version doesn't expose ``_cache_size`` (the
-    server then falls back to its own shape registry)."""
+    only when the running jax version doesn't expose ``_cache_size``
+    on jitted functions (AttributeError) or exposes it with a different
+    signature (TypeError); the server then falls back to its own shape
+    registry.  Any *other* exception propagates — the pre-fix bare
+    ``except`` swallowed real engine bugs here too, which silently
+    disarmed the recompile gate (``fresh`` looked like 0 forever)."""
     try:
         return (kg_engine._entity_topk_device._cache_size()
                 + kg_engine._relation_topk_device._cache_size())
-    except Exception:
+    except (AttributeError, TypeError):
         return None
 
 
@@ -112,6 +119,7 @@ class ServerStats:
     bucket_waves: Dict[int, int]
     warm_compiles: int
     steady_recompiles: int
+    recompile_counter: str      # "jit-cache" | "shape-registry"
     swaps: int
     cache_invalidations: int
     p50_ms: float
@@ -186,8 +194,8 @@ class KGServer:
     """Continuous-batching KG link-prediction server (module docstring).
 
     ``max_batch`` caps a wave; ``max_wait_us`` bounds how long the oldest
-    pending request waits for peers.  ``n_workers``/``backend``/``mesh``
-    pick the engine sharding every tenant uses.  ``default_k`` is the k
+    pending request waits for peers.  ``n_workers``/``backend``/``mesh``/
+    ``table_sharding`` pick the engine sharding every tenant uses.  ``default_k`` is the k
     ``submit`` uses when none is given *and* the k ``warmup`` compiles
     for — traffic at other k values compiles its own bucket set on first
     use.  ``warm=True`` warms every bucket at construction.
@@ -209,6 +217,7 @@ class KGServer:
         n_workers: int = 1,
         backend: str = "vmap",
         mesh=None,
+        table_sharding: str = "replicated",
         slo_p99_ms: Optional[float] = None,
         warm: bool = False,
         on_wave_start: Optional[Callable] = None,
@@ -223,6 +232,7 @@ class KGServer:
         self.n_workers = n_workers
         self.backend = backend
         self.mesh = mesh
+        self.table_sharding = table_sharding
         self.slo_p99_ms = slo_p99_ms
         self.on_wave_start = on_wave_start
         self.buckets = tuple(
@@ -235,6 +245,12 @@ class KGServer:
         self._cache = _LRU(cache_size)
         self._tenants: Dict[str, _Tenant] = {}
         self._seen_shapes: set = set()   # fallback recompile registry
+        # which counter steady_recompiles is actually measured against;
+        # probed now so stats() is meaningful before the first wave, and
+        # re-recorded at every gate so it reflects what really answered
+        self._recompile_source = ("jit-cache" if _engine_cache_size()
+                                  is not None else "shape-registry")
+        self._fallback_warned = False
         self._warmed = False
         self._accepting = True
         self._paused = False
@@ -300,7 +316,8 @@ class KGServer:
 
     def _make_tenant(self, kb: KnowledgeBase) -> _Tenant:
         engine = kb.engine(n_workers=self.n_workers, backend=self.backend,
-                           mesh=self.mesh)
+                           mesh=self.mesh,
+                           table_sharding=self.table_sharding)
         return _Tenant(kb=kb, engine=engine, fp=kb.fingerprint())
 
     def tenant_fingerprint(self, tenant: str = "default") -> str:
@@ -399,9 +416,31 @@ class KGServer:
             after = _engine_cache_size()
         fresh = (after - before) if (before is not None
                                      and after is not None) else 0
+        self._note_recompile_source(
+            "jit-cache" if before is not None and after is not None
+            else "shape-registry")
         with self._lock:
             self._warm_compiles += fresh
         return fresh
+
+    def _note_recompile_source(self, source: str) -> None:
+        """Record which counter the recompile gate actually used this
+        round, and warn — once per server, via ``warn_fresh`` so tests
+        and ``-W error`` see it — the first time the weaker shape-registry
+        fallback answers for it."""
+        warn = False
+        with self._lock:
+            self._recompile_source = source
+            if source == "shape-registry" and not self._fallback_warned:
+                self._fallback_warned = True
+                warn = True
+        if warn:
+            warn_fresh(
+                "KGServer: this jax exposes no jit _cache_size, so "
+                "steady_recompiles is counted from the server's own "
+                "first-seen-shape registry — it can miss recompiles the "
+                "jit cache would have caught (stats().recompile_counter "
+                "records which counter is live)", stacklevel=3)
 
     def _shape_key(self, tenant: _Tenant, kind: str, k: int, bucket: int,
                    width: Optional[int]) -> Tuple:
@@ -411,7 +450,7 @@ class KGServer:
         return (tenant.engine.model.name, tenant.engine.norm,
                 tenant.engine.n_entities, tenant.engine.n_relations,
                 tenant.kb.dim, self.n_workers, self.backend,
-                kind, k, bucket, width)
+                self.table_sharding, kind, k, bucket, width)
 
     def _mark_shape(self, tenant, kind, k, bucket, width) -> None:
         self._seen_shapes.add(self._shape_key(tenant, kind, k, bucket,
@@ -606,9 +645,11 @@ class KGServer:
             after = _engine_cache_size()
         if before is not None and after is not None:
             fresh = after - before
+            self._note_recompile_source("jit-cache")
         else:                       # registry fallback (no _cache_size)
             key = self._shape_key(tenant, kind, k, bucket, width)
             fresh = 0 if key in self._seen_shapes else 1
+            self._note_recompile_source("shape-registry")
         self._mark_shape(tenant, kind, k, bucket, width)
         t_done = time.monotonic()
         answers = []
@@ -652,6 +693,7 @@ class KGServer:
                 bucket_waves=dict(sorted(self._bucket_waves.items())),
                 warm_compiles=self._warm_compiles,
                 steady_recompiles=self._steady_recompiles,
+                recompile_counter=self._recompile_source,
                 swaps=self._swaps,
                 cache_invalidations=self._invalidations,
                 p50_ms=p50,

@@ -56,16 +56,18 @@ def test_missing_split_files_are_empty(tmp_path):
     assert len(kg.valid) == 0 and len(kg.test) == 0
 
 
-def test_cache_roundtrip_and_mmap(tsv_dir, tmp_path):
+def test_cache_roundtrip_and_mmap(tsv_dir, tmp_path, monkeypatch):
     """cache_dir persists the encoded splits; a cached (and mmapped) load
-    is bit-identical to the streamed parse, including the vocabulary."""
+    is bit-identical to the streamed parse, including the vocabulary —
+    and, with the sources unchanged, never re-parses the TSVs."""
     cache = str(tmp_path / "cache")
     first = datasets.load_dataset(tsv_dir, cache_dir=cache)
     assert os.path.exists(os.path.join(cache, "meta.json"))
-    # cached reload must not touch the TSVs: poison them
-    for name in datasets.SPLIT_FILES:
-        with open(os.path.join(tsv_dir, name), "w") as f:
-            f.write("poisoned\tpoisoned\n")
+    # unchanged sources: the cache must be served without touching the
+    # parser at all
+    def boom(*a, **k):
+        raise AssertionError("cache was bypassed: _load_raw called")
+    monkeypatch.setattr(datasets, "_load_raw", boom)
     for mmap in (True, False):
         again = datasets.load_dataset(tsv_dir, cache_dir=cache, mmap=mmap)
         _assert_same_kg(first, again)
@@ -73,6 +75,63 @@ def test_cache_roundtrip_and_mmap(tsv_dir, tmp_path):
     ent2id, rel2id = datasets.load_vocab(cache)
     assert len(ent2id) == first.n_entities
     assert len(rel2id) == first.n_relations
+
+
+def test_stale_cache_reingests(tsv_dir, tmp_path):
+    """Editing a source TSV after caching must re-ingest, not serve the
+    stale cache (the pre-fix behavior checked only file existence)."""
+    cache = str(tmp_path / "cache")
+    first = datasets.load_dataset(tsv_dir, cache_dir=cache)
+    with open(os.path.join(tsv_dir, "train.txt"), "a", encoding="utf-8") as f:
+        f.write("brand_new_entity\tr0\te2\n")
+    again = datasets.load_dataset(tsv_dir, cache_dir=cache)
+    assert again.n_entities == first.n_entities + 1
+    assert len(again.train) == len(first.train) + 1
+    # the rewritten cache is fresh again: a third load serves it verbatim
+    third = datasets.load_dataset(tsv_dir, cache_dir=cache)
+    _assert_same_kg(again, third)
+    # a split file APPEARING also invalidates (it changes the dataset)
+    extra_dir = str(tmp_path / "ds2")
+    os.makedirs(extra_dir)
+    datasets.write_tsv(os.path.join(extra_dir, "train.txt"),
+                       np.array([[0, 0, 1]], np.int32))
+    cache2 = str(tmp_path / "cache2")
+    a = datasets.load_dataset(extra_dir, cache_dir=cache2)
+    assert len(a.valid) == 0
+    datasets.write_tsv(os.path.join(extra_dir, "valid.txt"),
+                       np.array([[1, 0, 0]], np.int32))
+    b = datasets.load_dataset(extra_dir, cache_dir=cache2)
+    assert len(b.valid) == 1
+
+
+def test_legacy_cache_without_sources_reingests(tsv_dir, tmp_path):
+    """A pre-contract cache (meta.json lacking 'sources') counts as stale
+    once, then upgrades itself to the new format."""
+    import json
+
+    cache = str(tmp_path / "cache")
+    first = datasets.load_dataset(tsv_dir, cache_dir=cache)
+    meta_path = os.path.join(cache, "meta.json")
+    with open(meta_path, encoding="utf-8") as f:
+        meta = json.load(f)
+    del meta["sources"]
+    with open(meta_path, "w", encoding="utf-8") as f:
+        json.dump(meta, f)
+    again = datasets.load_dataset(tsv_dir, cache_dir=cache)
+    _assert_same_kg(first, again)
+    with open(meta_path, encoding="utf-8") as f:
+        assert "sources" in json.load(f)
+
+
+def test_removed_sources_still_serve_cache(tsv_dir, tmp_path):
+    """Deleting ALL source TSVs (ship-the-cache workflow) keeps the cache
+    usable — nothing is left to re-ingest from."""
+    cache = str(tmp_path / "cache")
+    first = datasets.load_dataset(tsv_dir, cache_dir=cache)
+    for name in datasets.SPLIT_FILES:
+        os.remove(os.path.join(tsv_dir, name))
+    again = datasets.load_dataset(tsv_dir, cache_dir=cache)
+    _assert_same_kg(first, again)
 
 
 def test_single_file_split_deterministic(tmp_path):

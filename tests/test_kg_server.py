@@ -12,6 +12,7 @@ artifact fingerprint invalidates the answer cache, one that doesn't
 keeps it.
 """
 import threading
+import warnings
 
 import jax
 import numpy as np
@@ -340,6 +341,70 @@ def test_stats_and_error_surface(kb, tiny_kg, uniq):
         srv.stop()
     with pytest.raises(RuntimeError, match="stopped"):
         srv.submit("tails", 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# Recompile-gate counter: narrow fallback, loud, visible in stats (satellite)
+# ---------------------------------------------------------------------------
+
+def test_recompile_counter_reports_live_source(server):
+    """stats() names the counter steady_recompiles was measured against —
+    the jit cache when this jax exposes it, the shape registry otherwise."""
+    from repro.serve import server as server_mod
+    expected = ("jit-cache" if server_mod._engine_cache_size() is not None
+                else "shape-registry")
+    assert server.stats().recompile_counter == expected
+
+
+def test_cache_size_fallback_is_narrow(monkeypatch):
+    """None only for the missing/incompatible-``_cache_size`` jax surface;
+    any other exception propagates.  The pre-fix bare except swallowed
+    real engine bugs here, which made the recompile gate pass vacuously
+    (``fresh`` looked like 0 forever)."""
+    from repro.serve import kg_engine
+    from repro.serve import server as server_mod
+
+    class NoCacheSize:
+        def __getattr__(self, name):
+            raise AttributeError(name)
+
+    monkeypatch.setattr(kg_engine, "_entity_topk_device", NoCacheSize())
+    assert server_mod._engine_cache_size() is None
+
+    class Exploding:
+        @staticmethod
+        def _cache_size():
+            raise RuntimeError("real engine bug")
+
+    monkeypatch.setattr(kg_engine, "_entity_topk_device", Exploding())
+    with pytest.raises(RuntimeError, match="real engine bug"):
+        server_mod._engine_cache_size()
+
+
+def test_registry_fallback_warns_once_and_still_counts(kb, tiny_kg, uniq,
+                                                       monkeypatch):
+    """When the jit cache is unavailable the server says so (one
+    warn_fresh per server, stats().recompile_counter flips) instead of
+    silently weakening the gate — and the shape registry still catches a
+    genuinely novel steady-state shape."""
+    from repro.serve import server as server_mod
+    monkeypatch.setattr(server_mod, "_engine_cache_size", lambda: None)
+    with pytest.warns(UserWarning, match="first-seen-shape registry"):
+        srv = KGServer(kb, max_batch=4, max_wait_us=WAIT_US, default_k=10,
+                       warm=True)
+    try:
+        assert srv.stats().recompile_counter == "shape-registry"
+        h, r, _ = tiny_kg.test[uniq[0]]
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            srv.query_tails(h, r)        # warmed shape: no recompile,
+        assert not [w for w in rec       # and no second warning
+                    if "shape registry" in str(w.message)]
+        assert srv.stats().steady_recompiles == 0
+        srv.query_tails(h, r, k=3)       # never-warmed k: fresh shape
+        assert srv.stats().steady_recompiles >= 1
+    finally:
+        srv.stop()
 
 
 def test_filtered_needs_graph(kb):

@@ -176,6 +176,47 @@ def test_sparse_matrix(small_kg, model, strategy, pipeline):
 
 
 # ---------------------------------------------------------------------------
+# Delta-buffer overflow: fail loudly, never corrupt silently (satellite)
+# ---------------------------------------------------------------------------
+
+def test_undersized_touched_capacity_raises_at_config_time(small_kg):
+    """An override below the analytic touched-rows bound would make
+    pack_delta silently drop rows — train() refuses it before any epoch
+    runs (the pre-fix behavior was exactly that silent corruption)."""
+    with pytest.raises(ValueError, match="below the analytic bound"):
+        _fit(small_kg, merge_transport="sparse", touched_capacity=3)
+
+
+def test_touched_capacity_must_match_transport(small_kg):
+    with pytest.raises(ValueError, match="sparse"):
+        _fit(small_kg, merge_transport="dense", touched_capacity=100)
+
+
+@pytest.mark.parametrize("pipeline", ["host", "device"])
+def test_overflow_raises_at_reduce_boundary(small_kg, pipeline, monkeypatch):
+    """Runtime seatbelt behind the config check: if the capacity bound
+    itself ever regresses (simulated by patching it tiny), the on-device
+    overflow count surfaces at the next Reduce boundary as a RuntimeError
+    instead of training on over a corrupted merge."""
+    monkeypatch.setattr(merge_lib, "touched_capacity",
+                        lambda n_rows, batch, steps, k, role: 2)
+    kw = dict(merge_transport="sparse", pipeline=pipeline)
+    if pipeline == "device":
+        kw.update(epochs=4, block_epochs=2)
+    with pytest.raises(RuntimeError, match="delta overflow"):
+        _fit(small_kg, **kw)
+
+
+def test_generous_touched_capacity_still_bitwise(small_kg):
+    """Capacity padding is inert: an oversized validated override packs
+    the same touched rows, so results stay bit-identical to dense."""
+    dense = _fit(small_kg, merge_transport="dense")
+    sparse = _fit(small_kg, merge_transport="sparse",
+                  touched_capacity=small_kg.n_entities)
+    _assert_identical(dense, sparse)
+
+
+# ---------------------------------------------------------------------------
 # The compact Map step (sgd_step_sparse) in isolation
 # ---------------------------------------------------------------------------
 
