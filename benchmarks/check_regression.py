@@ -39,7 +39,7 @@ import sys
 
 DEFAULT_NAMES = ("BENCH_pipeline.json", "BENCH_eval.json",
                  "BENCH_serve.json", "BENCH_latency.json",
-                 "BENCH_scale.json")
+                 "BENCH_scale.json", "BENCH_async.json")
 RATE_SUFFIX = "_per_s"
 # measured (non-identity) fields: gated bands or recorded-only
 MEASURED_SUFFIXES = (RATE_SUFFIX, "_speedup", "_ms", "_rate",

@@ -18,7 +18,10 @@ vs dense Reduce transport epochs/sec + merge wire bytes vs graph size up
 to 1e6 entities, sharded-table per-device residency + sharded-Reduce
 rate at W in {2,4,8}, TSV ingest throughput, large-graph fit->evaluate
 round trip -> ``BENCH_scale.json``; ``--quick`` keeps the 50k-entity
-train + shard_table cells + ingest row).
+train + shard_table cells + ingest row), and the async bench
+(time-to-reference-quality of the bounded-staleness / joint-negative
+/ partitioner training variants vs the synchronous baseline at W=4
+-> ``BENCH_async.json``; ``--quick`` keeps the sync + joint-48 cells).
 
 ``--quick`` is the CI bench-regression profile: the W in {1, 4}
 cross-section of the grids (and single-repeat trace overhead) — the
@@ -66,6 +69,7 @@ def main() -> None:
     ap.add_argument("--serve-out", default="BENCH_serve.json")
     ap.add_argument("--latency-out", default="BENCH_latency.json")
     ap.add_argument("--scale-out", default="BENCH_scale.json")
+    ap.add_argument("--async-out", default="BENCH_async.json")
     ap.add_argument("--out-dir", default=".",
                     help="directory the BENCH_*.json files are written to")
     ap.add_argument("--quick", action="store_true",
@@ -76,8 +80,9 @@ def main() -> None:
                     help="also run the printed-only benchmark suites")
     args = ap.parse_args()
 
-    from benchmarks import (bench_eval, bench_latency, bench_pipeline,
-                            bench_scale, bench_serve, bench_trace)
+    from benchmarks import (bench_async, bench_eval, bench_latency,
+                            bench_pipeline, bench_scale, bench_serve,
+                            bench_trace)
 
     os.makedirs(args.out_dir, exist_ok=True)
 
@@ -203,6 +208,28 @@ def main() -> None:
         },
         "rows": scale_rows,
     }, path(args.scale_out))
+
+    print("== bench:async ==", flush=True)
+    t0 = time.time()
+    async_rows = bench_async.run(verbose=True, model=args.model,
+                                 quick=args.quick)
+    print(f"== bench:async done ({time.time() - t0:.0f}s) ==", flush=True)
+    _write({
+        "bench": "async",
+        **_env(),
+        "config": {
+            "epochs": bench_async.EPOCHS,
+            "eval_every": bench_async.EVAL_EVERY,
+            "dim": bench_async.DIM,
+            "batch_size": bench_async.BATCH,
+            "workers": bench_async.WORKERS,
+            "norm": bench_async.NORM,
+            "ref_band": bench_async.REF_BAND,
+            "graph": "synthetic_kg(1, n_entities=300, n_relations=10, "
+                     "n_triplets=6000)",
+        },
+        "rows": async_rows,
+    }, path(args.async_out))
 
     if args.full:
         from benchmarks import run as run_mod

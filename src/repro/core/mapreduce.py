@@ -65,6 +65,33 @@ Epoch scheduling (``EpochSchedule``, device pipeline only):
                         donate the params buffer to each block call so the
                         accelerator never holds two copies of the tables.
 
+Beyond the paper's barrier (the scheduling lab; all composable):
+
+  * ``staleness=S``     — bounded-staleness Reduce (SGD + device pipeline):
+                          worker ``w`` re-reads the merged global view only
+                          at rounds ``r`` with ``(r + o_w) % (S+1) == 0``
+                          (plus round 0), training against a view up to S
+                          rounds stale in between; every worker's deltas
+                          still merge every round (participation-masked
+                          stale Reduce, ``merge.merge_*_stale``).  The
+                          refresh schedule is ``fold_in``-pure in
+                          (seed, round, worker) — see ``make_block_fn`` —
+                          so S=0 is bit-identical to the synchronous path
+                          and vmap == shard_map bitwise.  Checkpoint/resume
+                          is refused under S>0 (worker locals are scratch
+                          state the manifest cannot capture).
+  * ``partition=...``   — ``data/kg.PARTITIONERS``: 'balanced' (the paper's
+                          random equal split), 'stratified', 'degree'
+                          (degree-stratified mix per worker), 'overlap'
+                          (greedy minimal cross-worker entity overlap);
+                          all thread through on-device re-partitioning.
+  * ``negatives='joint'`` — DGL-KE-style joint sampling (both paradigms):
+                          one shared corruption batch of ``neg_candidates``
+                          scored against every positive as a (B, C) matrix
+                          (a matmul for TransE l2) instead of per-triplet
+                          gathers; gold-colliding candidates are masked.
+                          See ``core/negative.py`` + ``models/base.joint_*``.
+
 In-training evaluation: ``train(..., eval_loop=EvalLoopConfig(...))`` (or
 ``kg.fit(eval_every=K)``) runs the evaluation protocol at Reduce
 boundaries — the host pipeline evaluates between epochs, the device driver
@@ -194,6 +221,7 @@ def resume_config(tcfg: KGConfig, cfg: MapReduceConfig) -> dict:
         "n_workers": cfg.n_workers,
         "batch_size": cfg.batch_size,
         "partition": cfg.partition,
+        "staleness": cfg.staleness,
         "strategy": cfg.strategy if cfg.paradigm == "sgd" else None,
         "merge_every": cfg.schedule.merge_every,
         "repartition_every": cfg.schedule.repartition_every,
@@ -257,7 +285,10 @@ class MapReduceConfig:
     merge_transport: str = "dense"  # 'dense' | 'sparse'
     backend: str = "vmap"           # 'vmap' | 'shard_map'
     batch_size: int = 256
-    partition: str = "balanced"     # 'balanced' | 'stratified'
+    # host partitioner (data/kg.PARTITIONERS): 'balanced' | 'stratified' |
+    # 'degree' (degree-stratified) | 'overlap' (greedy overlap-minimizing).
+    # The `partitioner` property is the public alias.
+    partition: str = "balanced"
     axis_name: str = "workers"
     model: str = "transe"           # kg_models registry name
     pipeline: str = "host"          # 'host' | 'device' (see module docstring)
@@ -287,6 +318,24 @@ class MapReduceConfig:
     # the bound and raises before any epoch runs; the runtime overflow
     # check (delta_overflow) is the second seatbelt.
     touched_capacity: Optional[int] = None
+    # Bounded-staleness scheduling (SGD paradigm, device pipeline): S > 0
+    # lets each worker keep training against a global view up to S Reduce
+    # rounds stale — worker w refreshes its local copy from the global view
+    # only at rounds r with (r + o_w) % (S+1) == 0 (o_w a fold_in-derived
+    # per-worker phase offset, so refreshes stagger instead of re-creating
+    # the barrier), while EVERY worker's this-round deltas still merge into
+    # the global view each round via the participation-masked stale Reduce
+    # (core/merge.py "stale" functions).  S=0 dispatches to the synchronous
+    # path verbatim — bit-identical by construction.  The whole staleness
+    # schedule is a pure function of (seed, worker, round): same seed =>
+    # same result, on either backend (the determinism contract,
+    # docs/architecture.md; tested in tests/test_async_schedule.py).
+    staleness: int = 0
+
+    @property
+    def partitioner(self) -> str:
+        """Public alias of ``partition`` (the ISSUE-9 partitioner knob)."""
+        return self.partition
 
     def __post_init__(self):
         if self.paradigm not in ("sgd", "bgd"):
@@ -321,6 +370,29 @@ class MapReduceConfig:
             raise ValueError(f"bad backend {self.backend!r}")
         if self.pipeline not in ("host", "device"):
             raise ValueError(f"bad pipeline {self.pipeline!r}")
+        if self.partition not in kg_lib.PARTITIONERS:
+            raise ValueError(
+                f"bad partition {self.partition!r}; want one of "
+                f"{tuple(kg_lib.PARTITIONERS)}")
+        if (self.partition == "overlap"
+                and self.schedule.repartition_every is not None):
+            raise ValueError(
+                "partition='overlap' cannot re-partition on device: the "
+                "overlap-minimizing split is a host-side greedy stream, "
+                "not a permutation the compiled pipeline can redraw — "
+                "drop repartition_every or pick 'balanced'/'stratified'/"
+                "'degree'")
+        if self.staleness < 0:
+            raise ValueError(
+                f"staleness must be >= 0, got {self.staleness}")
+        if self.staleness > 0 and (
+            self.paradigm != "sgd" or self.pipeline != "device"
+        ):
+            raise ValueError(
+                "staleness > 0 is the bounded-staleness SGD Reduce on the "
+                "device pipeline (BGD's gradient Reduce has no local copies "
+                "to go stale; the host loop Reduces synchronously every "
+                "epoch) — set paradigm='sgd', pipeline='device'")
         if self.pipeline == "host" and (
             self.schedule.block_epochs != 1
             or self.schedule.merge_every != 1
@@ -524,6 +596,115 @@ def _merge_tables_sparse_collective(
                 local[name], base[name],
                 functools.partial(model.normalize_rows, name), m, key)
     return out, jax.lax.pmax(overflow, cfg.axis_name)
+
+
+def _merge_tables_stale_stacked(
+    model: KGModel, strategy: str, stacked: Params, stats, merge_key: jax.Array,
+    base: Params,
+) -> Params:
+    """Bounded-staleness Reduce of the stacked worker copies into the
+    global view ``base`` — same sorted-name order and per-table fold-out
+    keys as :func:`_merge_tables_stacked`, but participation-masked
+    (:func:`merge_lib.merge_stacked_stale`): only this-round touchers
+    contribute per row, rows nobody touched keep the global view."""
+    roles = model.param_roles()
+    names = sorted(stacked.keys())
+    keys = jax.random.split(merge_key, len(names))
+    out = {}
+    for name, key in zip(names, keys):
+        count, loss = _stats_for_role(stats, roles[name])
+        out[name] = merge_lib.merge_stacked_stale(
+            strategy, stacked[name], count, loss, stats.mean_loss,
+            base[name], key)
+    return out
+
+
+def _merge_tables_stale_sparse(
+    model: KGModel,
+    cfg: MapReduceConfig,
+    stacked: Params,
+    stats,
+    merge_key: jax.Array,
+    base: Params,                # the global view being merged into
+    n_steps: int,
+    k_epochs: int,
+) -> tuple[Params, jax.Array]:
+    """Sparse-transport bounded-staleness Reduce (vmap backend): pack each
+    worker's touched rows, stale-merge the candidate union into the global
+    view — bit-identical to :func:`_merge_tables_stale_stacked`.  No virgin
+    reconstruction: non-touchers are excluded per row, so the transport
+    needs no shared round input (workers started from different views).
+    Returns ``(params, overflow)`` like the synchronous sparse merge."""
+    roles = model.param_roles()
+    names = sorted(stacked.keys())
+    keys = jax.random.split(merge_key, len(names))
+    out = {}
+    overflow = jnp.zeros((), jnp.int32)
+    for name, key in zip(names, keys):
+        count, loss = _stats_for_role(stats, roles[name])
+        n_rows = stacked[name].shape[1]
+        cap = _delta_capacity(cfg, n_rows, n_steps, k_epochs, roles[name])
+        overflow = jnp.maximum(overflow, merge_lib.delta_overflow(count, cap))
+        pack = functools.partial(
+            merge_lib.pack_delta, capacity=cap, n_rows=n_rows)
+        idx, vals, cnt, lss = jax.vmap(pack)(stacked[name], count, loss)
+        if cfg.table_sharding == "sharded":
+            out[name] = merge_lib.merge_sparse_stale_sharded_stacked(
+                cfg.strategy, idx, vals, cnt, lss, stats.mean_loss,
+                base[name], key, n_shards=cfg.n_workers)
+        else:
+            out[name] = merge_lib.merge_sparse_stale(
+                cfg.strategy, idx, vals, cnt, lss, stats.mean_loss,
+                base[name], key)
+    return out, overflow
+
+
+def _merge_tables_stale_collective(
+    model: KGModel,
+    cfg: MapReduceConfig,
+    local: Params,
+    stats,
+    worker_loss: jax.Array,
+    merge_key: jax.Array,
+    base: Params,                # the replicated global view
+    n_steps: int,
+    k_epochs: int,
+) -> tuple[Params, jax.Array]:
+    """Bounded-staleness Reduce inside shard_map.  Sparse transport:
+    all-gather the packed buffers and replay the stacked stale merge
+    (shard-routed under ``table_sharding='sharded'``) — bitwise the vmap
+    backend.  Dense transport: all-gather tables + stats and replay
+    :func:`merge_lib.merge_stacked_stale` (the stale mode has no psum
+    winner-select — participation masks need every toucher's row, so the
+    all-gather replay IS the collective path, keeping both backends
+    bitwise-equal).  Must run inside shard_map over ``cfg.axis_name``."""
+    roles = model.param_roles()
+    names = sorted(local.keys())
+    keys = jax.random.split(merge_key, len(names))
+    ax = cfg.axis_name
+    wl = jax.lax.all_gather(worker_loss, ax)                      # (W,)
+    out = {}
+    overflow = jnp.zeros((), jnp.int32)
+    for name, key in zip(names, keys):
+        count, loss = _stats_for_role(stats, roles[name])
+        if cfg.merge_transport == "sparse":
+            n_rows = local[name].shape[0]
+            cap = _delta_capacity(cfg, n_rows, n_steps, k_epochs, roles[name])
+            overflow = jnp.maximum(
+                overflow, merge_lib.delta_overflow(count, cap))
+            packed = merge_lib.pack_delta(local[name], count, loss, cap,
+                                          n_rows)
+            idx, vals, cnt, lss = all_gather_deltas(packed, ax)
+            out[name] = merge_lib.merge_sparse_stale_collective(
+                cfg.strategy, idx, vals, cnt, lss, wl, base[name], ax, key,
+                sharded=cfg.table_sharding == "sharded")
+        else:
+            stacked = jax.lax.all_gather(local[name], ax)
+            counts = jax.lax.all_gather(count, ax)
+            losses = jax.lax.all_gather(loss, ax)
+            out[name] = merge_lib.merge_stacked_stale(
+                cfg.strategy, stacked, counts, losses, wl, base[name], key)
+    return out, jax.lax.pmax(overflow, ax)
 
 
 def sgd_epoch_vmap(
@@ -861,6 +1042,10 @@ _DEVICE_STREAM_TAG = 0xD417A
 # off the same root so the original three streams keep their pre-existing
 # values and repartition_every=None runs are unchanged bit-for-bit.
 _REPARTITION_TAG = 0x5917
+# fold_in tag for the bounded-staleness refresh-phase stream — folded off
+# the same root (same idiom as _REPARTITION_TAG) so staleness=0 runs keep
+# every pre-existing stream bit-for-bit.
+_STALENESS_TAG = 0x57A1E
 
 
 def _device_keys(seed: int) -> tuple[jax.Array, ...]:
@@ -871,7 +1056,8 @@ def _device_keys(seed: int) -> tuple[jax.Array, ...]:
     root = jax.random.fold_in(jax.random.PRNGKey(seed), _DEVICE_STREAM_TAG)
     k_data, k_neg, k_merge = jax.random.split(root, 3)
     k_part = jax.random.fold_in(root, _REPARTITION_TAG)
-    return k_data, k_neg, k_merge, k_part
+    k_stale = jax.random.fold_in(root, _STALENESS_TAG)
+    return k_data, k_neg, k_merge, k_part, k_stale
 
 
 def _zero_stats(tcfg: KGConfig, lead: tuple = ()) -> EpochStats:
@@ -896,6 +1082,7 @@ def make_block_fn(
     seed: int = 0,
     donate: bool = False,
     with_overflow: bool = False,
+    strata: Optional[jax.Array] = None,
 ) -> Callable:
     """Returns jitted ``block_fn(params, epoch_ids) -> (params, losses)``
     — or ``(params, losses, overflow)`` with ``with_overflow=True``, where
@@ -929,15 +1116,38 @@ def make_block_fn(
     copy of the embedding tables; callers must treat the passed params as
     consumed (``_train_device`` does).
 
+    ``cfg.staleness=S > 0`` switches the SGD paradigm to the bounded-
+    staleness block functions: the state threaded through ``block_fn`` (and
+    between blocks) becomes the tuple ``(global_view, worker_locals)``
+    instead of a bare params dict — worker locals persist across rounds
+    (that's the whole point), so they must persist across *block* calls too
+    or block slicing would change results.  Worker ``w`` re-reads the
+    global view only at rounds ``r`` with ``(r + o_w) % (S + 1) == 0``
+    (plus round 0), where ``o_w`` is a per-worker phase offset drawn from
+    the dedicated ``_STALENESS_TAG`` stream; every worker's this-round
+    deltas still merge into the global view each round via the
+    participation-masked stale Reduce (``merge.merge_*_stale``).  All of it
+    is ``fold_in``-pure in (seed, round, worker), so block invariance and
+    the vmap/shard_map bitwise agreement carry over.
+
+    ``strata`` (host-computed per-triplet stratum ids over the flattened
+    partition, in partition order) makes the re-partition rounds stratified:
+    each round re-shuffles *within* strata (``data/kg``'s
+    ``repartition_perm_stratified``), preserving the degree-stratified
+    partitioner's mix per worker.  ``None`` keeps the original unstratified
+    permutation byte-for-byte.
+
     The vmap and shard_map backends derive identical per-worker keys (vmapped
     ``fold_in(·, w)`` vs ``fold_in(·, axis_index)``), so the two backends see
     the same batches and negatives."""
     model = _resolve(cfg, model)
     W, B, K = cfg.n_workers, cfg.batch_size, cfg.schedule.merge_every
     M = cfg.schedule.repartition_every
+    S = cfg.staleness
     n_w = partitioned.shape[1]
     ax = cfg.axis_name
-    k_data, k_neg, k_merge, k_part = _device_keys(seed)
+    k_data, k_neg, k_merge, k_part, k_stale = _device_keys(seed)
+    strata = None if strata is None else jnp.asarray(strata)
     run = functools.partial(
         model.run_epoch, cfg=tcfg,
         sparse_apply=cfg.merge_transport == "sparse")
@@ -951,7 +1161,7 @@ def make_block_fn(
             return partitioned
         r = epoch_ids[0] // M
         return kg_lib.device_repartition(
-            jax.random.fold_in(k_part, r), partitioned, r)
+            jax.random.fold_in(k_part, r), partitioned, r, strata)
 
     def worker_block_part(epoch_ids: jax.Array, w: jax.Array,
                           part_w: jax.Array) -> jax.Array:
@@ -963,8 +1173,12 @@ def make_block_fn(
             return part_w
         r = epoch_ids[0] // M
         flat = jax.lax.all_gather(part_w, ax, axis=0, tiled=True)
-        perm = kg_lib.repartition_perm(
-            jax.random.fold_in(k_part, r), W * n_w, r)
+        if strata is None:
+            perm = kg_lib.repartition_perm(
+                jax.random.fold_in(k_part, r), W * n_w, r)
+        else:
+            perm = kg_lib.repartition_perm_stratified(
+                jax.random.fold_in(k_part, r), strata, W, r)
         rows = jax.lax.dynamic_slice_in_dim(perm, w * n_w, n_w)
         return jnp.take(flat, rows, axis=0)
 
@@ -1033,6 +1247,64 @@ def make_block_fn(
             return out, losses.reshape(-1), ovf
         return out, losses.reshape(-1)
 
+    def _stale_offsets() -> jax.Array:
+        """Per-worker refresh-phase offsets o_w ~ U{0..S}: workers refresh
+        at different rounds instead of in lockstep, which is what makes the
+        schedule 'asynchronous' while staying a pure function of (seed, w).
+        """
+        return jax.vmap(
+            lambda w: jax.random.randint(
+                jax.random.fold_in(k_stale, w), (), 0, S + 1)
+        )(jnp.arange(W))
+
+    def sgd_block_stale_vmap(state, epoch_ids: jax.Array):
+        """Bounded-staleness SGD block (vmap backend).  ``state`` is
+        ``(global_view, worker_locals)`` — see the staleness paragraph in
+        the factory docstring.  The round index is absolute
+        (``eids[0] // K``), so refresh decisions are block-split invariant.
+        """
+        part = block_part(epoch_ids)
+        offs = _stale_offsets()
+
+        def round_body(carry, eids):             # eids: (K,) one merge round
+            (g, local), ovf = carry
+            r = eids[0] // K
+            gate = (r == 0) | ((r + offs) % (S + 1) == 0)     # (W,) refresh?
+
+            def adopt(gx, lx):
+                return jnp.where(
+                    gate.reshape((W,) + (1,) * gx.ndim),
+                    jnp.broadcast_to(gx, (W,) + gx.shape), lx)
+
+            stacked = jax.tree.map(adopt, g, local)
+
+            def local_epoch(carry, e):
+                stacked, acc = carry
+                pos, neg = epoch_data(e, part)
+                stacked, stats = jax.vmap(run)(stacked, pos, neg)
+                acc = jax.tree.map(jnp.add, acc, stats)
+                return (stacked, acc), jnp.mean(stats.mean_loss)
+
+            (stacked, acc), losses = jax.lax.scan(
+                local_epoch, (stacked, _zero_stats(tcfg, (W,))), eids)
+            acc = dataclasses.replace(acc, mean_loss=acc.mean_loss / K)
+            mk = jax.random.fold_in(k_merge, eids[-1])
+            if cfg.merge_transport == "sparse":
+                g, o = _merge_tables_stale_sparse(
+                    model, cfg, stacked, acc, mk, g, n_w // B, K)
+                ovf = jnp.maximum(ovf, o)
+            else:
+                g = _merge_tables_stale_stacked(
+                    model, cfg.strategy, stacked, acc, mk, g)
+            return ((g, stacked), ovf), losses
+
+        ((g, local), ovf), losses = jax.lax.scan(
+            round_body, (state, jnp.zeros((), jnp.int32)),
+            epoch_ids.reshape(-1, K))
+        if with_overflow:
+            return (g, local), losses.reshape(-1), ovf
+        return (g, local), losses.reshape(-1)
+
     def bgd_block_vmap(params: Params, epoch_ids: jax.Array):
         part = block_part(epoch_ids)
 
@@ -1090,6 +1362,68 @@ def make_block_fn(
         )
         return fn(params, partitioned, epoch_ids)
 
+    def sgd_block_stale_shard(state, epoch_ids: jax.Array):
+        """Bounded-staleness SGD block (shard_map backend).  The global
+        view stays replicated (P()); each worker's local tables live in the
+        ``(W, ...)``-stacked ``state[1]``, row-sharded over the mesh axis
+        (P(ax)) so every device holds exactly its own copy.  The per-worker
+        refresh gate folds ``axis_index`` into the same ``_STALENESS_TAG``
+        stream the vmap backend vmaps over, and the stale Reduce replays
+        identical stacked math after an all-gather — both backends agree
+        bitwise (pinned by tests)."""
+
+        def worker(state, part_w, epoch_ids):
+            g, local = state
+            w = jax.lax.axis_index(ax)
+            part_w = worker_block_part(epoch_ids, w, part_w[0])
+            local = jax.tree.map(lambda x: x[0], local)
+            off = jax.random.randint(
+                jax.random.fold_in(k_stale, w), (), 0, S + 1)
+
+            def round_body(carry, eids):
+                g, local, ovf = carry
+                r = eids[0] // K
+                gate = (r == 0) | ((r + off) % (S + 1) == 0)
+                local = jax.tree.map(
+                    lambda gx, lx: jnp.where(gate, gx, lx), g, local)
+
+                def local_epoch(carry, e):
+                    local, acc = carry
+                    pos, neg = worker_epoch_data(e, w, part_w)
+                    local, stats = model.run_epoch(
+                        local, pos, neg, tcfg,
+                        sparse_apply=cfg.merge_transport == "sparse")
+                    acc = jax.tree.map(jnp.add, acc, stats)
+                    return (local, acc), jax.lax.pmean(stats.mean_loss, ax)
+
+                (local, acc), losses = jax.lax.scan(
+                    local_epoch, (local, _zero_stats(tcfg)), eids)
+                mk = jax.random.fold_in(k_merge, eids[-1])
+                g, o = _merge_tables_stale_collective(
+                    model, cfg, local, acc, acc.mean_loss / K, mk, g,
+                    n_w // B, K)
+                ovf = jnp.maximum(ovf, o)
+                return (g, local, ovf), losses
+
+            (g, local, ovf), losses = jax.lax.scan(
+                round_body, (g, local, jnp.zeros((), jnp.int32)),
+                epoch_ids.reshape(-1, K))
+            local = jax.tree.map(lambda x: x[None], local)
+            if with_overflow:
+                return (g, local), losses.reshape(-1), ovf
+            return (g, local), losses.reshape(-1)
+
+        state_specs = (P(), P(ax))
+        fn = _shard_map(
+            worker, mesh=mesh,
+            in_specs=(state_specs, P(ax), P()),
+            out_specs=(
+                (state_specs, P(), P()) if with_overflow
+                else (state_specs, P())),
+            check_vma=False,
+        )
+        return fn(state, partitioned, epoch_ids)
+
     def bgd_block_shard(params: Params, epoch_ids: jax.Array):
         def worker(params, part_w, epoch_ids):
             w = jax.lax.axis_index(ax)
@@ -1112,9 +1446,15 @@ def make_block_fn(
     if cfg.backend == "shard_map":
         if mesh is None:
             raise ValueError("shard_map backend needs a mesh")
-        fn = sgd_block_shard if cfg.paradigm == "sgd" else bgd_block_shard
+        if cfg.paradigm == "sgd":
+            fn = sgd_block_stale_shard if S > 0 else sgd_block_shard
+        else:
+            fn = bgd_block_shard
     else:
-        fn = sgd_block_vmap if cfg.paradigm == "sgd" else bgd_block_vmap
+        if cfg.paradigm == "sgd":
+            fn = sgd_block_stale_vmap if S > 0 else sgd_block_vmap
+        else:
+            fn = bgd_block_vmap
 
     if with_overflow and cfg.paradigm == "bgd":
         # BGD sizes its sparse buffers exactly from the batch shape, so
@@ -1137,12 +1477,18 @@ def make_block_fn(
 
         def fn(params, epoch_ids):
             res = inner_layout(params, epoch_ids)
+            # staleness>0 threads (global_view, worker_locals): constrain
+            # only the global view (locals are already P(ax)-stacked)
+            state = res[0]
+            g = state[0] if isinstance(state, tuple) else state
             shardings = kg_table_shardings(
-                model.param_roles(), params, mesh, "sharded", axis_name=ax)
+                model.param_roles(), g, mesh, "sharded", axis_name=ax)
             out = {
                 name: jax.lax.with_sharding_constraint(x, shardings[name])
-                for name, x in res[0].items()
+                for name, x in g.items()
             }
+            if isinstance(state, tuple):
+                out = (out, state[1])
             return (out,) + tuple(res[1:])
 
     return jax.jit(fn, donate_argnums=(0,) if donate else ())
@@ -1332,12 +1678,25 @@ def train(
             f"checkpoint every={checkpoint.every} is not a multiple of "
             f"merge_every={cfg.schedule.merge_every} — checkpoints are "
             "shared-model states, which only exist at Reduce boundaries")
-    part_fn = (
-        kg_lib.partition_stratified
-        if cfg.partition == "stratified"
-        else kg_lib.partition_balanced
-    )
+    if cfg.staleness > 0 and (checkpoint is not None or start_epoch > 0):
+        raise ValueError(
+            f"staleness={cfg.staleness} cannot checkpoint or resume — the "
+            "run state includes every worker's stale local tables, which "
+            "the Reduce-boundary manifest does not capture; bounded-"
+            "staleness runs reproduce by full rerun instead (all their "
+            "randomness is a fold_in-pure function of (seed, round, "
+            "worker))")
+    part_fn = kg_lib.PARTITIONERS[cfg.partition]
     partitioned = part_fn(seed, kg.train, cfg.n_workers)
+    # strata for the degree partitioner's re-partition rounds: labels over
+    # the flattened (partition-order) triplets — each round permutes the
+    # ORIGINAL partition (device_repartition), so the flat labels stay
+    # valid every round
+    strata = None
+    if (cfg.partition == "degree" and cfg.pipeline == "device"
+            and cfg.schedule.repartition_every is not None):
+        strata = kg_lib.triplet_strata(
+            partitioned.reshape(-1, 3), tcfg.n_entities)
     n_w = partitioned.shape[1]
     if n_w < cfg.batch_size:
         raise ValueError(
@@ -1412,7 +1771,8 @@ def train(
             epochs=epochs, seed=seed, mesh=mesh, callback=callback,
             recorder=recorder, eval_loop=eval_loop,
             caller_params=caller_params, writer=writer,
-            start_epoch=start_epoch, prior_history=prior_history)
+            start_epoch=start_epoch, prior_history=prior_history,
+            strata=strata)
 
     # surface sparse-transport capacity overflow at every Reduce (the
     # loop already syncs float(loss) per epoch, so this costs nothing)
@@ -1487,6 +1847,7 @@ def _train_device(
     writer: "Optional[_CheckpointWriter]" = None,
     start_epoch: int = 0,
     prior_history: Optional[list] = None,
+    strata: Optional[np.ndarray] = None,
 ) -> TrainResult:
     """Device-pipeline driver: put the partitioned triplets on device once,
     then run epochs in compiled scan blocks (``make_block_fn``).  The only
@@ -1536,7 +1897,24 @@ def _train_device(
     with_overflow = cfg.paradigm == "sgd" and cfg.merge_transport == "sparse"
     block_fn = make_block_fn(
         cfg, tcfg, part, mesh=mesh, model=model, head_prob=head_prob,
-        seed=seed, donate=donate, with_overflow=with_overflow)
+        seed=seed, donate=donate, with_overflow=with_overflow,
+        strata=strata)
+
+    # bounded staleness threads (global_view, worker_locals) through the
+    # blocks — locals must survive block boundaries or slicing at eval/
+    # checkpoint points would change results.  Locals start as W copies of
+    # the global view (round 0 force-refreshes every worker anyway).
+    stale = cfg.staleness > 0
+    if stale:
+        locals0 = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_workers,) + x.shape),
+            params)
+        if cfg.backend == "shard_map":
+            locals0 = jax.device_put(
+                locals0, NamedSharding(mesh, P(cfg.axis_name)))
+        state = (params, locals0)
+    else:
+        state = params
 
     eval_every = eval_loop.eval_every if eval_loop is not None else None
     ckpt_every = writer.cfg.every if writer is not None else None
@@ -1570,10 +1948,13 @@ def _train_device(
             length = min(length, repart - start % repart)
         epoch_ids = jnp.arange(start, start + length, dtype=jnp.int32)
         if with_overflow:
-            params, losses, overflow = block_fn(params, epoch_ids)
+            state, losses, overflow = block_fn(state, epoch_ids)
             _raise_on_overflow(overflow, start + length - 1)
         else:
-            params, losses = block_fn(params, epoch_ids)
+            state, losses = block_fn(state, epoch_ids)
+        # evals/checkpoints/results read the *global view* — under
+        # staleness the worker locals are divergent scratch state
+        params = state[0] if stale else state
         loss_blocks.append(losses)               # device array per block
         start += length
         if callback is not None:

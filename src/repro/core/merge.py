@@ -609,6 +609,194 @@ def merge_sparse_sharded_stacked(
     return apply_delta(out, owns.reshape(-1), rows.reshape(-1, rows.shape[-1]))
 
 
+def merge_candidates_stale(
+    strategy: str,
+    cand: jax.Array,          # (U,) sorted candidate row ids, padded n_rows
+    svals: jax.Array,         # (W, U, k) worker rows at the candidates
+    scnt: jax.Array,          # (W, U) this-round touch counts
+    sloss: jax.Array,         # (W, U)
+    worker_loss: jax.Array,   # (W,)
+    bcand: jax.Array,         # (U, k) the global view at the candidates
+    n_rows: int,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Participation-masked Reduce for the bounded-staleness mode: per row,
+    only workers whose round actually touched it contribute — workers that
+    did not hold an *arbitrary stale* value there (not the shared round
+    input the synchronous strategies assume), so they must be excluded from
+    every strategy, and a row nobody touched keeps the global view
+    ``bcand`` exactly (the ParaGraphE push-touched-rows semantics;
+    untouched global rows are never re-normalized).  The math is per-row
+    over the worker axis, so the dense path (``merge_stacked_stale`` passes
+    the full table with ``cand = arange``) and the packed sparse path
+    compute bit-identical rows."""
+    touched = scnt > 0
+    any_touch = jnp.any(touched, axis=0)                         # (U,)
+    if strategy == "average":
+        w = scnt[..., None]
+        merged = jnp.sum(svals * w, axis=0) / jnp.maximum(
+            jnp.sum(w, axis=0), 1.0)
+    elif strategy == "average_all":
+        # "all workers" under staleness = all this-round *touchers*: the
+        # non-toucher copies are stale garbage, not identical round inputs
+        w = touched.astype(svals.dtype)[..., None]
+        merged = jnp.sum(svals * w, axis=0) / jnp.maximum(
+            jnp.sum(w, axis=0), 1.0)
+    elif strategy == "random":
+        if key is None:
+            raise ValueError("'random' strategy needs a PRNG key")
+        W = svals.shape[0]
+        u_full = _random_priorities(key, W, n_rows)              # (W, n_rows)
+        u = jnp.take(u_full, cand, axis=1, mode="fill", fill_value=0.0)
+        merged = _select_by_priority_stacked(
+            svals, jnp.where(touched, u, -_BIG))
+    elif strategy == "miniloss_perkey":
+        mean_loss = jnp.where(
+            touched, sloss / jnp.maximum(scnt, 1.0), _BIG)
+        merged = _select_by_priority_stacked(svals, -mean_loss)
+    elif strategy == "miniloss_global":
+        # the best *toucher* per row wins (a global winner that skipped the
+        # row would push its stale copy over fresher work)
+        pri = jnp.where(touched, -worker_loss[:, None], -_BIG)
+        merged = _select_by_priority_stacked(svals, pri)
+    else:
+        raise ValueError(
+            f"unknown strategy {strategy!r}; want one of {STRATEGIES}")
+    return jnp.where(any_touch[:, None], merged, bcand)
+
+
+def merge_stacked_stale(
+    strategy: str,
+    stacked: jax.Array,       # (W, N, k) worker copies after their round
+    counts: jax.Array,        # (W, N) this-round touch counts
+    losses: jax.Array,        # (W, N)
+    worker_loss: jax.Array,   # (W,)
+    base: jax.Array,          # (N, k) the global view being merged into
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Dense bounded-staleness Reduce: :func:`merge_candidates_stale` over
+    every row of the table (the reference the sparse transport must match
+    bitwise)."""
+    N = counts.shape[1]
+    cand = jnp.arange(N, dtype=jnp.int32)
+    return merge_candidates_stale(
+        strategy, cand, stacked, counts, losses, worker_loss, base, N, key)
+
+
+def merge_sparse_stale(
+    strategy: str,
+    idx: jax.Array,           # (W, C) packed row ids
+    vals: jax.Array,          # (W, C, k)
+    cnts: jax.Array,          # (W, C)
+    losses: jax.Array,        # (W, C)
+    worker_loss: jax.Array,   # (W,)
+    base: jax.Array,          # (N, k) the global view being merged into
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Sparse-transport bounded-staleness Reduce: merge the union of the
+    workers' touched rows into the global view.  No virgin reconstruction:
+    a worker that skipped a candidate row is *excluded* from that row's
+    merge (zero count via :func:`lookup_delta`), so its placeholder value
+    never contributes — which is exactly why the stale Reduce composes with
+    the sparse transport without the synchronous path's shared-round-input
+    bookkeeping.  Bit-identical to :func:`merge_stacked_stale` on the dense
+    copies (per-row math on slices)."""
+    n_rows = base.shape[0]
+    cand = sparse_candidates(idx, n_rows)
+    placeholder = jnp.zeros((cand.shape[0], base.shape[1]), base.dtype)
+    svals, scnt, sloss = jax.vmap(
+        lookup_delta, in_axes=(0, 0, 0, 0, None, None, None)
+    )(idx, vals, cnts, losses, cand, placeholder, n_rows)
+    bcand = jnp.take(base, cand, axis=0, mode="fill", fill_value=0.0)
+    rows = merge_candidates_stale(
+        strategy, cand, svals, scnt, sloss, worker_loss, bcand, n_rows, key)
+    return apply_delta(base, cand, rows)
+
+
+def _merge_own_block_stale(
+    strategy, idx, vals, cnts, losses, worker_loss, base, lo, block, cand, key,
+):
+    """Stale-merge the candidates one shard owns — the bounded-staleness
+    analogue of :func:`_merge_own_block` (per-candidate math, restricting
+    to an owned block changes nothing bitwise)."""
+    n_rows = base.shape[0]
+    own = own_candidates(cand, lo, block, n_rows)
+    placeholder = jnp.zeros((own.shape[0], base.shape[1]), base.dtype)
+    svals, scnt, sloss = jax.vmap(
+        lookup_delta, in_axes=(0, 0, 0, 0, None, None, None)
+    )(idx, vals, cnts, losses, own, placeholder, n_rows)
+    bown = jnp.take(base, own, axis=0, mode="fill", fill_value=0.0)
+    rows = merge_candidates_stale(
+        strategy, own, svals, scnt, sloss, worker_loss, bown, n_rows, key)
+    return own, rows
+
+
+def merge_sparse_stale_sharded_stacked(
+    strategy: str,
+    idx: jax.Array,
+    vals: jax.Array,
+    cnts: jax.Array,
+    losses: jax.Array,
+    worker_loss: jax.Array,
+    base: jax.Array,
+    key: jax.Array | None = None,
+    *,
+    n_shards: int,
+) -> jax.Array:
+    """Shard-routed :func:`merge_sparse_stale`: the candidate union is
+    partitioned into owned row blocks, each stale-merged independently —
+    bit-identical to the monolithic stale merge (blocks partition the
+    union; the strategy math never mixes rows)."""
+    n_rows = base.shape[0]
+    R = shard_rows(n_rows, n_shards)
+    cand = sparse_candidates(idx, n_rows)
+
+    def shard_merge(lo):
+        return _merge_own_block_stale(
+            strategy, idx, vals, cnts, losses, worker_loss, base,
+            lo, R, cand, key)
+
+    los = jnp.arange(n_shards, dtype=cand.dtype) * R
+    owns, rows = jax.lax.map(shard_merge, los)
+    return apply_delta(base, owns.reshape(-1), rows.reshape(-1, rows.shape[-1]))
+
+
+def merge_sparse_stale_collective(
+    strategy: str,
+    idx: jax.Array,           # (W, C) all-gathered packed row ids
+    vals: jax.Array,
+    cnts: jax.Array,
+    losses: jax.Array,
+    worker_loss: jax.Array,
+    base: jax.Array,          # (N, k) the replicated global view
+    axis: str,
+    key: jax.Array | None = None,
+    *,
+    sharded: bool = False,
+) -> jax.Array:
+    """Bounded-staleness Reduce inside ``shard_map``: the packed buffers
+    are already all-gathered (the transport's only cross-worker traffic),
+    so every worker replays the stacked stale merge — or, with
+    ``sharded=True``, merges only its owned candidate block and
+    all-gathers the merged blocks, mirroring
+    :func:`merge_sparse_sharded_collective`.  Bitwise equal to the vmap
+    backend either way."""
+    if not sharded:
+        return merge_sparse_stale(
+            strategy, idx, vals, cnts, losses, worker_loss, base, key)
+    W = idx.shape[0]
+    n_rows = base.shape[0]
+    R = shard_rows(n_rows, W)
+    cand = sparse_candidates(idx, n_rows)
+    lo = (jax.lax.axis_index(axis) * R).astype(cand.dtype)
+    own, rows = _merge_own_block_stale(
+        strategy, idx, vals, cnts, losses, worker_loss, base,
+        lo, R, cand, key)
+    owns = jax.lax.all_gather(own, axis)
+    rws = jax.lax.all_gather(rows, axis)
+    return apply_delta(base, owns.reshape(-1), rws.reshape(-1, rws.shape[-1]))
+
+
 def merge_sparse_sharded_collective(
     strategy: str,
     idx: jax.Array,           # (W, C) all-gathered packed row ids

@@ -28,6 +28,7 @@ jit/vmap/shard_map friendly.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict
 
 import jax
@@ -54,6 +55,15 @@ class KGConfig:
     normalize: str = "epoch"
     # negative sampling: 'unif' (paper / TransE) or 'bern' (TransH-style)
     sampling: str = "unif"
+    # negative *scoring* scheme: 'pertriplet' pairs each positive with its
+    # one corrupted counterpart (Eq. 3, the paper); 'joint' scores a shared
+    # candidate pool — the batch's first ``neg_candidates`` corrupted
+    # entities — against EVERY positive via the model's ``joint_energies``
+    # matmul/broadcast closed form (DGL-KE's joint negative sampling:
+    # B·C ranking pairs per batch instead of B, amortizing each gather).
+    negatives: str = "pertriplet"
+    # 'joint' pool size C (clamped to the batch size); 0 = the full batch.
+    neg_candidates: int = 0
     dtype: Any = jnp.float32
 
     def __post_init__(self):
@@ -61,6 +71,12 @@ class KGConfig:
             raise ValueError(f"norm must be 'l1' or 'l2', got {self.norm!r}")
         if self.normalize not in ("epoch", "step", "none"):
             raise ValueError(f"bad normalize: {self.normalize!r}")
+        if self.negatives not in ("pertriplet", "joint"):
+            raise ValueError(f"bad negatives: {self.negatives!r}")
+        if self.neg_candidates < 0:
+            raise ValueError(
+                f"neg_candidates must be >= 0 (0 = full batch), got "
+                f"{self.neg_candidates}")
 
 
 def dissimilarity(x: jax.Array, norm: str) -> jax.Array:
@@ -265,6 +281,122 @@ class KGModel:
             key, pos_batches, cfg.n_entities, cfg.sampling, head_prob_per_rel
         )
 
+    # -- joint negative scoring (DGL-KE-style shared candidate pool) --------
+
+    def joint_parts(
+        self, pos: jax.Array, neg: jax.Array, n_candidates: int
+    ) -> tuple[jax.Array, jax.Array]:
+        """Derive the shared corruption pool from the per-triplet negatives:
+        ``cand`` is the batch's first C corrupted entities, ``side_head``
+        marks which side each positive's corruption replaced.  No new
+        randomness — the pool reuses the engine's existing negative stream,
+        so the joint scheme inherits the (seed, epoch, worker) determinism
+        contract for free."""
+        side_head = neg[:, 0] != pos[:, 0]
+        corrupted = jnp.where(side_head, neg[:, 0], neg[:, 2])
+        C = corrupted.shape[0] if n_candidates == 0 else n_candidates
+        cand = corrupted[: min(C, corrupted.shape[0])]
+        return cand, side_head
+
+    def joint_energies(
+        self,
+        params: Params,
+        pos: jax.Array,          # (B, 3)
+        cand: jax.Array,         # (C,) shared candidate entity ids
+        side_head: jax.Array,    # (B,) bool: candidate replaces the head
+        norm: str = "l1",
+    ) -> jax.Array:
+        """Energy of every candidate substituted into every positive's
+        corruption side: ``(B, C)``.  Generic fallback substitutes one
+        candidate at a time (vmapped) — column ``c`` at row ``b`` is exactly
+        ``energy`` of the substituted triplet, so the diagonal with
+        per-triplet candidates reproduces ``energy(neg)`` bitwise
+        (tests/test_async_schedule.py pins it).  Models override with
+        matmul/broadcast closed forms."""
+
+        def one(e):
+            h = jnp.where(side_head, e, pos[:, 0])
+            t = jnp.where(side_head, pos[:, 2], e)
+            trip = jnp.stack([h, pos[:, 1], t], axis=1).astype(pos.dtype)
+            return self.energy(params, trip, norm)
+
+        return jax.vmap(one)(cand).T                          # (B, C)
+
+    def joint_hinges(
+        self,
+        params: Params,
+        pos: jax.Array,
+        neg: jax.Array,
+        *,
+        margin: float,
+        norm: str,
+        n_candidates: int = 0,
+    ) -> tuple[jax.Array, jax.Array]:
+        """The (B, C) hinge matrix of the joint objective plus its validity
+        mask (a candidate equal to a positive's gold entity on the corrupted
+        side is a false negative and is masked out, Eq. 2's constraint)."""
+        cand, side_head = self.joint_parts(pos, neg, n_candidates)
+        d_pos = self.energy(params, pos, norm)                # (B,)
+        d_cand = self.joint_energies(params, pos, cand, side_head, norm)
+        gold = jnp.where(side_head, pos[:, 0], pos[:, 2])
+        valid = (cand[None, :] != gold[:, None]).astype(d_cand.dtype)
+        return pairwise_hinge(d_pos[:, None], d_cand, margin) * valid, valid
+
+    def joint_margin_loss(
+        self,
+        params: Params,
+        pos: jax.Array,
+        neg: jax.Array,
+        *,
+        margin: float,
+        norm: str,
+        n_candidates: int = 0,
+    ) -> jax.Array:
+        """Mean hinge over the B·C valid (positive, candidate) pairs — the
+        joint-sampling analogue of :meth:`margin_loss`."""
+        hinges, valid = self.joint_hinges(
+            params, pos, neg, margin=margin, norm=norm,
+            n_candidates=n_candidates)
+        return jnp.sum(hinges) / jnp.maximum(jnp.sum(valid), 1.0)
+
+    def joint_pair_loss(
+        self,
+        params: Params,
+        pos: jax.Array,
+        neg: jax.Array,
+        *,
+        margin: float,
+        norm: str,
+        n_candidates: int = 0,
+    ) -> jax.Array:
+        """Per-positive mean hinge over its valid candidates — the joint
+        analogue of :meth:`per_pair_loss` for the Reduce touch stats."""
+        hinges, valid = self.joint_hinges(
+            params, pos, neg, margin=margin, norm=norm,
+            n_candidates=n_candidates)
+        return jnp.sum(hinges, axis=1) / jnp.maximum(
+            jnp.sum(valid, axis=1), 1.0)
+
+    def _loss_fn(self, cfg: KGConfig):
+        """The training objective ``(params, pos, neg) -> loss`` the config
+        selects: the per-triplet margin loss, or the joint-candidate one."""
+        if cfg.negatives == "joint":
+            return functools.partial(
+                self.joint_margin_loss, margin=cfg.margin, norm=cfg.norm,
+                n_candidates=cfg.neg_candidates)
+        return functools.partial(
+            self.margin_loss, margin=cfg.margin, norm=cfg.norm)
+
+    def _pair_loss_fn(self, cfg: KGConfig):
+        """Per-positive loss ``(params, pos, neg) -> (B,)`` matching
+        :meth:`_loss_fn` — feeds the per-key Reduce touch stats."""
+        if cfg.negatives == "joint":
+            return functools.partial(
+                self.joint_pair_loss, margin=cfg.margin, norm=cfg.norm,
+                n_candidates=cfg.neg_candidates)
+        return functools.partial(
+            self.per_pair_loss, margin=cfg.margin, norm=cfg.norm)
+
     # -- shared engine math (identical for every model) ---------------------
 
     def margin_loss(
@@ -302,10 +434,9 @@ class KGModel:
     def sgd_step(
         self, params: Params, pos: jax.Array, neg: jax.Array, cfg: KGConfig
     ) -> tuple[Params, jax.Array]:
-        """One (mini-batch) SGD step of Algorithm 1's inner loop."""
-        loss, grads = jax.value_and_grad(self.margin_loss)(
-            params, pos, neg, margin=cfg.margin, norm=cfg.norm
-        )
+        """One (mini-batch) SGD step of Algorithm 1's inner loop (the
+        objective — per-triplet or joint — comes from ``cfg.negatives``)."""
+        loss, grads = jax.value_and_grad(self._loss_fn(cfg))(params, pos, neg)
         params = jax.tree.map(
             lambda p, g: p - cfg.learning_rate * g, params, grads
         )
@@ -364,9 +495,12 @@ class KGModel:
         equivalence across models, strategies, and pipelines."""
         cand, compact, pos_c, neg_c = self._compact_batch(
             params, pos, neg, cfg)
-        loss, grads = jax.value_and_grad(self.margin_loss)(
-            compact, pos_c, neg_c, margin=cfg.margin, norm=cfg.norm
-        )
+        # the remap preserves id (in)equality — both pos and neg ids appear
+        # in the candidate list and searchsorted maps them injectively — so
+        # the joint objective's side/candidate/gold-mask derivation computes
+        # the same booleans on the compact triplets as on the originals
+        loss, grads = jax.value_and_grad(self._loss_fn(cfg))(
+            compact, pos_c, neg_c)
         roles = self.param_roles()
         params = {
             name: params[name].at[cand[roles[name]]].set(
@@ -392,6 +526,7 @@ class KGModel:
         for the bitwise-identical compact-row :meth:`sgd_step_sparse`
         (engaged by ``merge_transport="sparse"``)."""
         step = self.sgd_step_sparse if sparse_apply else self.sgd_step
+        pair_fn = self._pair_loss_fn(cfg)
         if cfg.normalize == "epoch":
             params = self.normalize(params)
         E, R = cfg.n_entities, cfg.n_relations
@@ -405,9 +540,7 @@ class KGModel:
         def body(carry, batch):
             params, stats, loss_sum = carry
             pos, neg = batch
-            pair = self.per_pair_loss(
-                params, pos, neg, margin=cfg.margin, norm=cfg.norm
-            )
+            pair = pair_fn(params, pos, neg)
             params, loss = step(params, pos, neg, cfg)
             stats = _accumulate_touch(stats, pos, neg, pair, E, R)
             return (params, stats, loss_sum + loss), None
@@ -431,7 +564,6 @@ class KGModel:
         self, params: Params, pos: jax.Array, neg: jax.Array, cfg: KGConfig
     ) -> tuple[jax.Array, Params]:
         """Loss and gradients for the BGD Map phase (§3.2.1): the worker emits
-        gradients, never touching its local params."""
-        return jax.value_and_grad(self.margin_loss)(
-            params, pos, neg, margin=cfg.margin, norm=cfg.norm
-        )
+        gradients, never touching its local params.  ``cfg.negatives``
+        selects the per-triplet or joint objective, same as the SGD step."""
+        return jax.value_and_grad(self._loss_fn(cfg))(params, pos, neg)

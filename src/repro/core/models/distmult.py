@@ -87,3 +87,17 @@ class DistMult(base.KGModel):
         h = ent[triplets[:, 0]]
         t = ent[triplets[:, 2]]
         return -(h * t) @ rel.T                            # (B, R)
+
+    def joint_energies(
+        self, params: Params, pos: jax.Array, cand: jax.Array,
+        side_head: jax.Array, norm: str = "l1"
+    ) -> jax.Array:
+        """Closed form: a true (B, k) x (k, C) matmul — the joint-sampling
+        payoff DGL-KE builds on.  The bilinear score is symmetric in h and
+        t, so the per-row query is ``r∘t`` (head side) or ``h∘r`` (tail)."""
+        del norm
+        ent, rel = params["ent"], params["rel"]
+        h, r, t = pos[:, 0], pos[:, 1], pos[:, 2]
+        q = jnp.where(
+            side_head[:, None], rel[r] * ent[t], ent[h] * rel[r])
+        return -q @ ent[cand].T                            # (B, C)

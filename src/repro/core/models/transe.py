@@ -92,6 +92,34 @@ class TransE(base.KGModel):
         diff = (h - t)[:, None, :] + rel[None, :, :]       # (B, R, k)
         return dissimilarity(diff, norm)
 
+    def joint_energies(
+        self, params: Params, pos: jax.Array, cand: jax.Array,
+        side_head: jax.Array, norm: str = "l1"
+    ) -> jax.Array:
+        """Closed form: one (B, C, k) broadcast.  A corrupted head scores
+        ``||c + r - t||`` and a corrupted tail ``||h + r - c||``; both norms
+        are sign-invariant, so each is ``||c - q||`` with the per-row query
+        ``q = t - r`` (head side) or ``h + r`` (tail side) — C gathers of
+        the candidate pool instead of B·C per-triplet gathers.
+
+        Under ``l2`` the (B, C) distance matrix is computed through the
+        ``|c - q|^2 = |c|^2 - 2 c.q + |q|^2`` expansion: one (B, C)
+        matmul, no (B, C, k) difference tensor on either the forward or
+        the backward pass — the DGL-KE "one corruption batch scored as a
+        matmul" form, and what keeps the joint step near per-triplet
+        cost.  ``l1`` has no matmul form and keeps the broadcast."""
+        ent, rel = params["ent"], params["rel"]
+        h, r, t = pos[:, 0], pos[:, 1], pos[:, 2]
+        q = jnp.where(
+            side_head[:, None], ent[t] - rel[r], ent[h] + rel[r])
+        cm = ent[cand]
+        if norm == "l2":
+            d2 = (jnp.sum(q * q, axis=-1)[:, None]
+                  - 2.0 * (q @ cm.T)
+                  + jnp.sum(cm * cm, axis=-1)[None, :])
+            return jnp.sqrt(jnp.maximum(d2, 0.0) + 1e-12)
+        return dissimilarity(cm[None, :, :] - q[:, None, :], norm)
+
     # -- fused Pallas kernels (late imports: kernels/ops imports this pkg) --
 
     def fused_margin_loss(

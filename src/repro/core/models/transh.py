@@ -112,3 +112,22 @@ class TransH(base.KGModel):
         else:
             raise ValueError(f"bad side {side!r}")
         return dissimilarity(diff, norm)
+
+    def joint_energies(
+        self, params: Params, pos: jax.Array, cand: jax.Array,
+        side_head: jax.Array, norm: str = "l1"
+    ) -> jax.Array:
+        """Closed form: project the C candidates onto every positive's
+        hyperplane in one (B, C, k) broadcast.  Norms are sign-invariant,
+        so both sides reduce to ``||c⊥ - q||`` with ``q = t⊥ - d_r`` (head
+        side) or ``h⊥ + d_r`` (tail side)."""
+        ent = params["ent"]
+        r = params["rel"][pos[:, 1]]                       # (B, k)
+        w = unit_rows(params["norm"][pos[:, 1]])           # (B, k)
+        ce = ent[cand]                                     # (C, k)
+        dot = jnp.einsum("bk,ck->bc", w, ce)               # (B, C)
+        c_proj = ce[None, :, :] - dot[..., None] * w[:, None, :]
+        hp = _project(ent[pos[:, 0]], w)
+        tp = _project(ent[pos[:, 2]], w)
+        q = jnp.where(side_head[:, None], tp - r, hp + r)
+        return dissimilarity(c_proj - q[:, None, :], norm)

@@ -12,6 +12,18 @@ The corruption scheme is model-pluggable: the engine calls
 ``KGModel.make_negatives`` (``core/models/base.py``), whose default routes
 here with the config's ``sampling`` choice — a model overrides that method
 to swap in its own scheme.
+
+This module produces **per-triplet** negatives: each positive gets its own
+corruption, scored by one extra ``energy`` call on the (B, 3) negative
+batch.  The engine's other mode, ``negatives='joint'`` (DGL-KE-style),
+still draws its corruption batch here but *shares* it: the B per-triplet
+corruptions double as a C-candidate pool scored against every positive as
+one (B, C) matrix — ``KGModel.joint_parts`` extracts the pool (optionally
+capped at ``neg_candidates``) and ``KGModel.joint_energies`` /
+``joint_hinges`` do the scoring (a matmul for TransE l2), with candidates
+that collide with a row's gold entity masked out of that row's loss.  The
+generic joint diagonal is bitwise the per-triplet energies — joint
+sampling changes the scoring layout, not the sampling distribution.
 """
 from __future__ import annotations
 

@@ -346,6 +346,97 @@ def partition_stratified(
     return triplets[np.stack(chunks)]
 
 
+def entity_degrees(triplets: np.ndarray, n_entities: int) -> np.ndarray:
+    """Per-entity degree (head + tail occurrences) over a triplet set."""
+    t = np.asarray(triplets)
+    deg = np.bincount(t[:, 0], minlength=n_entities)
+    deg += np.bincount(t[:, 2], minlength=n_entities)
+    return deg[:n_entities].astype(np.int64)
+
+
+def triplet_strata(
+    triplets: np.ndarray, n_entities: int, n_buckets: int = 8
+) -> np.ndarray:
+    """Quantile-bucket each triplet by its degree score ``deg[h] + deg[t]``.
+
+    The strata labels (int32, ``(N,)``) drive the degree-stratified
+    partitioner: splitting each bucket evenly across workers gives every
+    worker the same hub/tail-entity mix, so no worker's subset is dominated
+    by high-conflict hub rows (DGL-KE's motivation for degree-aware
+    splits).  Bucket edges are degree-score quantiles of *this* triplet
+    set, so the labels are a pure function of the triplets."""
+    t = np.asarray(triplets)
+    if len(t) == 0:
+        return np.zeros((0,), np.int32)
+    deg = entity_degrees(t, n_entities)
+    score = deg[t[:, 0]] + deg[t[:, 2]]
+    edges = np.quantile(score, np.linspace(0, 1, n_buckets + 1)[1:-1])
+    return np.searchsorted(edges, score, side="right").astype(np.int32)
+
+
+def partition_degree_stratified(
+    seed: int, triplets: np.ndarray, n_workers: int, n_buckets: int = 8
+) -> np.ndarray:
+    """Degree-stratified balanced split: bucket triplets by degree score
+    (``triplet_strata``) and round-robin each bucket across workers, so
+    hub-entity triplets — the rows every worker's merge fights over — are
+    spread evenly instead of landing on whichever worker the shuffle chose.
+    Same shuffle-within-stratum + ``order[w::W]`` idiom as
+    :func:`partition_stratified`, keyed on degree instead of relation."""
+    t = np.asarray(triplets)
+    n_entities = int(t[:, [0, 2]].max()) + 1 if len(t) else 0
+    strata = triplet_strata(t, n_entities, n_buckets)
+    rng = np.random.default_rng(seed)
+    order = np.lexsort((rng.random(len(t)), strata))
+    per = len(t) // n_workers
+    chunks = [order[w::n_workers][:per] for w in range(n_workers)]
+    return t[np.stack(chunks)]
+
+
+def partition_overlap_min(
+    seed: int, triplets: np.ndarray, n_workers: int
+) -> np.ndarray:
+    """Overlap-minimizing balanced split (greedy streaming LDG).
+
+    Each triplet goes to the worker that already holds the most triplets
+    touching its head/tail entities (affinity), minus a load penalty, under
+    a hard per-worker cap of ``N // W`` — fewer entities shared across
+    workers means fewer conflicting rows at Reduce time.  Deterministic in
+    ``seed`` (stream order is a seeded shuffle; argmax ties break to the
+    lowest worker id).  Host-side O(N·W); intended for partition-quality
+    experiments at bench scale, not million-triplet ingest."""
+    t = np.asarray(triplets)
+    rng = np.random.default_rng(seed)
+    n_entities = int(t[:, [0, 2]].max()) + 1 if len(t) else 0
+    per = len(t) // n_workers
+    aff = np.zeros((n_entities, n_workers), np.float64)
+    load = np.zeros(n_workers, np.int64)
+    chunks: list[list[int]] = [[] for _ in range(n_workers)]
+    assigned = 0
+    for i in rng.permutation(len(t)):
+        if assigned == per * n_workers:
+            break
+        h, tl = int(t[i, 0]), int(t[i, 2])
+        score = aff[h] + aff[tl] - load / max(per, 1)
+        score[load >= per] = -np.inf
+        w = int(np.argmax(score))
+        chunks[w].append(i)
+        aff[h, w] += 1.0
+        aff[tl, w] += 1.0
+        load[w] += 1
+        assigned += 1
+    return t[np.array(chunks, dtype=np.int64)]
+
+
+#: Host partitioner registry — ``MapReduceConfig.partition`` values.
+PARTITIONERS = {
+    "balanced": partition_balanced,
+    "stratified": partition_stratified,
+    "degree": partition_degree_stratified,
+    "overlap": partition_overlap_min,
+}
+
+
 def epoch_batches(
     seed: int,
     epoch: int,
@@ -412,10 +503,35 @@ def repartition_perm(key: jax.Array, n: int, round_idx: jax.Array) -> jax.Array:
     return jnp.where(round_idx == 0, jnp.arange(n), perm)
 
 
+def repartition_perm_stratified(
+    key: jax.Array,
+    strata: jax.Array,           # (n,) int32 per-triplet stratum labels
+    n_workers: int,
+    round_idx: jax.Array,
+) -> jax.Array:
+    """Strata-preserving re-partition permutation (degree partitioner).
+
+    The device analogue of the ``order[w::W]`` host idiom: shuffle within
+    each stratum (``lexsort`` on a fresh uniform draw keyed by the round),
+    then deal the stratified order round-robin so worker ``w`` receives
+    rows ``order[w::W]`` — each re-partition round redraws worker
+    membership while keeping every worker's degree mix intact.  Round 0 is
+    the identity, matching :func:`repartition_perm`.  ``strata`` describes
+    the *original* flat triplet order (the array ``device_repartition``
+    permutes), so the labels stay valid for every round."""
+    n = strata.shape[0]
+    n_w = n // n_workers
+    u = jax.random.uniform(key, (n,))
+    order = jnp.lexsort((u, strata))
+    perm = order.reshape(n_w, n_workers).T.reshape(-1)
+    return jnp.where(round_idx == 0, jnp.arange(n), perm)
+
+
 def device_repartition(
     key: jax.Array,
     partitioned: jax.Array,      # (W, N_w, 3) on device
     round_idx: jax.Array,
+    strata: jax.Array | None = None,
 ) -> jax.Array:
     """Re-split the full triplet set across workers on device.
 
@@ -424,10 +540,17 @@ def device_repartition(
     frozen at ``train()`` start; re-partitioning every M epochs
     (``EpochSchedule.repartition_every``) kills that residual split bias.
     Pure function of (key, round) — callers fold the round index into the
-    key — which is what keeps block-size invariance intact."""
+    key — which is what keeps block-size invariance intact.  With
+    ``strata`` (degree partitioner) the permutation is stratum-preserving
+    (:func:`repartition_perm_stratified`); without, it is the original
+    uniform :func:`repartition_perm` — byte-identical to before strata
+    existed."""
     W, n_w, _ = partitioned.shape
     flat = partitioned.reshape(W * n_w, 3)
-    perm = repartition_perm(key, W * n_w, round_idx)
+    if strata is None:
+        perm = repartition_perm(key, W * n_w, round_idx)
+    else:
+        perm = repartition_perm_stratified(key, strata, W, round_idx)
     return jnp.take(flat, perm, axis=0).reshape(W, n_w, 3)
 
 

@@ -75,6 +75,7 @@ def make_configs(
     backend: str = "vmap",
     batch_size: int = 256,
     partition: str = "balanced",
+    partitioner: Optional[str] = None,
     pipeline: str = "host",
     block_epochs: int = 1,
     merge_every: int = 1,
@@ -83,6 +84,9 @@ def make_configs(
     donate_params: Optional[bool] = None,
     table_sharding: str = "replicated",
     touched_capacity: Optional[int] = None,
+    staleness: int = 0,
+    negatives: str = "pertriplet",
+    neg_candidates: int = 0,
 ) -> tuple[KGConfig, mapreduce.MapReduceConfig]:
     """Build the (model hyperparams, engine) config pair ``fit`` uses —
     exposed separately for benchmarks that drive epochs by hand.
@@ -111,8 +115,35 @@ def make_configs(
     per-round touched-row bound of the sparse delta buffers (rows per
     worker per Reduce); an undersized override is rejected at config time
     and an overflow at run time raises instead of silently dropping
-    updates."""
+    updates.
+
+    ``partitioner`` (alias of ``partition``; either spelling works) picks
+    the host-side triplet split: 'balanced' (uniform shuffle-split, the
+    reference), 'stratified' (relation-stratified), 'degree'
+    (degree-stratified — every worker gets the same head+tail degree mix,
+    so no worker trains only on cold entities), or 'overlap' (greedy
+    streaming split minimizing cross-worker entity overlap, which shrinks
+    the Reduce's conflict surface; incompatible with
+    ``repartition_every``).
+
+    ``staleness=S`` (SGD paradigm, ``pipeline='device'``) bounds how stale
+    each worker's view of the merged model may get: workers re-read the
+    global tables only every 1..S+1 Reduce rounds (staggered,
+    fold_in-derived phases) while their deltas still merge into the global
+    view each round.  S=0 (default) is the synchronous engine, verbatim;
+    S>0 trades Reduce-barrier adoption for extra local progress and stays
+    deterministically reproducible (same seed, same result — see
+    docs/architecture.md).
+
+    ``negatives='joint'`` scores every positive in a batch against one
+    shared corruption pool (the DGL-KE joint negative sampling) instead of
+    its own corrupted triplet — one (B, C) matmul-style scoring pass per
+    batch; ``neg_candidates=C`` caps the pool (0 = the whole batch's
+    corruptions).  Works under both paradigms and every
+    pipeline/backend/transport."""
     model = get_model(model)
+    if partitioner is not None:
+        partition = partitioner
     kcfg = KGConfig(
         n_entities=kg.n_entities,
         n_relations=kg.n_relations,
@@ -122,6 +153,8 @@ def make_configs(
         learning_rate=learning_rate,
         normalize=normalize,
         sampling=sampling,
+        negatives=negatives,
+        neg_candidates=neg_candidates,
     )
     mcfg = mapreduce.MapReduceConfig(
         n_workers=n_workers,
@@ -141,6 +174,7 @@ def make_configs(
         donate_params=donate_params,
         table_sharding=table_sharding,
         touched_capacity=touched_capacity,
+        staleness=staleness,
     )
     return kcfg, mcfg
 
@@ -173,7 +207,8 @@ def fit(
 
     ``config_kw`` forwards to :func:`make_configs` (dim, margin, norm,
     learning_rate, n_workers, strategy, backend, batch_size, pipeline,
-    block_epochs, merge_every, repartition_every, ...).  Returns a
+    block_epochs, merge_every, repartition_every, partitioner=,
+    staleness=, negatives=, ...).  Returns a
     :class:`TrainResult` with params, loss_history, and the resolved model
     name.
 

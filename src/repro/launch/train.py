@@ -82,11 +82,19 @@ def _run_kg(args) -> None:
         raise SystemExit(
             "--kg-checkpoint-every / --kg-resume configure checkpointing; "
             "add --kg-ckpt-dir DIR to say where the checkpoints live")
+    if args.kg_staleness and args.kg_pipeline != "device":
+        raise SystemExit(
+            "--kg-staleness is the bounded-staleness device-pipeline "
+            "schedule; add --kg-pipeline device")
     res = kg_api.fit(
         graph, model=args.kg, paradigm=args.kg_paradigm,
         n_workers=args.kg_workers, strategy=args.kg_strategy,
         merge_transport=args.kg_merge_transport,
         table_sharding=args.kg_table_sharding,
+        partitioner=args.kg_partitioner,
+        staleness=args.kg_staleness,
+        negatives=args.kg_negatives,
+        neg_candidates=args.kg_neg_candidates,
         backend="vmap", batch_size=256, dim=48,
         learning_rate=args.lr if args.lr is not None else 5e-2,
         epochs=args.kg_epochs, seed=args.seed,
@@ -196,6 +204,23 @@ def main(argv=None):
                          "block resident between merge steps and reduces "
                          "sparse deltas shard-locally (bit-identical to "
                          "replicated; requires --kg-merge-transport sparse)")
+    ap.add_argument("--kg-partitioner", default=None,
+                    choices=["balanced", "stratified", "degree", "overlap"],
+                    help="host-side triplet partitioner (default balanced; "
+                         "'degree' = degree-stratified, 'overlap' = greedy "
+                         "overlap-minimizing — see data/kg.PARTITIONERS)")
+    ap.add_argument("--kg-staleness", type=int, default=0, metavar="S",
+                    help="bounded-staleness Reduce: workers re-read the "
+                         "merged tables only every 1..S+1 rounds (0 = "
+                         "synchronous; needs --kg-pipeline device)")
+    ap.add_argument("--kg-negatives", default="pertriplet",
+                    choices=["pertriplet", "joint"],
+                    help="negative sampling: one corruption per positive "
+                         "(the reference) or a shared per-batch candidate "
+                         "pool scored jointly (DGL-KE style)")
+    ap.add_argument("--kg-neg-candidates", type=int, default=0, metavar="C",
+                    help="cap the joint candidate pool at C (0 = the whole "
+                         "batch's corruptions; needs --kg-negatives joint)")
     ap.add_argument("--kg-dataset", default=None, metavar="PATH",
                     help="train on a real TSV dataset (head<TAB>relation"
                          "<TAB>tail; a file or a dir with train/valid/"

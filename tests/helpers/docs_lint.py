@@ -1,0 +1,122 @@
+"""Docs drift guard (CI lint job): the docs tree must track the code.
+
+    PYTHONPATH=src python tests/helpers/docs_lint.py
+
+Checks, each a hard failure:
+
+  1. README.md and docs/architecture.md + docs/benchmarks.md exist.
+  2. Every committed ``BENCH_*.json`` at the repo root is named in
+     ``docs/benchmarks.md`` (a new bench without a docs section — or a
+     renamed artifact orphaning its section — fails here, not in review).
+  3. Every fenced ``python`` block in README.md parses, and every
+     ``import`` / ``from ... import`` line in those blocks actually
+     resolves — the quickstart cannot silently rot when the API moves.
+  4. Relative markdown links in README.md and docs/*.md point at files
+     that exist.
+
+Pure stdlib + the repo's own imports; no pytest dependency so the CI
+lint job can run it before the test extras install.
+"""
+from __future__ import annotations
+
+import ast
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+# [text](target) — skip http(s), mailto, and pure #anchors
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
+
+
+def _fail(problems: list, msg: str) -> None:
+    problems.append(msg)
+
+
+def check_tree(problems: list) -> None:
+    for rel in ("README.md", "docs/architecture.md", "docs/benchmarks.md"):
+        if not os.path.exists(os.path.join(ROOT, rel)):
+            _fail(problems, f"missing {rel}")
+
+
+def check_bench_docs(problems: list) -> None:
+    docs_path = os.path.join(ROOT, "docs", "benchmarks.md")
+    if not os.path.exists(docs_path):
+        return  # already reported by check_tree
+    with open(docs_path) as f:
+        text = f.read()
+    for path in sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json"))):
+        name = os.path.basename(path)
+        if name not in text:
+            _fail(problems,
+                  f"{name} committed at the repo root but never named in "
+                  "docs/benchmarks.md — add its section")
+
+
+def check_readme_snippets(problems: list) -> None:
+    readme = os.path.join(ROOT, "README.md")
+    if not os.path.exists(readme):
+        return
+    with open(readme) as f:
+        blocks = FENCE_RE.findall(f.read())
+    if not blocks:
+        _fail(problems, "README.md has no ```python quickstart block")
+    for i, block in enumerate(blocks):
+        try:
+            tree = ast.parse(block)
+        except SyntaxError as e:
+            _fail(problems, f"README.md python block {i}: syntax error: {e}")
+            continue
+        # execute only the import statements: the snippet's names must
+        # exist even though running the full training loop is out of scope
+        imports = [node for node in tree.body
+                   if isinstance(node, (ast.Import, ast.ImportFrom))]
+        for node in imports:
+            src = ast.get_source_segment(block, node) or ""
+            try:
+                exec(compile(ast.Module([node], []), "<readme>", "exec"), {})
+            except Exception as e:
+                _fail(problems,
+                      f"README.md python block {i}: {src!r} failed: "
+                      f"{type(e).__name__}: {e}")
+
+
+def check_links(problems: list) -> None:
+    pages = [os.path.join(ROOT, "README.md")]
+    pages += sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    for page in pages:
+        if not os.path.exists(page):
+            continue
+        base = os.path.dirname(page)
+        with open(page) as f:
+            targets = LINK_RE.findall(f.read())
+        for target in targets:
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if not os.path.exists(os.path.normpath(os.path.join(base,
+                                                                target))):
+                rel = os.path.relpath(page, ROOT)
+                _fail(problems, f"{rel}: broken link -> {target}")
+
+
+def main() -> int:
+    problems: list = []
+    check_tree(problems)
+    check_bench_docs(problems)
+    check_readme_snippets(problems)
+    check_links(problems)
+    if problems:
+        print("docs-lint: FAIL", flush=True)
+        for p in problems:
+            print(f"  {p}", flush=True)
+        return 1
+    print("docs-lint: OK (tree, bench sections, README snippets, links)",
+          flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

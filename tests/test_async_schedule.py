@@ -1,0 +1,395 @@
+"""Tests for the ISSUE-9 scheduling lab: bounded-staleness Reduce
+(`MapReduceConfig.staleness`), the degree-stratified / overlap-minimizing
+partitioners (`MapReduceConfig.partitioner`), and DGL-KE-style joint
+negative sampling (`KGConfig.negatives='joint'`).
+
+The contracts pinned here:
+
+- staleness=0 is the synchronous engine *verbatim* (bit-identical params
+  and losses — the dispatch never enters the stale code path);
+- staleness=S runs are deterministic (same seed => bitwise same result)
+  and block-split invariant — worker locals thread through the block
+  state, so slicing blocks at eval/checkpoint boundaries cannot change
+  results;
+- the stale Reduce composes with merge_transport='sparse' and
+  table_sharding='sharded' bit-identically to its dense reference, for
+  every merge strategy;
+- joint negatives restrict bitwise to the per-triplet energies on the
+  generic fallback (candidate i of row i IS row i's corruption), match
+  the closed forms to float tolerance, and keep the sparse-transport
+  bitwise contract;
+- the partitioners keep the engine's balance rule (exactly N//W disjoint
+  triplets per worker) while delivering their structural property
+  (degree mix per worker / reduced cross-worker entity overlap).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import kg as kg_api
+from repro.core import mapreduce
+from repro.core.models import base as models_base
+from repro.core.models import get_model
+from repro.core.models.base import KGConfig
+from repro.data import kg as kg_lib
+
+MODELS = ["transe", "transh", "distmult"]
+W = 2
+
+
+def _one_device_mesh():
+    return jax.make_mesh((1,), ("workers",))
+
+
+def _fit(tiny_kg, *, epochs=8, **kw):
+    defaults = dict(
+        pipeline="device", n_workers=W, dim=8, learning_rate=0.05,
+        batch_size=64, seed=0, block_epochs=4, merge_every=2)
+    defaults.update(kw)
+    return kg_api.fit(tiny_kg, epochs=epochs, **defaults)
+
+
+def _assert_identical(r1, r2):
+    np.testing.assert_array_equal(
+        np.asarray(r1.loss_history, np.float32),
+        np.asarray(r2.loss_history, np.float32))
+    assert set(r1.params) == set(r2.params)
+    for k in r1.params:
+        np.testing.assert_array_equal(
+            np.asarray(r1.params[k]), np.asarray(r2.params[k]),
+            err_msg=f"table {k}")
+
+
+def _identical(r1, r2) -> bool:
+    if not np.array_equal(np.asarray(r1.loss_history),
+                          np.asarray(r2.loss_history)):
+        return False
+    return all(
+        np.array_equal(np.asarray(r1.params[k]), np.asarray(r2.params[k]))
+        for k in r1.params)
+
+
+# ---------------------------------------------------------------------------
+# Bounded staleness: S=0 identity, determinism, block invariance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("transport", ["dense", "sparse"])
+def test_staleness_zero_is_sync(tiny_kg, transport):
+    """S=0 must be the synchronous engine bit-for-bit — the dispatch
+    picks the pre-existing block functions, staleness never enters."""
+    ref = _fit(tiny_kg, merge_transport=transport)
+    got = _fit(tiny_kg, merge_transport=transport, staleness=0)
+    _assert_identical(ref, got)
+
+
+def test_staleness_zero_is_sync_shard_map(tiny_kg):
+    kw = dict(backend="shard_map", mesh=_one_device_mesh(), n_workers=1)
+    ref = _fit(tiny_kg, **kw)
+    got = _fit(tiny_kg, staleness=0, **kw)
+    _assert_identical(ref, got)
+
+
+def test_staleness_changes_trajectory_and_learns(tiny_kg):
+    """S>0 actually reschedules (different params than sync) and still
+    trains the model."""
+    sync = _fit(tiny_kg, staleness=0)
+    stale = _fit(tiny_kg, staleness=1)
+    assert not _identical(sync, stale)
+    assert stale.loss_history[-1] < stale.loss_history[0], stale.loss_history
+
+
+def test_staleness_deterministic(tiny_kg):
+    """Same seed => bitwise same run (the schedule is fold_in-pure in
+    (seed, worker, round)); a different seed diverges."""
+    r1 = _fit(tiny_kg, staleness=2)
+    r2 = _fit(tiny_kg, staleness=2)
+    _assert_identical(r1, r2)
+    r3 = _fit(tiny_kg, staleness=2, seed=1)
+    assert not _identical(r1, r3)
+
+
+@pytest.mark.parametrize("transport", ["dense", "sparse"])
+def test_staleness_block_invariance(tiny_kg, transport):
+    """Worker locals persist across block boundaries, so block slicing —
+    which the driver does at eval/checkpoint/repartition points — cannot
+    change a stale run's results."""
+    kw = dict(staleness=1, merge_transport=transport)
+    r2 = _fit(tiny_kg, block_epochs=2, **kw)
+    r4 = _fit(tiny_kg, block_epochs=4, **kw)
+    r8 = _fit(tiny_kg, block_epochs=8, **kw)
+    _assert_identical(r2, r4)
+    _assert_identical(r2, r8)
+
+
+def _check_stale_sparse_matches_dense(tiny_kg, strategy):
+    """The participation-masked stale Reduce is bit-identical between the
+    dense and packed sparse transports."""
+    dense = _fit(tiny_kg, staleness=2, strategy=strategy)
+    sparse = _fit(tiny_kg, staleness=2, strategy=strategy,
+                  merge_transport="sparse")
+    _assert_identical(dense, sparse)
+
+
+def test_stale_sparse_matches_dense(tiny_kg):
+    _check_stale_sparse_matches_dense(tiny_kg, "average")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "strategy",
+    ["average_all", "random", "miniloss_perkey", "miniloss_global"])
+def test_stale_sparse_matches_dense_all_strategies(tiny_kg, strategy):
+    """Full strategy matrix (CI slow-suites; tier-1 keeps 'average' as the
+    fast cross-section)."""
+    _check_stale_sparse_matches_dense(tiny_kg, strategy)
+
+
+def test_stale_sharded_matches_replicated(tiny_kg):
+    ref = _fit(tiny_kg, staleness=1, merge_transport="sparse")
+    got = _fit(tiny_kg, staleness=1, merge_transport="sparse",
+               table_sharding="sharded")
+    _assert_identical(ref, got)
+
+
+def test_stale_shard_map_matches_vmap(tiny_kg):
+    """Cross-backend agreement on a single-device mesh (real W>1 meshes
+    run in tests/helpers/multiworker_check.py): params bitwise, the
+    reported loss to the usual collective tolerance."""
+    kw = dict(staleness=1, n_workers=1)
+    rv = _fit(tiny_kg, **kw)
+    rs = _fit(tiny_kg, backend="shard_map", mesh=_one_device_mesh(), **kw)
+    for k in rv.params:
+        np.testing.assert_array_equal(
+            np.asarray(rv.params[k]), np.asarray(rs.params[k]),
+            err_msg=f"table {k}")
+    np.testing.assert_allclose(rv.loss_history, rs.loss_history, rtol=1e-6)
+
+
+def test_stale_composes_with_repartition(tiny_kg):
+    kw = dict(staleness=1, repartition_every=4)
+    r4 = _fit(tiny_kg, block_epochs=4, **kw)
+    r2 = _fit(tiny_kg, block_epochs=2, **kw)
+    _assert_identical(r4, r2)
+    assert r4.loss_history[-1] < r4.loss_history[0]
+
+
+def test_staleness_validation():
+    with pytest.raises(ValueError, match="staleness must be >= 0"):
+        mapreduce.MapReduceConfig(staleness=-1)
+    with pytest.raises(ValueError, match="pipeline='device'"):
+        mapreduce.MapReduceConfig(staleness=1, pipeline="host")
+    with pytest.raises(ValueError, match="pipeline='device'"):
+        mapreduce.MapReduceConfig(
+            staleness=1, paradigm="bgd", pipeline="device")
+
+
+def test_staleness_rejects_checkpointing(tiny_kg, tmp_path):
+    """The run state includes worker locals the manifest cannot capture —
+    checkpoint/resume must refuse rather than resume wrongly."""
+    with pytest.raises(ValueError, match="cannot checkpoint or resume"):
+        _fit(tiny_kg, staleness=1, ckpt_dir=str(tmp_path),
+             checkpoint_every=4, sync_checkpoints=True)
+
+
+# ---------------------------------------------------------------------------
+# Joint negative sampling
+# ---------------------------------------------------------------------------
+
+def _joint_fixture(model_name, seed=3, B=32):
+    model = get_model(model_name)
+    tcfg = KGConfig(n_entities=50, n_relations=4, dim=8)
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    params = model.init_params(k0, tcfg)
+    pos = jax.random.randint(k1, (B, 3), 0, 4)
+    pos = pos.at[:, 0].set(jax.random.randint(k2, (B,), 0, 50))
+    pos = pos.at[:, 2].set(
+        jax.random.randint(jax.random.fold_in(k2, 1), (B,), 0, 50))
+    neg = model.make_negatives(jax.random.fold_in(k1, 7), pos, tcfg, None)
+    return model, tcfg, params, pos, neg
+
+
+@pytest.mark.parametrize("model_name", MODELS)
+def test_joint_generic_diagonal_is_pertriplet(model_name):
+    """Candidate i of the joint pool IS row i's corruption, so the
+    diagonal of the generic (substitute-and-score) joint energies must be
+    bitwise the per-triplet energies — the anchor that makes joint
+    sampling a *scoring layout* change, not a math change."""
+    model, tcfg, params, pos, neg = _joint_fixture(model_name)
+    cand, side_head = model.joint_parts(pos, neg, 0)
+    generic = models_base.KGModel.joint_energies(
+        model, params, pos, cand, side_head, tcfg.norm)
+    np.testing.assert_array_equal(
+        np.asarray(jax.numpy.diagonal(generic)),
+        np.asarray(model.energy(params, neg, tcfg.norm)),
+        err_msg=f"{model_name} generic joint diagonal")
+
+
+@pytest.mark.parametrize("norm", ["l1", "l2"])
+@pytest.mark.parametrize("model_name", MODELS)
+def test_joint_closed_form_matches_generic(model_name, norm):
+    """The per-model (B, C) closed forms reorder the float ops (shared
+    query, one broadcast/matmul — under l2 TransE expands the distance to
+    |c|^2 - 2c.q + |q|^2 so the whole matrix is one matmul), so they
+    match the generic fallback to tolerance, not bitwise."""
+    model, tcfg, params, pos, neg = _joint_fixture(model_name)
+    cand, side_head = model.joint_parts(pos, neg, 0)
+    generic = models_base.KGModel.joint_energies(
+        model, params, pos, cand, side_head, norm)
+    closed = model.joint_energies(params, pos, cand, side_head, norm)
+    np.testing.assert_allclose(
+        np.asarray(closed), np.asarray(generic), rtol=1e-4, atol=1e-5,
+        err_msg=f"{model_name} joint closed form ({norm})")
+
+
+def test_joint_hinges_mask_gold():
+    """A candidate equal to a row's gold entity is excluded from that
+    row's loss (valid mask), and the loss normalizes by the valid count."""
+    model, tcfg, params, pos, neg = _joint_fixture("transe")
+    cand, side_head = model.joint_parts(pos, neg, 0)
+    hinges, valid = model.joint_hinges(
+        params, pos, neg, margin=tcfg.margin, norm=tcfg.norm)
+    gold = np.where(np.asarray(side_head),
+                    np.asarray(pos[:, 0]), np.asarray(pos[:, 2]))
+    expect_valid = (np.asarray(cand)[None, :] != gold[:, None])
+    np.testing.assert_array_equal(np.asarray(valid).astype(bool),
+                                  expect_valid)
+    assert np.all(np.asarray(hinges)[~expect_valid] == 0.0)
+
+
+@pytest.mark.parametrize("paradigm", ["sgd", "bgd"])
+def test_joint_fit_learns(tiny_kg, paradigm):
+    res = _fit(tiny_kg, paradigm=paradigm, negatives="joint",
+               merge_every=1, block_epochs=8)
+    assert res.loss_history[-1] < res.loss_history[0], res.loss_history
+
+
+def test_joint_candidate_cap(tiny_kg):
+    """neg_candidates=C slices the pool to its first C corruptions — a
+    different objective than the full pool, still trainable."""
+    full = _fit(tiny_kg, negatives="joint")
+    capped = _fit(tiny_kg, negatives="joint", neg_candidates=8)
+    assert not _identical(full, capped)
+    assert capped.loss_history[-1] < capped.loss_history[0]
+
+
+def test_joint_sparse_transport_bitwise(tiny_kg):
+    """The sparse-transport contract (bit-identical to dense) survives
+    the joint loss: every candidate it touches comes from the existing
+    neg tensor, so changed rows stay inside the touch stats."""
+    dense = _fit(tiny_kg, negatives="joint")
+    sparse = _fit(tiny_kg, negatives="joint", merge_transport="sparse")
+    _assert_identical(dense, sparse)
+
+
+def test_joint_composes_with_staleness(tiny_kg):
+    res = _fit(tiny_kg, negatives="joint", staleness=1)
+    assert res.loss_history[-1] < res.loss_history[0], res.loss_history
+
+
+def test_negatives_validation():
+    with pytest.raises(ValueError, match="negatives"):
+        KGConfig(n_entities=10, n_relations=2, negatives="both")
+    with pytest.raises(ValueError, match="neg_candidates"):
+        KGConfig(n_entities=10, n_relations=2, neg_candidates=-1)
+
+
+# ---------------------------------------------------------------------------
+# Partitioners
+# ---------------------------------------------------------------------------
+
+def _coverage_ok(parts, triplets):
+    """Each worker holds exactly N//W rows; all rows come from the
+    original set; no triplet instance is assigned twice."""
+    n_workers = parts.shape[0]
+    assert parts.shape == (n_workers, len(triplets) // n_workers, 3)
+    pool = {}
+    for t in triplets:
+        pool[tuple(t)] = pool.get(tuple(t), 0) + 1
+    for t in parts.reshape(-1, 3):
+        key = tuple(t)
+        assert pool.get(key, 0) > 0, f"row {key} over-assigned or foreign"
+        pool[key] -= 1
+
+
+@pytest.mark.parametrize("name", ["balanced", "stratified", "degree",
+                                  "overlap"])
+def test_partitioners_balance_and_coverage(tiny_kg, name):
+    parts = kg_lib.PARTITIONERS[name](0, tiny_kg.train, 4)
+    _coverage_ok(parts, tiny_kg.train)
+
+
+def test_degree_partitioner_mixes_strata(tiny_kg):
+    """Every worker gets the same degree mix: per-stratum counts across
+    workers differ by at most 1 (the round-robin deal), where a plain
+    shuffle-split drifts by tens."""
+    n_workers = 4
+    strata = kg_lib.triplet_strata(tiny_kg.train, tiny_kg.n_entities)
+    by_row = {}
+    for t, s in zip(tiny_kg.train, strata):
+        by_row.setdefault(tuple(t), []).append(int(s))
+    parts = kg_lib.partition_degree_stratified(0, tiny_kg.train, n_workers)
+    hists = []
+    for w in range(n_workers):
+        labels = [by_row[tuple(t)][0] for t in parts[w]]
+        hists.append(np.bincount(labels, minlength=8))
+    hists = np.array(hists)
+    assert (hists.max(axis=0) - hists.min(axis=0)).max() <= 1, hists
+
+
+def test_overlap_partitioner_reduces_replication(tiny_kg):
+    """The greedy streaming split places triplets with workers already
+    holding their entities — total cross-worker entity replication must
+    drop below the uniform split's."""
+    def replication(parts):
+        return sum(
+            len(np.unique(parts[w][:, [0, 2]]))
+            for w in range(parts.shape[0]))
+
+    balanced = kg_lib.partition_balanced(0, tiny_kg.train, 4)
+    overlap = kg_lib.partition_overlap_min(0, tiny_kg.train, 4)
+    assert replication(overlap) < replication(balanced), (
+        replication(overlap), replication(balanced))
+
+
+def test_partitioner_alias_and_validation(tiny_kg):
+    cfg = mapreduce.MapReduceConfig(partition="degree")
+    assert cfg.partitioner == "degree"
+    with pytest.raises(ValueError, match="bad partition"):
+        mapreduce.MapReduceConfig(partition="roundrobin")
+    with pytest.raises(ValueError, match="overlap"):
+        mapreduce.MapReduceConfig(
+            partition="overlap", pipeline="device",
+            schedule=mapreduce.EpochSchedule(
+                block_epochs=2, repartition_every=2))
+
+
+@pytest.mark.parametrize("name", ["degree", "overlap"])
+def test_partitioners_train_end_to_end(tiny_kg, name):
+    res = _fit(tiny_kg, partitioner=name)
+    assert res.loss_history[-1] < res.loss_history[0], res.loss_history
+
+
+def test_stratified_repartition_preserves_mix(tiny_kg):
+    """partition='degree' + repartition_every: the device re-partition
+    rounds redraw membership *within* strata, keeping every worker's
+    degree mix; the run is still block-split invariant."""
+    kw = dict(partitioner="degree", repartition_every=4)
+    r4 = _fit(tiny_kg, block_epochs=4, **kw)
+    r2 = _fit(tiny_kg, block_epochs=2, **kw)
+    _assert_identical(r4, r2)
+
+    strata = jax.numpy.asarray(
+        kg_lib.triplet_strata(tiny_kg.train[:800], 300))
+    perm0 = kg_lib.repartition_perm_stratified(
+        jax.random.PRNGKey(0), strata, 4, 0)
+    np.testing.assert_array_equal(np.asarray(perm0), np.arange(800))
+    perm1 = kg_lib.repartition_perm_stratified(
+        jax.random.PRNGKey(0), strata, 4, 1)
+    assert not np.array_equal(np.asarray(perm1), np.arange(800))
+    np.testing.assert_array_equal(np.sort(np.asarray(perm1)), np.arange(800))
+    # each worker's slice of the permuted order keeps the stratum mix
+    labels = np.asarray(strata)[np.asarray(perm1)].reshape(4, 200)
+    hists = np.array([np.bincount(r, minlength=8) for r in labels])
+    assert (hists.max(axis=0) - hists.min(axis=0)).max() <= 1, hists
