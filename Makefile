@@ -2,8 +2,8 @@
 # local runs, and CI all use the tier-1 command from ROADMAP.md.
 PY ?= python
 
-.PHONY: test test-fast test-slow quickstart bench bench-latency bench-check \
-	serve lint golden
+.PHONY: test test-fast test-slow quickstart bench bench-latency \
+	bench-online bench-check serve lint golden
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -31,6 +31,12 @@ bench:
 # committed BENCH_latency.json baseline.
 bench-latency:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_latency
+
+# Just the online-tier bench (held-out-entity update parity vs full
+# retrain + serve-while-refresh swap consistency), printed without
+# touching the committed BENCH_online.json baseline.
+bench-online:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_online
 
 # Serving-tier smoke: train a small KG, stand up KGServer, and drive
 # open-loop traffic at it through the launcher.

@@ -39,12 +39,17 @@ import sys
 
 DEFAULT_NAMES = ("BENCH_pipeline.json", "BENCH_eval.json",
                  "BENCH_serve.json", "BENCH_latency.json",
-                 "BENCH_scale.json", "BENCH_async.json")
+                 "BENCH_scale.json", "BENCH_async.json",
+                 "BENCH_online.json")
 RATE_SUFFIX = "_per_s"
 # measured (non-identity) fields: gated bands or recorded-only
 MEASURED_SUFFIXES = (RATE_SUFFIX, "_speedup", "_ms", "_rate",
                      "_recompiles", "_bytes", "_rank")
-MEASURED_FIELDS = frozenset({"mean_batch"})
+# recorded-only scalars that would otherwise read as row identity:
+# bench_online's --quick profile reruns the parity cell with shrunken
+# epoch counts on the same graph, and must still match the baseline row
+MEASURED_FIELDS = frozenset({"mean_batch", "epochs_retrain",
+                             "epochs_update"})
 
 
 def _measured(field: str) -> bool:

@@ -21,7 +21,11 @@ round trip -> ``BENCH_scale.json``; ``--quick`` keeps the 50k-entity
 train + shard_table cells + ingest row), and the async bench
 (time-to-reference-quality of the bounded-staleness / joint-negative
 / partitioner training variants vs the synchronous baseline at W=4
--> ``BENCH_async.json``; ``--quick`` keeps the sync + joint-48 cells).
+-> ``BENCH_async.json``; ``--quick`` keeps the sync + joint-48 cells),
+and the online bench (held-out-entity ``kb.update(scope="cold")`` parity
+vs full retrain + serve-while-refresh swap consistency
+-> ``BENCH_online.json``; ``--quick`` reruns the parity cell with
+shrunken epoch counts on the same graph).
 
 ``--quick`` is the CI bench-regression profile: the W in {1, 4}
 cross-section of the grids (and single-repeat trace overhead) — the
@@ -70,6 +74,7 @@ def main() -> None:
     ap.add_argument("--latency-out", default="BENCH_latency.json")
     ap.add_argument("--scale-out", default="BENCH_scale.json")
     ap.add_argument("--async-out", default="BENCH_async.json")
+    ap.add_argument("--online-out", default="BENCH_online.json")
     ap.add_argument("--out-dir", default=".",
                     help="directory the BENCH_*.json files are written to")
     ap.add_argument("--quick", action="store_true",
@@ -81,8 +86,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_async, bench_eval, bench_latency,
-                            bench_pipeline, bench_scale, bench_serve,
-                            bench_trace)
+                            bench_online, bench_pipeline, bench_scale,
+                            bench_serve, bench_trace)
 
     os.makedirs(args.out_dir, exist_ok=True)
 
@@ -230,6 +235,29 @@ def main() -> None:
         },
         "rows": async_rows,
     }, path(args.async_out))
+
+    print("== bench:online ==", flush=True)
+    t0 = time.time()
+    online_rows = bench_online.run(verbose=True, model=args.model,
+                                   quick=args.quick)
+    print(f"== bench:online done ({time.time() - t0:.0f}s) ==", flush=True)
+    _write({
+        "bench": "online",
+        **_env(),
+        "config": {
+            "epochs_retrain": bench_online.EPOCHS_RETRAIN,
+            "epochs_update": bench_online.EPOCHS_UPDATE,
+            "delta_frac": bench_online.DELTA_FRAC,
+            "dim": bench_online.DIM,
+            "workers": bench_online.WORKERS,
+            "learning_rate": bench_online.LR,
+            "serve_queries": bench_online.SERVE_QUERIES,
+            "serve_delta": bench_online.SERVE_DELTA,
+            "graph": "synthetic_kg(2, n_entities=1000, n_relations=12, "
+                     "n_triplets=100000)",
+        },
+        "rows": online_rows,
+    }, path(args.online_out))
 
     if args.full:
         from benchmarks import run as run_mod

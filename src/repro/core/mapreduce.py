@@ -1083,6 +1083,7 @@ def make_block_fn(
     donate: bool = False,
     with_overflow: bool = False,
     strata: Optional[jax.Array] = None,
+    update_mask: Optional[Params] = None,
 ) -> Callable:
     """Returns jitted ``block_fn(params, epoch_ids) -> (params, losses)``
     — or ``(params, losses, overflow)`` with ``with_overflow=True``, where
@@ -1137,6 +1138,16 @@ def make_block_fn(
     partitioner's mix per worker.  ``None`` keeps the original unstratified
     permutation byte-for-byte.
 
+    ``update_mask`` (one bool row-mask per param table; the online tier's
+    masked fine-tune) freezes every row whose bit is False **bitwise**:
+    the sparse SGD step skips frozen candidate rows, epoch-start/step
+    constraint projections are clamped on frozen rows, and each merge
+    round's output is clamped back to the round input on frozen rows —
+    so frozen rows are inductively byte-identical to the initial params
+    while free rows see exactly the gradients a from-scratch run
+    restricted to the same mask would compute.  Requires the SGD
+    paradigm's sparse transport with ``staleness == 0``.
+
     The vmap and shard_map backends derive identical per-worker keys (vmapped
     ``fold_in(·, w)`` vs ``fold_in(·, axis_index)``), so the two backends see
     the same batches and negatives."""
@@ -1148,9 +1159,33 @@ def make_block_fn(
     ax = cfg.axis_name
     k_data, k_neg, k_merge, k_part, k_stale = _device_keys(seed)
     strata = None if strata is None else jnp.asarray(strata)
+    if update_mask is not None:
+        if (cfg.paradigm != "sgd" or cfg.merge_transport != "sparse"
+                or S > 0):
+            raise ValueError(
+                "update_mask (the masked fine-tune) requires the SGD "
+                "paradigm with merge_transport='sparse' and staleness=0 — "
+                f"got paradigm={cfg.paradigm!r}, "
+                f"merge_transport={cfg.merge_transport!r}, staleness={S}")
+        update_mask = {name: jnp.asarray(m, dtype=bool)
+                       for name, m in update_mask.items()}
     run = functools.partial(
         model.run_epoch, cfg=tcfg,
-        sparse_apply=cfg.merge_transport == "sparse")
+        sparse_apply=cfg.merge_transport == "sparse",
+        update_mask=update_mask)
+
+    def clamp_frozen(merged: Params, base: Params) -> Params:
+        """Clamp frozen rows of a merge round's output back to the round
+        input (merge arithmetic — non-pow2 averaging, virgin-row
+        reconstruction — is not guaranteed bitwise-identity on rows no
+        worker moved); ``base`` frozen rows are inductively original."""
+        if update_mask is None:
+            return merged
+        return {
+            name: jnp.where(update_mask[name][:, None], merged[name],
+                            base[name])
+            for name in merged
+        }
 
     def block_part(epoch_ids: jax.Array) -> jax.Array:
         """The (W, N_w, 3) partition in effect for this whole block (vmap
@@ -1237,6 +1272,7 @@ def make_block_fn(
             else:
                 merged = _merge_tables_stacked(
                     model, cfg.strategy, stacked, acc, mk)
+            merged = clamp_frozen(merged, base)
             return (_broadcast(merged), ovf), losses
 
         (stacked, ovf), losses = jax.lax.scan(
@@ -1330,7 +1366,8 @@ def make_block_fn(
                     pos, neg = worker_epoch_data(e, w, part_w)
                     local, stats = model.run_epoch(
                         local, pos, neg, tcfg,
-                        sparse_apply=cfg.merge_transport == "sparse")
+                        sparse_apply=cfg.merge_transport == "sparse",
+                        update_mask=update_mask)
                     acc = jax.tree.map(jnp.add, acc, stats)
                     return (local, acc), jax.lax.pmean(stats.mean_loss, ax)
 
@@ -1345,6 +1382,7 @@ def make_block_fn(
                 else:
                     out = _merge_tables_collective(
                         model, cfg, local, acc, acc.mean_loss / K, mk)
+                out = clamp_frozen(out, base)
                 return (out, ovf), losses
 
             (params, ovf), losses = jax.lax.scan(
@@ -1617,6 +1655,7 @@ def train(
     start_epoch: int = 0,
     resume_fresh_init: bool = True,
     prior_history: Optional[list] = None,
+    update_mask: Optional[Params] = None,
 ) -> TrainResult:
     """Training driver: balanced partitioning, deterministic batches,
     negative sampling, Map/Reduce epochs, loss history.  With
@@ -1658,9 +1697,54 @@ def train(
     ``prior_history`` (the manifest's loss history) is prepended so a
     resumed ``TrainResult`` matches the unbroken run's.
 
+    Masked fine-tune: ``update_mask`` (one bool row-mask per param table,
+    shaped to the table's role) freezes unmasked rows bitwise while free
+    rows train exactly as a from-scratch run restricted to the same mask
+    would — the online tier's incremental ``update()``.  Requires the SGD
+    paradigm's device pipeline with ``merge_transport='sparse'``,
+    ``staleness=0``, caller-provided ``params``, and no checkpointing
+    (delta checkpoints live in ``repro.online``, not here).
+
     ``cfg.n_workers == 1`` with any backend reproduces single-thread
     Algorithm 1 (the paper's baseline) for the chosen model."""
     model = _resolve(cfg, model)
+    if update_mask is not None:
+        if cfg.paradigm != "sgd" or cfg.merge_transport != "sparse":
+            raise ValueError(
+                "update_mask requires paradigm='sgd' with "
+                "merge_transport='sparse' — the masked fine-tune rides the "
+                "sparse transport's touched-row machinery")
+        if cfg.pipeline != "device":
+            raise ValueError(
+                "update_mask requires pipeline='device' — the host "
+                "pipeline's per-epoch dispatch has no masked step")
+        if cfg.staleness > 0:
+            raise ValueError(
+                f"update_mask with staleness={cfg.staleness}: stale worker "
+                "locals would carry frozen-row drift across rounds; masked "
+                "fine-tunes are synchronous")
+        if checkpoint is not None:
+            raise ValueError(
+                "update_mask with checkpoint: masked fine-tunes persist "
+                "through the online tier's delta checkpoints "
+                "(repro.online), not base kg_train snapshots")
+        if params is None:
+            raise ValueError(
+                "update_mask without params: a masked fine-tune refines an "
+                "existing artifact's tables — pass them")
+        roles = model.param_roles()
+        if set(update_mask) != set(roles):
+            raise ValueError(
+                f"update_mask tables {sorted(update_mask)} do not match "
+                f"model {model.name!r} tables {sorted(roles)}")
+        for name, m in update_mask.items():
+            rows = (tcfg.n_entities if roles[name] == "ent"
+                    else tcfg.n_relations)
+            if tuple(np.shape(m)) != (rows,):
+                raise ValueError(
+                    f"update_mask[{name!r}] has shape {np.shape(m)}, "
+                    f"expected ({rows},) — one bool per row of the "
+                    f"{roles[name]!r}-role table")
     if start_epoch < 0 or (start_epoch and start_epoch >= epochs):
         raise ValueError(
             f"start_epoch={start_epoch} must be in [0, epochs={epochs}) — "
@@ -1772,7 +1856,7 @@ def train(
             recorder=recorder, eval_loop=eval_loop,
             caller_params=caller_params, writer=writer,
             start_epoch=start_epoch, prior_history=prior_history,
-            strata=strata)
+            strata=strata, update_mask=update_mask)
 
     # surface sparse-transport capacity overflow at every Reduce (the
     # loop already syncs float(loss) per epoch, so this costs nothing)
@@ -1848,6 +1932,7 @@ def _train_device(
     start_epoch: int = 0,
     prior_history: Optional[list] = None,
     strata: Optional[np.ndarray] = None,
+    update_mask: Optional[Params] = None,
 ) -> TrainResult:
     """Device-pipeline driver: put the partitioned triplets on device once,
     then run epochs in compiled scan blocks (``make_block_fn``).  The only
@@ -1898,7 +1983,7 @@ def _train_device(
     block_fn = make_block_fn(
         cfg, tcfg, part, mesh=mesh, model=model, head_prob=head_prob,
         seed=seed, donate=donate, with_overflow=with_overflow,
-        strata=strata)
+        strata=strata, update_mask=update_mask)
 
     # bounded staleness threads (global_view, worker_locals) through the
     # blocks — locals must survive block boundaries or slicing at eval/

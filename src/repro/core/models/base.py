@@ -477,7 +477,8 @@ class KGModel:
         return cand, compact, remap(pos), remap(neg)
 
     def sgd_step_sparse(
-        self, params: Params, pos: jax.Array, neg: jax.Array, cfg: KGConfig
+        self, params: Params, pos: jax.Array, neg: jax.Array, cfg: KGConfig,
+        update_mask: Params | None = None,
     ) -> tuple[Params, jax.Array]:
         """:meth:`sgd_step` touching only the rows the batch references —
         the ParaGraphE idiom, and the Map-phase half of the sparse
@@ -492,7 +493,12 @@ class KGModel:
         and a row no batch id references has gradient exactly ``+0.0``
         under the dense step (``p - lr*0 == p`` bitwise), so skipping it
         changes nothing.  tests/test_sparse_transport.py pins the
-        equivalence across models, strategies, and pipelines."""
+        equivalence across models, strategies, and pipelines.
+
+        ``update_mask`` (the online tier's masked fine-tune) freezes every
+        row whose mask bit is False: a frozen candidate row scatters its
+        *unchanged* compact value back (a bitwise no-op), while free rows
+        step normally against the pristine frozen values."""
         cand, compact, pos_c, neg_c = self._compact_batch(
             params, pos, neg, cfg)
         # the remap preserves id (in)equality — both pos and neg ids appear
@@ -502,14 +508,44 @@ class KGModel:
         loss, grads = jax.value_and_grad(self._loss_fn(cfg))(
             compact, pos_c, neg_c)
         roles = self.param_roles()
+        stepped = {
+            name: compact[name] - cfg.learning_rate * grads[name]
+            for name in params
+        }
+        if update_mask is not None:
+            free = {
+                name: jnp.take(update_mask[name], cand[roles[name]],
+                               mode="fill", fill_value=False)
+                for name in params
+            }
+            stepped = {
+                name: jnp.where(free[name][:, None], stepped[name],
+                                compact[name])
+                for name in params
+            }
         params = {
             name: params[name].at[cand[roles[name]]].set(
-                compact[name] - cfg.learning_rate * grads[name], mode="drop")
+                stepped[name], mode="drop")
             for name in params
         }
         if cfg.normalize == "step":
-            params = self.normalize(params)
+            params = self._masked_normalize(params, update_mask)
         return params, loss
+
+    def _masked_normalize(
+        self, params: Params, update_mask: Params | None
+    ) -> Params:
+        """:meth:`normalize`, with frozen rows clamped back bitwise when an
+        ``update_mask`` is in play (re-projection of an already-trained row
+        is not always the identity — e.g. 'epoch'-mode artifacts)."""
+        normed = self.normalize(params)
+        if update_mask is None:
+            return normed
+        return {
+            name: jnp.where(update_mask[name][:, None], normed[name],
+                            params[name])
+            for name in params
+        }
 
     def run_epoch(
         self,
@@ -518,17 +554,28 @@ class KGModel:
         neg_batches: jax.Array,     # (S, B, 3) corrupted counterparts
         cfg: KGConfig,
         sparse_apply: bool = False,
+        update_mask: Params | None = None,
     ) -> tuple[Params, EpochStats]:
         """One epoch of Algorithm 1 on one worker: constraint projection, then
         scan SGD over the worker's minibatches, tracking the per-key stats
         Reduce needs.  Pure; used by the vmap backend (vmapped over workers)
         and inside shard_map (per shard).  ``sparse_apply`` swaps the step
         for the bitwise-identical compact-row :meth:`sgd_step_sparse`
-        (engaged by ``merge_transport="sparse"``)."""
-        step = self.sgd_step_sparse if sparse_apply else self.sgd_step
+        (engaged by ``merge_transport="sparse"``).  ``update_mask`` (one
+        bool row-mask per param table) freezes unmasked rows bitwise — the
+        online tier's incremental fine-tune; it requires the sparse step."""
+        if update_mask is not None and not sparse_apply:
+            raise ValueError(
+                "update_mask requires sparse_apply=True — the masked "
+                "fine-tune rides the compact-row step's candidate gather")
+        if update_mask is not None:
+            step = functools.partial(
+                self.sgd_step_sparse, update_mask=update_mask)
+        else:
+            step = self.sgd_step_sparse if sparse_apply else self.sgd_step
         pair_fn = self._pair_loss_fn(cfg)
         if cfg.normalize == "epoch":
-            params = self.normalize(params)
+            params = self._masked_normalize(params, update_mask)
         E, R = cfg.n_entities, cfg.n_relations
         zeros = (
             jnp.zeros((E,), cfg.dtype),

@@ -236,6 +236,29 @@ def load_vocab(cache_dir: str) -> Tuple[Dict[str, int], Dict[str, int]]:
     )
 
 
+def extend_vocab(
+    triples,
+    ent2id: Dict[str, int],
+    rel2id: Dict[str, int],
+) -> np.ndarray:
+    """Encode ``(head, relation, tail)`` string triples against existing
+    vocabulary maps, interning unseen names **in place** — per triple head,
+    then relation, then tail, in input order — exactly the first-seen id
+    assignment :func:`load_dataset` / ``kg.load_tsv_dir`` use while
+    streaming.  The online tier leans on this identity: a graph grown
+    incrementally by ``kb.update()`` assigns the same ids (hence the same
+    canonical fingerprints) as re-ingesting the concatenated TSV from
+    scratch (pinned by tests/test_online.py).  Returns the encoded
+    ``(N, 3)`` int32 array."""
+    rows = []
+    for h, r, t in triples:
+        rows.append((_intern(ent2id, str(h)), _intern(rel2id, str(r)),
+                     _intern(ent2id, str(t))))
+    if not rows:
+        return np.zeros((0, 3), np.int32)
+    return np.asarray(rows, np.int32)
+
+
 def load_dataset(
     path: str,
     *,

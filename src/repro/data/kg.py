@@ -197,6 +197,63 @@ class KG:
                 self.valid, self.test, self.n_entities, seed)
         return self._tc_negatives[seed]
 
+    def invalidate_caches(self) -> None:
+        """Drop every lazily built known-triplet structure.
+
+        The splits are treated as immutable after construction everywhere
+        in the repo, so the caches never go stale on the supported paths —
+        but anything that *does* mutate a graph in place (don't) must call
+        this, or filtered ranks and classification negatives keep using
+        pre-mutation candidate sets.  The online tier never needs it: a
+        graph update goes through :meth:`extend`, which returns a fresh
+        instance with fresh caches."""
+        self._known = None
+        self._known_index = None
+        self._filter_cands = {}
+        self._tc_negatives = {}
+
+    def extend(
+        self,
+        new_train: np.ndarray,
+        n_entities: Optional[int] = None,
+        n_relations: Optional[int] = None,
+    ) -> "KG":
+        """A **new** graph with ``new_train`` appended to the train split.
+
+        Entity/relation counts grow to cover every id the delta references
+        (or to the explicit ``n_entities``/``n_relations`` the online
+        tier's interning already computed).  Returning a fresh instance —
+        never mutating — is what keeps the lazy eval caches and the
+        :meth:`fingerprint` honest: the extended graph starts with empty
+        caches and a different train digest, so filtered ranks, tc
+        negatives, and the serving tier's answer cache can never reuse
+        pre-update state."""
+        new_train = np.asarray(new_train, np.int32).reshape(-1, 3)
+        n_ent, n_rel = self.n_entities, self.n_relations
+        if len(new_train):
+            n_ent = max(n_ent,
+                        int(new_train[:, (0, 2)].max()) + 1)
+            n_rel = max(n_rel, int(new_train[:, 1].max()) + 1)
+        if n_entities is not None:
+            if n_entities < n_ent:
+                raise ValueError(
+                    f"n_entities={n_entities} does not cover the delta's "
+                    f"max entity id ({n_ent - 1})")
+            n_ent = n_entities
+        if n_relations is not None:
+            if n_relations < n_rel:
+                raise ValueError(
+                    f"n_relations={n_relations} does not cover the delta's "
+                    f"max relation id ({n_rel - 1})")
+            n_rel = n_relations
+        return KG(
+            n_entities=n_ent,
+            n_relations=n_rel,
+            train=np.concatenate([self.train, new_train], axis=0),
+            valid=self.valid,
+            test=self.test,
+        )
+
 
 def _pad_groups(
     groups: list, pad_id: int, max_fanout: Optional[int]

@@ -147,6 +147,7 @@ class KnowledgeBase:
                 for name, arr in sorted(self.params.items())
             },
             "graph": graph_fp,
+            "fingerprint": self.fingerprint(),
             "meta": self.meta,
         }
         return ckpt_lib.save(str(path), step, tree, extra=extra, keep=keep)
@@ -185,6 +186,71 @@ class KnowledgeBase:
         return cls(model=model, params=params, graph=graph,
                    norm=extra.get("norm", "l1"),
                    meta=extra.get("meta") or {})
+
+    @classmethod
+    def load_chain(cls, path: str) -> "KnowledgeBase":
+        """Replay a delta chain: load the base artifact at the chain's
+        first step, then apply each delta in order — allocate the grown
+        tables, copy the surviving prefix, scatter the stored
+        changed/appended rows, extend the graph with the delta triples.
+        Every link is validated both ways: the delta's ``base``
+        fingerprint must match the artifact built so far, and the rebuilt
+        artifact must hash to the delta's ``result`` — a tampered or
+        mis-ordered chain refuses instead of answering from wrong rows."""
+        steps = ckpt_lib.chain_steps(str(path))
+        if not steps:
+            raise FileNotFoundError(f"no chain (or artifact) in {path}")
+        kb = cls.load(path, step=steps[0])
+        for step in steps[1:]:
+            tree, extra = ckpt_lib.load_tree(str(path), step)
+            if not extra.get("delta"):
+                raise ValueError(
+                    f"chain step {step} in {path} is not a delta — "
+                    "multiple base artifacts in one directory?")
+            if extra.get("base") != kb.fingerprint():
+                raise ValueError(
+                    f"delta step {step} applies to fingerprint "
+                    f"{extra.get('base')} but the chain so far builds "
+                    f"{kb.fingerprint()} — corrupted or reordered chain")
+            params = {}
+            for name, shape in (extra.get("tables") or {}).items():
+                old = np.asarray(kb.params[name])
+                table = np.zeros((int(shape[0]), int(shape[1])), old.dtype)
+                table[:old.shape[0]] = old
+                rows = (tree.get("rows") or {}).get(name)
+                if rows is not None and len(np.atleast_1d(rows["idx"])):
+                    table[np.asarray(rows["idx"], np.int64)] = np.asarray(
+                        rows["vals"], old.dtype)
+                params[name] = table
+            graph = kb.graph
+            if graph is not None:
+                gt = (tree.get("graph") or {}).get("train")
+                if gt is None:
+                    gt = np.zeros((0, 3), np.int32)
+                graph = graph.extend(
+                    gt, n_entities=int(extra["n_entities"]),
+                    n_relations=int(extra["n_relations"]))
+            kb = cls(model=kb.model, params=params, graph=graph,
+                     norm=extra.get("norm", kb.norm),
+                     meta=extra.get("meta") or dict(kb.meta))
+            if kb.fingerprint() != extra.get("result"):
+                raise ValueError(
+                    f"replaying delta step {step} in {path} produced "
+                    f"fingerprint {kb.fingerprint()} but the manifest "
+                    f"records {extra.get('result')} — corrupted chain")
+        return kb
+
+    # -- online updates ----------------------------------------------------
+
+    def update(self, new_triples, **updater_kw) -> "KnowledgeBase":
+        """Incrementally fold ``new_triples`` into this artifact and return
+        a NEW KnowledgeBase (this one is immutable by repo convention).
+        Grows the tables for unseen ids, warm-inits new rows, fine-tunes
+        only the touched rows, and extends the graph — see
+        ``repro.online.OnlineUpdater`` for the knobs (epochs, seed,
+        delta_dir, vocab, ...)."""
+        from repro.online import OnlineUpdater
+        return OnlineUpdater(self, **updater_kw).update(new_triples)
 
     # -- serving -----------------------------------------------------------
 

@@ -367,3 +367,18 @@ def evaluate(
         params, kg, norm=norm or "l1", filtered=filtered, model=model,
         engine=engine, **engine_kw
     )
+
+
+def update(kb, new_triples, **updater_kw) -> "kb_lib.KnowledgeBase":
+    """Incrementally fold ``new_triples`` into a trained artifact and
+    return a NEW :class:`KnowledgeBase` — ``kg.update(kb, triples)`` is
+    ``kb.update(triples)``.  Unseen entities/relations get ids exactly as
+    a fresh ``load_tsv_dir`` would intern them, the grown tables warm-init
+    from relation neighbors, and a short masked fine-tune moves only the
+    rows the delta touches (``repro.online.OnlineUpdater``)."""
+    if not isinstance(kb, kb_lib.KnowledgeBase):
+        raise TypeError(
+            f"update() takes a KnowledgeBase artifact, got {type(kb)!r} — "
+            "train one with kg.fit(...).kb or load one with "
+            "KnowledgeBase.load")
+    return kb.update(new_triples, **updater_kw)

@@ -135,15 +135,61 @@ def _run_kg(args) -> None:
         print(f"  triplet_classification_acc="
               f"{metrics['triplet_classification_acc']:.4f}")
 
+    kb = res.kb
+    delta = _read_delta(args.kg_update) if args.kg_update else None
+    if args.kg_refresh_every is not None:
+        if delta is None:
+            raise SystemExit(
+                "--kg-refresh-every streams an update delta through the "
+                "serving tier; add --kg-update PATH to say which triples")
+        if not args.kg_serve:
+            raise SystemExit(
+                "--kg-refresh-every refreshes a live server mid-stream; "
+                "add --kg-serve (without it, --kg-update alone applies "
+                "the delta once after training)")
+    elif delta is not None:
+        kb2 = kb.update(delta, epochs=8, n_workers=args.kg_workers,
+                        learning_rate=args.lr if args.lr is not None
+                        else 5e-2, seed=args.seed)
+        print(f"applied --kg-update {args.kg_update}: {len(delta)} triples, "
+              f"{kb.n_entities} -> {kb2.n_entities} entities, "
+              f"{kb.n_relations} -> {kb2.n_relations} relations "
+              f"[kb={kb2.fingerprint()}]")
+        kb = kb2
+
     if args.kg_serve:
-        _serve_traffic(args, res.kb, graph)
+        _serve_traffic(args, kb, graph,
+                       delta=delta if args.kg_refresh_every else None)
 
 
-def _serve_traffic(args, kb, graph) -> None:
+def _read_delta(path):
+    """Int-id delta triples from one TSV file (``h<TAB>r<TAB>t``)."""
+    import numpy as np
+
+    from repro.data import datasets
+
+    rows = list(datasets.iter_triples(path))
+    if not rows:
+        raise SystemExit(f"--kg-update {path}: no triples")
+    try:
+        ids = [[int(h), int(r), int(t)] for h, r, t in rows]
+    except ValueError:
+        raise SystemExit(
+            f"--kg-update {path} holds string names; the launcher takes "
+            "int-id triples — intern names through the Python API "
+            "(KnowledgeBase.update(..., vocab=(ent2id, rel2id)))")
+    return np.asarray(ids, np.int32)
+
+
+def _serve_traffic(args, kb, graph, delta=None) -> None:
     """Open-loop Poisson traffic through the live serving tier: single
     queries arrive at --kg-qps whether or not the server keeps up, the
     continuous batcher forms them into pre-compiled bucket waves, and
-    the printed stats are the latency distribution actually sustained."""
+    the printed stats are the latency distribution actually sustained.
+    With ``delta`` (--kg-update + --kg-refresh-every) the delta streams
+    through a background RefreshDaemon in --kg-refresh-every-triple
+    chunks while the traffic runs, each chunk hot-swapping a refreshed
+    artifact into the server."""
     import time
 
     import numpy as np
@@ -154,17 +200,44 @@ def _serve_traffic(args, kb, graph) -> None:
     n = args.kg_requests
     picks = graph.test[rng.integers(0, len(graph.test), size=n)]
     arrivals = rng.exponential(1.0 / args.kg_qps, size=n).cumsum()
+    chunks = []
+    if delta is not None:
+        step = max(1, args.kg_refresh_every)
+        chunks = [delta[i:i + step] for i in range(0, len(delta), step)]
+        # spread the chunk submissions across the request stream
+        submit_at = {max(1, n // (len(chunks) + 1)) * (i + 1): c
+                     for i, c in enumerate(chunks)}
     with KGServer(kb, max_batch=16, max_wait_us=2000, default_k=5,
                   warm=True) as server:
+        daemon = None
+        if chunks:
+            from repro.online import RefreshDaemon
+
+            daemon = RefreshDaemon(
+                server, epochs=8, n_workers=args.kg_workers,
+                learning_rate=args.lr if args.lr is not None else 5e-2,
+                seed=args.seed)
+            daemon.start()
         futures = []
         t0 = time.perf_counter()
-        for (h, r, _), t_arr in zip(picks, arrivals):
+        for i, ((h, r, _), t_arr) in enumerate(zip(picks, arrivals)):
             lag = t_arr - (time.perf_counter() - t0)
             if lag > 0:
                 time.sleep(lag)
+            if daemon is not None and i in submit_at:
+                daemon.submit(submit_at[i])
             futures.append(server.submit("tails", h, r, filtered=True))
         answers = [f.result(timeout=120) for f in futures]
         span = time.perf_counter() - t0
+        if daemon is not None:
+            daemon.flush(timeout=600)
+            daemon.stop()
+            swapped = sum(1 for a in answers
+                          if a.fingerprint != kb.fingerprint())
+            print(f"refreshed {daemon.refreshes}x "
+                  f"({daemon.triples_applied} triples) mid-stream; "
+                  f"{swapped}/{n} answers served from a refreshed "
+                  f"artifact [kb={daemon.kb.fingerprint()}]")
         st = server.stats()
         print(f"served {n} queries at {args.kg_qps:.0f} offered qps "
               f"(sustained {n / span:.0f} qps): "
@@ -272,6 +345,17 @@ def main(argv=None):
                     help="resume from the latest checkpoint in "
                          "--kg-ckpt-dir and train to --kg-epochs total — "
                          "bit-identical to the unbroken run")
+    ap.add_argument("--kg-update", default=None, metavar="PATH",
+                    help="after training, fold a TSV of int-id delta "
+                         "triples (h<TAB>r<TAB>t; new ids grow the "
+                         "tables) into the artifact via kb.update() — "
+                         "the masked online fine-tune, not a retrain")
+    ap.add_argument("--kg-refresh-every", type=int, default=None,
+                    metavar="N",
+                    help="with --kg-serve + --kg-update: stream the delta "
+                         "through a background RefreshDaemon in N-triple "
+                         "chunks while traffic runs, hot-swapping each "
+                         "refreshed artifact into the live server")
     ap.add_argument("--kg-serve", action="store_true",
                     help="after training, stand up the live serving tier "
                          "(serve.KGServer: continuous batching, bucket "

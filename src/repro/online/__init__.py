@@ -1,0 +1,18 @@
+"""Online knowledge tier — a trained ``KnowledgeBase`` as a *living*
+artifact:
+
+  * ``OnlineUpdater`` (this PR): ``update(new_triples)`` grows the
+    embedding tables for unseen entities/relations (ids interned exactly
+    as a fresh ``load_tsv_dir`` would), warm-inits the new rows from
+    relation neighbors, fine-tunes **only** the rows the delta touches
+    (the sparse-transport touch mask as an update mask), and returns a
+    new artifact — optionally appending a delta checkpoint to a chain
+    (``train/checkpoint.save_delta`` / ``KnowledgeBase.load_chain``).
+  * ``RefreshDaemon``: serve-while-training.  A background thread drains
+    an update queue through ``OnlineUpdater`` and double-buffer-swaps
+    each refreshed artifact into a live ``KGServer`` via the existing
+    warmed ``swap()`` — in-flight waves finish against the artifact they
+    were admitted under, zero steady-state recompiles.
+"""
+from repro.online.updater import (  # noqa: F401
+    OnlineUpdater, RefreshDaemon, UpdatePlan)

@@ -1,0 +1,453 @@
+"""Incremental ``kb.update()``: fold new triples into a trained artifact.
+
+The update pipeline (``OnlineUpdater.update``) has four stages, each
+pinned by tests/test_online.py:
+
+1. **Interning** — string triples get ids from the artifact's vocab via
+   ``datasets.extend_vocab``, byte-for-byte the same first-seen-order
+   assignment ``load_tsv_dir`` uses, so an updated artifact's ids are
+   canonical: retraining from scratch on base+delta TSVs produces the
+   same id space.  Integer triples may name unseen ids; tables grow to
+   cover them.
+2. **Table extension** — every table grows to the new entity/relation
+   counts.  Appended rows come from a fresh deterministic
+   ``model.init_params`` draw at the new sizes; new *entity* rows are
+   overridden by the mean embedding of their old-entity neighbors in the
+   delta triples (a cold entity starts where its relations put it).
+   ``model.normalize_rows`` projects the appended rows so every
+   registered model's constraint invariants hold before the first step.
+3. **Masked fine-tune** — a short device-pipeline ``mapreduce.train``
+   job over the delta triples with ``update_mask`` freezing every row
+   the delta does not touch: the sparse-transport candidate machinery
+   clamps frozen rows bitwise (base rows never drift), and the result is
+   bit-identical to calling ``mapreduce.train`` directly with the same
+   plan — ``plan()`` exposes exactly those inputs.
+4. **Assembly** — new ``KnowledgeBase`` over the merged tables and the
+   extended graph (``KG.extend`` returns a *fresh* KG, so every lazy
+   eval-filter cache starts cold and both ``KG.fingerprint()`` and
+   ``KnowledgeBase.fingerprint()`` change, invalidating server answer
+   caches).  With ``delta_dir=`` the changed/appended rows are appended
+   to a delta checkpoint chain.
+
+``RefreshDaemon`` wires this into a live ``KGServer``: submitted triples
+are drained by a background thread into ``update()`` and the refreshed
+artifact is swapped in with the server's warmed double-buffer ``swap()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro import kg as kg_api
+from repro.core import mapreduce
+from repro.core.models import KGConfig, Params
+from repro.data import datasets
+from repro.data.kg import KG
+from repro.kb import KnowledgeBase
+from repro.train import checkpoint as ckpt_lib
+
+_EMPTY = np.zeros((0, 3), np.int32)
+
+
+@dataclasses.dataclass
+class UpdatePlan:
+    """Everything the masked fine-tune consumes — exposed so the
+    ``update() == direct mapreduce.train`` bit-identity contract is a
+    one-line test."""
+
+    delta: np.ndarray              # (n, 3) int32 delta triples, new id space
+    delta_kg: KG                   # train=delta, empty valid/test, new sizes
+    params: Params                 # extended tables (warm-init applied)
+    update_mask: Dict[str, np.ndarray]   # per-table bool rows-may-move
+    kcfg: KGConfig
+    mcfg: mapreduce.MapReduceConfig
+    epochs: int
+    seed: int
+
+
+class OnlineUpdater:
+    """``update(new_triples) -> KnowledgeBase`` (module docstring).
+
+    Knobs: ``epochs`` fine-tune epochs (one compiled block),
+    ``n_workers``/``batch_size``/``merge_every``/``learning_rate`` the
+    usual engine knobs for the fine-tune job (workers and batch shrink
+    automatically for tiny deltas), ``seed`` drives both the appended-row
+    init draw and the fine-tune (same seed + same delta = bitwise same
+    artifact), ``delta_dir`` appends each update to a delta checkpoint
+    chain, ``vocab`` is ``(ent2id, rel2id)`` dicts (or a dataset
+    ``cache_dir``) for string triples — interned in place, first-seen
+    order, exactly as ``load_tsv_dir`` would.
+
+    ``scope`` picks which touched rows may move: ``"touched"`` (default)
+    frees every row the delta names — maximum adaptation; ``"cold"``
+    frees only rows with *no* training signal in the base graph (unseen
+    entities/relations, plus appended ids) — the delta teaches the
+    artifact its genuinely new rows while every converged row stays
+    bitwise frozen, which avoids the delta-only objective dragging
+    well-trained neighbors (benchmarks/bench_online.py measures the
+    difference).
+
+    ``staleness`` must stay 0: like checkpoint/resume, an online update
+    is defined against one coherent artifact, and a bounded-staleness run
+    has per-worker views mid-flight (see ``core/mapreduce.train``)."""
+
+    def __init__(
+        self,
+        kb: KnowledgeBase,
+        *,
+        epochs: int = 8,
+        n_workers: int = 2,
+        batch_size: Optional[int] = None,
+        merge_every: int = 1,
+        learning_rate: float = 0.01,
+        seed: int = 1,
+        staleness: int = 0,
+        scope: str = "touched",
+        delta_dir: Optional[str] = None,
+        vocab=None,
+    ):
+        if not isinstance(kb, KnowledgeBase):
+            raise TypeError(
+                f"OnlineUpdater takes a KnowledgeBase, got {type(kb)!r}")
+        if scope not in ("touched", "cold"):
+            raise ValueError(
+                f"scope must be 'touched' or 'cold', got {scope!r}")
+        if staleness != 0:
+            raise ValueError(
+                "staleness>0 gives workers deliberately stale views "
+                "mid-run; an online update must fine-tune against the one "
+                "coherent artifact it extends — like checkpoint/resume, "
+                "updates require staleness=0")
+        self.kb = kb
+        self.epochs = int(epochs)
+        self.n_workers = int(n_workers)
+        self.batch_size = batch_size
+        self.merge_every = int(merge_every)
+        self.learning_rate = float(learning_rate)
+        self.seed = int(seed)
+        self.scope = scope
+        self.delta_dir = delta_dir
+        if isinstance(vocab, str):
+            vocab = datasets.load_vocab(vocab)
+        self.vocab = vocab
+
+    # -- stage 1: interning ------------------------------------------------
+
+    def _coerce(self, new_triples) -> np.ndarray:
+        if new_triples is None:
+            return _EMPTY
+        arr = np.asarray(new_triples)
+        if arr.size == 0:
+            return _EMPTY
+        if np.issubdtype(arr.dtype, np.integer):
+            return arr.astype(np.int32).reshape(-1, 3)
+        if self.vocab is None:
+            raise ValueError(
+                "string triples need vocab=(ent2id, rel2id) (or a dataset "
+                "cache_dir) so unseen names intern to canonical ids — the "
+                "same first-seen order load_tsv_dir uses")
+        ent2id, rel2id = self.vocab
+        return datasets.extend_vocab(arr.reshape(-1, 3), ent2id, rel2id)
+
+    # -- stages 2+3 assembled: the plan ------------------------------------
+
+    def plan(self, new_triples) -> UpdatePlan:
+        """Resolve the delta into the exact ``mapreduce.train`` inputs the
+        fine-tune will run with (no training happens here)."""
+        kb = self.kb
+        delta = self._coerce(new_triples)
+        old_ent, old_rel = kb.n_entities, kb.n_relations
+        n_ent, n_rel = old_ent, old_rel
+        if len(delta):
+            n_ent = max(n_ent, int(delta[:, (0, 2)].max()) + 1)
+            n_rel = max(n_rel, int(delta[:, 1].max()) + 1)
+        delta_kg = KG(n_entities=n_ent, n_relations=n_rel,
+                      train=delta, valid=_EMPTY, test=_EMPTY)
+
+        n_delta = max(1, len(delta))
+        workers = max(1, min(self.n_workers, n_delta))
+        per_worker = max(1, n_delta // workers)
+        batch = self.batch_size or min(128, per_worker)
+        batch = max(1, min(int(batch), per_worker))
+        kcfg, mcfg = kg_api.make_configs(
+            delta_kg, model=kb.model, paradigm="sgd",
+            dim=kb.dim, norm=kb.norm, learning_rate=self.learning_rate,
+            n_workers=workers, batch_size=batch, pipeline="device",
+            merge_transport="sparse", backend="vmap",
+            block_epochs=self.epochs, merge_every=self.merge_every)
+
+        params = self._extend_tables(delta, kcfg, n_ent, n_rel)
+        role_mask = self._touch_mask(delta, n_ent, n_rel, old_ent, old_rel)
+        if self.scope == "cold":
+            role_mask = self._restrict_to_cold(
+                role_mask, n_ent, n_rel, old_ent, old_rel)
+        roles = kb.model.param_roles()
+        mask = {name: role_mask[roles[name]] for name in params}
+        return UpdatePlan(delta=delta, delta_kg=delta_kg, params=params,
+                          update_mask=mask, kcfg=kcfg, mcfg=mcfg,
+                          epochs=self.epochs, seed=self.seed)
+
+    def _extend_tables(self, delta, kcfg, n_ent, n_rel) -> Params:
+        kb = self.kb
+        roles = kb.model.param_roles()
+        fresh = None
+        params: Params = {}
+        for name, old in kb.params.items():
+            old = np.asarray(old)
+            n_new = n_ent if roles[name] == "ent" else n_rel
+            if n_new == old.shape[0]:
+                params[name] = old
+                continue
+            if fresh is None:                         # one draw, all tables
+                fresh = kb.model.init_params(
+                    jax.random.PRNGKey(self.seed), kcfg)
+            app = np.asarray(fresh[name])[old.shape[0]:n_new].astype(
+                old.dtype)
+            if name == "ent":
+                app = self._warm_init(app, old, delta)
+            app = np.asarray(
+                kb.model.normalize_rows(name, app)).astype(old.dtype)
+            params[name] = np.concatenate([old, app], axis=0)
+        return params
+
+    @staticmethod
+    def _warm_init(app, old, delta) -> np.ndarray:
+        """New-entity rows start at the mean embedding of their old-entity
+        neighbors in the delta (fallback: the fresh draw in ``app``)."""
+        old_n = old.shape[0]
+        if not len(delta) or not len(app):
+            return app
+        sums = np.zeros_like(app, dtype=np.float64)
+        counts = np.zeros(len(app), np.int64)
+        h, t = delta[:, 0], delta[:, 2]
+        for e, other in ((h, t), (t, h)):
+            sel = (e >= old_n) & (other < old_n)
+            np.add.at(sums, e[sel] - old_n, old[other[sel]])
+            np.add.at(counts, e[sel] - old_n, 1)
+        have = counts > 0
+        app = app.copy()
+        app[have] = (sums[have] / counts[have, None]).astype(app.dtype)
+        return app
+
+    @staticmethod
+    def _touch_mask(delta, n_ent, n_rel, old_ent, old_rel):
+        ent = np.zeros(n_ent, bool)
+        rel = np.zeros(n_rel, bool)
+        if len(delta):
+            ent[delta[:, (0, 2)].ravel()] = True
+            rel[delta[:, 1]] = True
+        ent[old_ent:] = True                          # appended rows are free
+        rel[old_rel:] = True
+        return {"ent": ent, "rel": rel}
+
+    def _restrict_to_cold(self, role_mask, n_ent, n_rel, old_ent, old_rel):
+        """scope="cold": keep only touched rows with no training signal in
+        the base artifact — ids its *train* split never mentions (plus
+        appended ids).  Ids seen only in valid/test never trained and sit
+        at init, so they stay cold.  Without a graph only appended rows
+        count as cold."""
+        cold_ent = np.ones(n_ent, bool)
+        cold_rel = np.ones(n_rel, bool)
+        if self.kb.graph is not None:
+            train = self.kb.graph.train
+            if len(train):
+                cold_ent[train[:, (0, 2)].ravel()] = False
+                cold_rel[train[:, 1]] = False
+        else:
+            cold_ent[:old_ent] = False
+            cold_rel[:old_rel] = False
+        return {"ent": role_mask["ent"] & cold_ent,
+                "rel": role_mask["rel"] & cold_rel}
+
+    # -- stage 4: run + assemble -------------------------------------------
+
+    def update(self, new_triples) -> KnowledgeBase:
+        """Fold ``new_triples`` in; returns a NEW artifact (the base is
+        immutable by repo convention).  Zero triples is a bit-identical
+        no-op: same tables, same graph, equal fingerprint."""
+        kb = self.kb
+        p = self.plan(new_triples)
+        if not len(p.delta):
+            return KnowledgeBase(model=kb.model, params=kb.params,
+                                 graph=kb.graph, norm=kb.norm,
+                                 meta=dict(kb.meta))
+        res = mapreduce.train(
+            p.delta_kg, p.kcfg, p.mcfg, epochs=p.epochs, seed=p.seed,
+            params=p.params, update_mask=p.update_mask, model=kb.model)
+        new_params = {
+            name: np.asarray(jax.device_get(arr))
+            for name, arr in res.params.items()
+        }
+        graph = None
+        if kb.graph is not None:
+            graph = kb.graph.extend(
+                p.delta, n_entities=p.delta_kg.n_entities,
+                n_relations=p.delta_kg.n_relations)
+        meta = dict(kb.meta)
+        meta["updates"] = int(meta.get("updates", 0)) + 1
+        new_kb = KnowledgeBase(model=kb.model, params=new_params,
+                               graph=graph, norm=kb.norm, meta=meta)
+        if self.delta_dir is not None:
+            self._save_delta(kb, new_kb, p.delta)
+        return new_kb
+
+    def _save_delta(self, base_kb: KnowledgeBase, new_kb: KnowledgeBase,
+                    delta: np.ndarray):
+        d = str(self.delta_dir)
+        if not ckpt_lib.chain_steps(d):
+            base_kb.save(d)                           # chain starts at base
+        rows = {}
+        for name, new in new_kb.params.items():
+            old = np.asarray(base_kb.params[name])
+            new = np.asarray(new)
+            old_n = old.shape[0]
+            changed = np.nonzero(np.any(old != new[:old_n], axis=1))[0]
+            idx = np.concatenate(
+                [changed, np.arange(old_n, new.shape[0])]).astype(np.int32)
+            rows[name] = {"idx": idx, "vals": new[idx]}
+        graph = new_kb.graph
+        extra = {
+            "kind": ckpt_lib.DELTA_KIND,
+            "delta": True,
+            "model": new_kb.model.name,
+            "norm": new_kb.norm,
+            "dim": new_kb.dim,
+            "base": base_kb.fingerprint(),
+            "result": new_kb.fingerprint(),
+            "n_entities": (graph.n_entities if graph is not None
+                           else new_kb.n_entities),
+            "n_relations": (graph.n_relations if graph is not None
+                            else new_kb.n_relations),
+            "tables": {name: list(np.shape(arr))
+                       for name, arr in sorted(new_kb.params.items())},
+            "meta": new_kb.meta,
+        }
+        tree = {"rows": rows, "graph": {"train": delta.astype(np.int32)}}
+        ckpt_lib.save_delta(d, tree, extra)
+
+
+class RefreshDaemon:
+    """Serve-while-training: drain an update queue through
+    ``OnlineUpdater`` and swap each refreshed artifact into a live
+    ``KGServer`` (module docstring).
+
+    The swap is the server's existing warmed double-buffer ``swap()``:
+    waves admitted before the pointer flip finish against the old
+    artifact, waves after answer from the new one, and the pre-compiled
+    bucket cache keeps ``steady_recompiles`` at 0 across refreshes.
+
+    Use as a context manager (starts/stops the thread) or drive
+    synchronously with ``refresh()``; ``flush()`` blocks until every
+    submitted triple has been folded in and swapped."""
+
+    def __init__(self, server, kb: Optional[KnowledgeBase] = None,
+                 tenant: str = "default", **updater_kw):
+        self._server = server
+        self._tenant = tenant
+        self.kb = kb if kb is not None else server.tenant_kb(tenant)
+        self._updater_kw = dict(updater_kw)
+        self._queue: List[np.ndarray] = []
+        self._cond = threading.Condition()
+        self._stopping = False
+        self._busy = False
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.refreshes = 0
+        self.triples_applied = 0
+
+    # -- queue -------------------------------------------------------------
+
+    def submit(self, triples):
+        """Enqueue triples for the next refresh (thread-safe)."""
+        with self._cond:
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
+            self._queue.append(np.asarray(triples))
+            self._cond.notify_all()
+
+    def refresh(self) -> KnowledgeBase:
+        """One synchronous pass: drain whatever is queued (possibly
+        nothing), fine-tune, swap.  Returns the now-live artifact."""
+        with self._cond:
+            batch, self._queue = self._queue, []
+            self._busy = True
+        try:
+            delta = (np.concatenate([b.reshape(-1, 3) for b in batch])
+                     if batch else _EMPTY)
+            new_kb = OnlineUpdater(self.kb, **self._updater_kw).update(delta)
+            self._server.swap(new_kb, tenant=self._tenant)
+            with self._cond:
+                self.kb = new_kb
+                self.refreshes += 1
+                self.triples_applied += len(delta)
+            return new_kb
+        finally:
+            with self._cond:
+                self._busy = False
+                self._cond.notify_all()
+
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        """Block until the queue is drained and no refresh is mid-flight."""
+        import time
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while self._queue or self._busy:
+                if self._error is not None:
+                    err, self._error = self._error, None
+                    raise err
+                if deadline is None:
+                    self._cond.wait()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return False
+                    self._cond.wait(timeout=remaining)
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
+        return True
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self):
+        if self._thread is not None:
+            return self
+        self._stopping = False
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        with self._cond:
+            self._stopping = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+        return False
+
+    def _loop(self):
+        while True:
+            with self._cond:
+                while not self._queue and not self._stopping:
+                    self._cond.wait()
+                if self._stopping and not self._queue:
+                    return
+            try:
+                self.refresh()
+            except BaseException as e:   # surfaced on next submit()/flush()
+                with self._cond:
+                    self._error = e
+                    self._queue = []
+                    self._cond.notify_all()

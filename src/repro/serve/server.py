@@ -254,6 +254,7 @@ class KGServer:
         self._warmed = False
         self._accepting = True
         self._paused = False
+        self._inflight = 0          # waves taken but not yet answered
 
         # counters (under self._lock)
         self._requests = 0
@@ -312,6 +313,25 @@ class KGServer:
             self._paused = False
             self._cond.notify_all()
 
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every pending request has been answered: the queue
+        is empty and no admitted wave is still executing.  Returns True
+        when drained, False on timeout.  The online tier's refresh loop
+        uses this to fence "answers admitted under artifact N" from "swap
+        to artifact N+1" in tests and benches; ordinary swaps don't need
+        it — waves bind their artifact at admission regardless."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while self._pending or self._inflight:
+                if deadline is None:
+                    self._cond.wait()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return False
+                    self._cond.wait(timeout=remaining)
+        return True
+
     # -- tenancy -----------------------------------------------------------
 
     def _make_tenant(self, kb: KnowledgeBase) -> _Tenant:
@@ -323,6 +343,12 @@ class KGServer:
     def tenant_fingerprint(self, tenant: str = "default") -> str:
         with self._lock:
             return self._tenants[tenant].fp
+
+    def tenant_kb(self, tenant: str = "default") -> KnowledgeBase:
+        """The artifact currently bound to ``tenant`` (what the next
+        admitted wave will answer from)."""
+        with self._lock:
+            return self._tenants[tenant].kb
 
     def clear_cache(self) -> None:
         """Drop every cached answer (an ops knob — e.g. isolating
@@ -574,12 +600,17 @@ class KGServer:
                 # bind the artifact: this wave is consistent with exactly
                 # this tenant object, whatever swap() does afterwards
                 tenant = self._tenants[gkey[0]]
+                self._inflight += 1
             try:
                 self._execute(wave, tenant)
             except Exception as exc:          # noqa: BLE001 — surface to
                 for req in wave:              # callers, keep serving
                     if not req.future.done():
                         req.future.set_exception(exc)
+            finally:
+                with self._cond:
+                    self._inflight -= 1
+                    self._cond.notify_all()
 
     def _bucket_of(self, n: int) -> int:
         for b in self.buckets:

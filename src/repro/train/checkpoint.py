@@ -19,6 +19,17 @@ fingerprint, ...) — a cross-model or cross-config resume fails with a
 clear error at load time instead of producing silently-wrong numbers.
 With no template the params tree is rebuilt self-describing from the
 stored paths, which is what serveable artifacts (``repro.kb``) load with.
+
+Delta chains: ``save_delta`` appends a *delta* step storing only the rows
+an online update changed (plus new-graph triples) against the chain tip.
+A chain directory is one full base artifact at its first step followed by
+delta steps, each manifest recording the fingerprint it applies to
+(``base``) and the fingerprint it produces (``result``).  ``save_delta``
+refuses to write into a directory whose tip fingerprint doesn't match the
+delta's ``base`` — saving a delta next to an unrelated artifact fails
+fast instead of producing an unloadable chain.  Deltas are never cleaned
+up (every link is needed to replay the chain); ``restore`` refuses delta
+steps outright and points at ``KnowledgeBase.load_chain``.
 """
 from __future__ import annotations
 
@@ -122,6 +133,139 @@ class AsyncSaver:
         self._thread = threading.Thread(target=run, daemon=True)
         self._thread.start()
 
+    def save_delta_async(self, ckpt_dir, tree, extra, step=None):
+        """Like :func:`save_delta`, with disk I/O off-thread.  Chain-tip
+        validation runs *synchronously* so a mismatched base fails in the
+        caller's frame, not on a later ``wait()``."""
+        self.wait()                                   # one in flight at a time
+        for key in ("delta", "base", "result"):
+            if not extra.get(key):
+                raise ValueError(
+                    f"delta manifest must set {key!r} (got extra={extra!r})")
+        tip = chain_tip_fingerprint(ckpt_dir)
+        if tip is None:
+            raise FileNotFoundError(
+                f"no base artifact in {ckpt_dir} — save the base with "
+                "KnowledgeBase.save before appending deltas")
+        if tip != extra["base"]:
+            raise ValueError(
+                f"delta applies to fingerprint {extra['base']} but the "
+                f"chain tip at {ckpt_dir} is {tip} — unrelated base "
+                "artifact?")
+        host_tree = jax.tree.map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def run():
+            try:
+                save_delta(ckpt_dir, host_tree, extra, step=step)
+            except BaseException as e:                # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+
+DELTA_KIND = "kb_delta"
+
+
+def chain_steps(ckpt_dir: str) -> list:
+    """Committed step numbers in a chain directory, ascending."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")))
+
+
+def _read_manifest(ckpt_dir: str, step: int) -> Dict[str, Any]:
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        return json.load(f)
+
+
+def chain_tip_fingerprint(ckpt_dir: str) -> Optional[str]:
+    """Fingerprint of the artifact the chain currently materialises to.
+
+    The latest step's manifest carries it directly: a base artifact stores
+    its own ``fingerprint``, a delta stores the ``result`` fingerprint of
+    applying it.  Returns None for an empty/missing directory; raises for
+    a pre-delta-era artifact saved without a fingerprint (re-save the base
+    with a current ``KnowledgeBase.save`` to start a chain)."""
+    steps = chain_steps(ckpt_dir)
+    if not steps:
+        return None
+    extra = _read_manifest(ckpt_dir, steps[-1]).get("extra") or {}
+    fp = extra.get("result") if extra.get("delta") else extra.get("fingerprint")
+    if fp is None:
+        raise ValueError(
+            f"checkpoint at {ckpt_dir} step {steps[-1]} carries no "
+            "fingerprint — saved before delta chains existed?  Re-save the "
+            "base artifact to start a chain.")
+    return fp
+
+
+def save_delta(
+    ckpt_dir: str,
+    tree,
+    extra: Dict[str, Any],
+    step: Optional[int] = None,
+) -> str:
+    """Append a delta step to a chain directory.  Returns the committed dir.
+
+    ``extra`` must carry ``delta=True``, ``base`` (fingerprint of the
+    artifact this delta applies to) and ``result`` (fingerprint after
+    applying it).  The directory must already hold a base artifact (or
+    prior deltas) whose tip fingerprint equals ``base`` — a mismatch means
+    the caller is saving against the wrong artifact and raises before any
+    bytes land.  Unlike :func:`save`, no cleanup ever runs: every link of
+    the chain is needed to replay it."""
+    for key in ("delta", "base", "result"):
+        if not extra.get(key):
+            raise ValueError(
+                f"delta manifest must set {key!r} (got extra={extra!r})")
+    tip = chain_tip_fingerprint(ckpt_dir)
+    if tip is None:
+        raise FileNotFoundError(
+            f"no base artifact in {ckpt_dir} — save the base with "
+            "KnowledgeBase.save before appending deltas")
+    if tip != extra["base"]:
+        raise ValueError(
+            f"delta applies to fingerprint {extra['base']} but the chain "
+            f"tip at {ckpt_dir} is {tip} — unrelated base artifact?")
+    if step is None:
+        step = chain_steps(ckpt_dir)[-1] + 1
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    if os.path.exists(final):
+        raise FileExistsError(f"chain step already committed: {final}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = {
+        f"params::{k}": v for k, v in _flatten_with_paths(tree).items()
+    }
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {"step": step, "extra": extra, "has_opt": False}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, final)
+    return final
+
+
+def load_tree(ckpt_dir: str, step: int) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Raw (tree, extra) of one chain step — nested dicts of host arrays,
+    no template validation.  What ``KnowledgeBase.load_chain`` replays
+    deltas with."""
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    manifest = _read_manifest(ckpt_dir, step)
+    z = np.load(os.path.join(d, "arrays.npz"))
+    flat = {k[len("params::"):]: z[k] for k in z.files
+            if k.startswith("params::")}
+    return _nest_flat(flat), manifest.get("extra") or {}
+
 
 def _cleanup(ckpt_dir: str, keep: int):
     steps = sorted(
@@ -207,6 +351,10 @@ def restore(
     d = os.path.join(ckpt_dir, f"step_{step:010d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
+    if (manifest.get("extra") or {}).get("delta"):
+        raise ValueError(
+            f"{d} is a delta step, not a full checkpoint — replay the "
+            "chain with KnowledgeBase.load_chain instead of restore()")
     if expect:
         validate_extra(manifest.get("extra") or {}, expect, d)
     z = np.load(os.path.join(d, "arrays.npz"))

@@ -1,0 +1,170 @@
+"""Tests for the delta checkpoint chain (train/checkpoint.py save_delta /
+chain_* + KnowledgeBase.load_chain).
+
+Contracts:
+
+  * **Round trip** — base + N deltas replays to the exact artifact the
+    Nth update produced (tables bitwise, graph fingerprint, artifact
+    fingerprint), with every link validated both ways.
+  * **Fail fast** — a delta saved against a directory holding an
+    unrelated base refuses before any bytes land (sync and async), a
+    broken/reordered chain refuses at load, ``restore()`` refuses delta
+    steps outright (so ``fit(resume=True)`` can never resume from a
+    chain — the same refusal family as staleness>0's checkpoint gate),
+    and ``OnlineUpdater`` refuses staleness>0.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro import kg as kg_api
+from repro.data import kg as kg_lib
+from repro.kb import KnowledgeBase
+from repro.online import OnlineUpdater
+from repro.train import checkpoint as ckpt_lib
+
+
+@pytest.fixture(scope="module")
+def small_kg():
+    return kg_lib.synthetic_kg(1, n_entities=50, n_relations=6,
+                               n_triplets=400)
+
+
+@pytest.fixture(scope="module")
+def base_kb(small_kg):
+    n_w = len(small_kg.train) // 2
+    return kg_api.fit(small_kg, model="transe", epochs=2, seed=0,
+                      pipeline="device", n_workers=2, batch_size=n_w,
+                      dim=8).kb
+
+
+def _delta(small_kg, n, seed, n_new=0):
+    rng = np.random.default_rng(seed)
+    E, R = small_kg.n_entities, small_kg.n_relations
+    rows = np.stack([rng.integers(0, E, n), rng.integers(0, R, n),
+                     rng.integers(0, E, n)], 1)
+    new = np.stack([np.arange(E, E + n_new), rng.integers(0, R, n_new),
+                    rng.integers(0, E, n_new)], 1) if n_new else \
+        np.zeros((0, 3), np.int64)
+    return np.concatenate([rows, new]).astype(np.int32)
+
+
+def test_chain_round_trip(base_kb, small_kg, tmp_path):
+    chain = str(tmp_path / "chain")
+    kb1 = base_kb.update(_delta(small_kg, 8, 0, n_new=1), epochs=2,
+                         seed=3, delta_dir=chain)
+    kb2 = kb1.update(_delta(small_kg, 6, 1), epochs=2, seed=4,
+                     delta_dir=chain)
+
+    assert ckpt_lib.chain_steps(chain) == [0, 1, 2]
+    assert ckpt_lib.chain_tip_fingerprint(chain) == kb2.fingerprint()
+
+    re = KnowledgeBase.load_chain(chain)
+    assert re.fingerprint() == kb2.fingerprint()
+    for name in kb2.params:
+        assert np.array_equal(np.asarray(re.params[name]),
+                              np.asarray(kb2.params[name]))
+    assert re.graph.fingerprint() == kb2.graph.fingerprint()
+    assert re.n_entities == small_kg.n_entities + 1
+
+
+def test_delta_stores_only_touched_rows(base_kb, small_kg, tmp_path):
+    """The delta step ships changed+appended rows, not the full table."""
+    chain = str(tmp_path / "chain")
+    base_kb.update(_delta(small_kg, 5, 0), epochs=1, seed=3,
+                   delta_dir=chain)
+    tree, extra = ckpt_lib.load_tree(chain, 1)
+    n_stored = np.asarray(tree["rows"]["ent"]["idx"]).size
+    assert 0 < n_stored < base_kb.n_entities
+    assert extra["base"] == base_kb.fingerprint()
+
+
+def test_broken_chain_refuses(base_kb, small_kg, tmp_path):
+    """Deleting a middle link (or reordering) breaks the base->result
+    fingerprint chain and load_chain refuses."""
+    chain = str(tmp_path / "chain")
+    kb1 = base_kb.update(_delta(small_kg, 8, 0), epochs=1, seed=3,
+                         delta_dir=chain)
+    kb1.update(_delta(small_kg, 6, 1), epochs=1, seed=4, delta_dir=chain)
+    import shutil
+    shutil.rmtree(os.path.join(chain, "step_0000000001"))
+    with pytest.raises(ValueError, match="fingerprint|chain"):
+        KnowledgeBase.load_chain(chain)
+
+
+def test_unrelated_base_fails_fast(base_kb, small_kg, tmp_path):
+    """Saving a delta into a dir holding an unrelated base artifact
+    refuses on the manifest fingerprint before writing anything."""
+    other = str(tmp_path / "other")
+    kb1 = base_kb.update(_delta(small_kg, 5, 0), epochs=1, seed=3)
+    base_kb.save(other)
+    with pytest.raises(ValueError, match="unrelated|chain tip"):
+        kb1.update(_delta(small_kg, 4, 1), epochs=1, seed=4,
+                   delta_dir=other)
+    assert ckpt_lib.chain_steps(other) == [0]         # nothing landed
+
+
+def test_empty_dir_needs_base_via_save_delta(tmp_path):
+    with pytest.raises(FileNotFoundError, match="base"):
+        ckpt_lib.save_delta(
+            str(tmp_path / "nope"), {"rows": {}},
+            {"delta": True, "base": "aa", "result": "bb"})
+
+
+def test_save_delta_validates_manifest_keys(tmp_path):
+    with pytest.raises(ValueError, match="result"):
+        ckpt_lib.save_delta(str(tmp_path), {"rows": {}},
+                            {"delta": True, "base": "aa"})
+
+
+def test_async_saver_delta_fails_fast(base_kb, tmp_path):
+    """AsyncSaver.save_delta_async validates the chain tip synchronously:
+    a mismatched base raises in the caller's frame, not on a later
+    wait()."""
+    d = str(tmp_path / "base")
+    base_kb.save(d)
+    saver = ckpt_lib.AsyncSaver()
+    with pytest.raises(ValueError, match="chain tip"):
+        saver.save_delta_async(
+            d, {"rows": {}},
+            {"delta": True, "base": "not-the-tip", "result": "x"})
+
+    # the happy path still round-trips through the thread
+    fp = base_kb.fingerprint()
+    saver.save_delta_async(
+        d, {"rows": {}, "graph": {"train": np.zeros((0, 3), np.int32)}},
+        {"delta": True, "base": fp, "result": fp, "model": "transe",
+         "n_entities": base_kb.n_entities,
+         "n_relations": base_kb.n_relations, "tables": {}})
+    saver.wait()
+    assert ckpt_lib.chain_steps(d) == [0, 1]
+
+
+def test_restore_refuses_delta_steps(base_kb, small_kg, tmp_path):
+    """fit(resume=True) and every other restore() consumer can never
+    resume from a delta step — the chain replays only through
+    KnowledgeBase.load_chain."""
+    chain = str(tmp_path / "chain")
+    base_kb.update(_delta(small_kg, 5, 0), epochs=1, seed=3,
+                   delta_dir=chain)
+    with pytest.raises(ValueError, match="load_chain"):
+        ckpt_lib.restore(chain)                        # latest step = delta
+    # the base step itself is still a plain artifact
+    step, tree, _, extra = ckpt_lib.restore(chain, step=0)
+    assert extra["kind"] == "knowledge_base"
+
+
+def test_updater_refuses_staleness(base_kb):
+    with pytest.raises(ValueError, match="staleness"):
+        OnlineUpdater(base_kb, staleness=1)
+
+
+def test_manifest_fingerprint_recorded_on_save(base_kb, tmp_path):
+    """KnowledgeBase.save stamps its fingerprint into the manifest — the
+    anchor every chain hangs off."""
+    d = str(tmp_path / "kb")
+    base_kb.save(d)
+    assert ckpt_lib.chain_tip_fingerprint(d) == base_kb.fingerprint()
+    _, _, _, extra = ckpt_lib.restore(d)
+    assert extra["fingerprint"] == base_kb.fingerprint()

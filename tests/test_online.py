@@ -1,0 +1,415 @@
+"""Tests for the online knowledge tier (repro/online/): incremental
+``kb.update()``, id interning canonicality, warm-init constraint safety,
+masked fine-tune bit-identity, cache/fingerprint invalidation, and the
+serve-while-refresh swap contract.
+
+The load-bearing contracts:
+
+  * **Canonical interning** — ids assigned to unseen names by
+    ``datasets.extend_vocab`` are byte-for-byte what ``load_tsv_dir``
+    would have assigned reading base+delta from scratch.
+  * **Masked fine-tune** — ``update()`` moves only the rows the delta
+    touches (frozen rows bitwise unchanged) and equals a direct
+    ``mapreduce.train`` call on the exposed ``plan()`` — same engine, no
+    special path.
+  * **Constraint safety** — extended tables satisfy each registered
+    model's ``normalize`` invariants before the first step (property
+    test under hypothesis when installed, fixed-seed sweep otherwise).
+  * **Freshness** — any update changes ``KG.fingerprint()`` and
+    ``KnowledgeBase.fingerprint()``; a ``KGServer`` swap to the updated
+    artifact invalidates the answer cache; stale eval-filter caches on a
+    mutated graph are the bug ``invalidate_caches()``/``extend()`` close.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro import kg as kg_api
+from repro.core import mapreduce
+from repro.core.models import available, get_model
+from repro.data import datasets
+from repro.data import kg as kg_lib
+from repro.online import OnlineUpdater, RefreshDaemon
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def small_kg():
+    return kg_lib.synthetic_kg(0, n_entities=60, n_relations=8,
+                               n_triplets=500)
+
+
+@pytest.fixture(scope="module")
+def base_kb(small_kg):
+    n_w = len(small_kg.train) // 2
+    return kg_api.fit(small_kg, model="transe", epochs=3, seed=0,
+                      pipeline="device", n_workers=2, batch_size=n_w,
+                      dim=16).kb
+
+
+def _delta(small_kg, n_old=20, n_new_ent=3, seed=0):
+    """Delta triples: n_old among existing entities plus rows naming
+    n_new_ent brand-new entity ids (each adjacent to an old entity)."""
+    rng = np.random.default_rng(seed)
+    E, R = small_kg.n_entities, small_kg.n_relations
+    old = np.stack([rng.integers(0, E, n_old), rng.integers(0, R, n_old),
+                    rng.integers(0, E, n_old)], axis=1)
+    new = np.stack([np.arange(E, E + n_new_ent),
+                    rng.integers(0, R, n_new_ent),
+                    rng.integers(0, E, n_new_ent)], axis=1)
+    return np.concatenate([old, new]).astype(np.int32)
+
+
+# -- interning canonicality ------------------------------------------------
+
+
+def _write_tsv(path, train, valid, test):
+    os.makedirs(path, exist_ok=True)
+    for name, rows in (("train", train), ("valid", valid), ("test", test)):
+        with open(os.path.join(path, f"{name}.txt"), "w") as f:
+            for h, r, t in rows:
+                f.write(f"{h}\t{r}\t{t}\n")
+
+
+def test_extend_vocab_matches_load_tsv_dir(tmp_path):
+    """Interning a delta through extend_vocab assigns exactly the ids a
+    fresh load_tsv_dir of base+delta would — updated artifacts stay in
+    the canonical id space."""
+    base_train = [("a", "r1", "b"), ("b", "r2", "c"), ("c", "r1", "a")]
+    valid = [("a", "r2", "c")]
+    test = [("b", "r1", "c")]
+    delta = [("c", "r3", "dd"), ("dd", "r1", "ee"), ("a", "r1", "ee")]
+
+    _write_tsv(tmp_path / "base", base_train, valid, test)
+    kg_base = kg_lib.load_tsv_dir(str(tmp_path / "base"))
+
+    # replay the base interning through extend_vocab: identical triples
+    ent2id, rel2id = {}, {}
+    rep_train = datasets.extend_vocab(base_train, ent2id, rel2id)
+    rep_valid = datasets.extend_vocab(valid, ent2id, rel2id)
+    rep_test = datasets.extend_vocab(test, ent2id, rel2id)
+    assert np.array_equal(rep_train, kg_base.train)
+    assert np.array_equal(rep_valid, kg_base.valid)
+    assert np.array_equal(rep_test, kg_base.test)
+
+    # from-scratch reload of base+delta == base ids + extend_vocab ids
+    # NOTE: load_tsv_dir interns train before valid/test, so the
+    # canonical-id guarantee covers names valid/test did not introduce —
+    # the valid/test names here all appear in train first.
+    _write_tsv(tmp_path / "ext", base_train + delta, valid, test)
+    kg_ext = kg_lib.load_tsv_dir(str(tmp_path / "ext"))
+    delta_ids = datasets.extend_vocab(delta, ent2id, rel2id)
+    assert np.array_equal(
+        np.concatenate([kg_base.train, delta_ids]), kg_ext.train)
+    assert kg_ext.n_entities == len(ent2id)
+    assert kg_ext.n_relations == len(rel2id)
+
+
+def test_update_with_string_triples(base_kb, tmp_path):
+    """String deltas intern through vocab= and grow the tables."""
+    ent2id = {str(i): i for i in range(base_kb.n_entities)}
+    rel2id = {f"r{i}": i for i in range(base_kb.n_relations)}
+    kb2 = base_kb.update([("0", "r0", "brand-new")],
+                         vocab=(ent2id, rel2id), epochs=1)
+    assert kb2.n_entities == base_kb.n_entities + 1
+    assert ent2id["brand-new"] == base_kb.n_entities
+
+    with pytest.raises(ValueError, match="vocab"):
+        base_kb.update([("0", "r0", "another")], epochs=1)
+
+
+# -- masked fine-tune ------------------------------------------------------
+
+
+def test_update_grows_and_freezes(base_kb, small_kg):
+    delta = _delta(small_kg)
+    kb2 = base_kb.update(delta, epochs=2, seed=3)
+
+    assert kb2.n_entities == small_kg.n_entities + 3
+    assert len(kb2.graph.train) == len(small_kg.train) + len(delta)
+    # untouched rows are bitwise frozen
+    plan = OnlineUpdater(base_kb, epochs=2, seed=3).plan(delta)
+    for name in base_kb.params:
+        old_n = np.asarray(base_kb.params[name]).shape[0]
+        frozen = ~plan.update_mask[name][:old_n]
+        assert np.array_equal(
+            np.asarray(kb2.params[name])[:old_n][frozen],
+            np.asarray(base_kb.params[name])[frozen])
+    # touched rows did move
+    moved = plan.update_mask["ent"][:small_kg.n_entities]
+    assert not np.array_equal(
+        np.asarray(kb2.params["ent"])[:small_kg.n_entities][moved],
+        np.asarray(base_kb.params["ent"])[moved])
+
+
+def test_update_equals_direct_masked_train(base_kb, small_kg):
+    """No special path: update() is exactly mapreduce.train on the plan."""
+    delta = _delta(small_kg)
+    up = OnlineUpdater(base_kb, epochs=2, seed=3)
+    kb2 = up.update(delta)
+    p = up.plan(delta)
+    res = mapreduce.train(
+        p.delta_kg, p.kcfg, p.mcfg, epochs=p.epochs, seed=p.seed,
+        params=p.params, update_mask=p.update_mask, model=base_kb.model)
+    for name in kb2.params:
+        assert np.array_equal(np.asarray(kb2.params[name]),
+                              np.asarray(res.params[name]))
+
+
+def test_update_deterministic(base_kb, small_kg):
+    delta = _delta(small_kg)
+    kb_a = base_kb.update(delta, epochs=2, seed=3)
+    kb_b = base_kb.update(delta, epochs=2, seed=3)
+    assert kb_a.fingerprint() == kb_b.fingerprint()
+
+
+def test_zero_triple_update_is_noop(base_kb):
+    kb2 = base_kb.update([])
+    assert kb2 is not base_kb
+    assert kb2.fingerprint() == base_kb.fingerprint()
+    for name in base_kb.params:
+        assert np.array_equal(np.asarray(kb2.params[name]),
+                              np.asarray(base_kb.params[name]))
+
+
+def test_update_refuses_staleness(base_kb):
+    with pytest.raises(ValueError, match="staleness"):
+        base_kb.update([[0, 0, 1]], staleness=1)
+
+
+def test_facade_update_matches_method(base_kb, small_kg):
+    """kg.update(kb, ...) is the same call as kb.update(...)."""
+    delta = _delta(small_kg)
+    via_facade = kg_api.update(base_kb, delta, epochs=2, seed=3)
+    via_method = base_kb.update(delta, epochs=2, seed=3)
+    assert via_facade.fingerprint() == via_method.fingerprint()
+
+    with pytest.raises(TypeError, match="KnowledgeBase"):
+        kg_api.update({"ent": None}, delta)
+
+
+def test_update_scope_cold(base_kb, small_kg):
+    """scope="cold" frees only rows the base artifact never trained:
+    appended ids plus any base id with no triple in the train split (ids
+    seen only in valid/test sit at init and stay cold).  Every trained row
+    stays bitwise frozen even when the delta names it."""
+    delta = _delta(small_kg)                      # touches warm + new ids
+    up = OnlineUpdater(base_kb, epochs=2, seed=3, scope="cold")
+    p = up.plan(delta)
+
+    E = small_kg.n_entities
+    seen = np.zeros(E, bool)
+    seen[small_kg.train[:, (0, 2)].ravel()] = True
+    assert not p.update_mask["ent"][:E][seen].any()
+    assert p.update_mask["ent"][E:].all()         # appended rows are free
+
+    kb2 = up.update(delta)
+    old = np.asarray(base_kb.params["ent"])
+    assert np.array_equal(np.asarray(kb2.params["ent"])[:E][seen],
+                          old[seen])
+
+    with pytest.raises(ValueError, match="scope"):
+        OnlineUpdater(base_kb, scope="warm")
+
+
+# -- warm-init constraint safety -------------------------------------------
+
+
+def _check_extended_invariants(model_name, seed):
+    """Extended tables satisfy the model's normalize invariants before the
+    first step: normalize_rows is a no-op on the appended rows (bitwise —
+    the projection already holds)."""
+    rng = np.random.default_rng(seed)
+    E, R = 12, 3
+    graph = kg_lib.KG(
+        n_entities=E, n_relations=R,
+        train=np.stack([rng.integers(0, E, 30), rng.integers(0, R, 30),
+                        rng.integers(0, E, 30)], 1).astype(np.int32),
+        valid=np.zeros((0, 3), np.int32), test=np.zeros((0, 3), np.int32))
+    model = get_model(model_name)
+    kcfg, _ = kg_api.make_configs(graph, model=model, dim=8)
+    import jax
+    params = model.normalize(
+        model.init_params(jax.random.PRNGKey(seed), kcfg))
+    from repro.kb import KnowledgeBase
+    kb = KnowledgeBase(model=model, params=params, graph=graph)
+
+    n_new_ent, n_new_rel = int(rng.integers(1, 4)), int(rng.integers(0, 2))
+    rows = [[E + i, int(rng.integers(0, R)), int(rng.integers(0, E))]
+            for i in range(n_new_ent)]
+    rows += [[int(rng.integers(0, E)), R + i, int(rng.integers(0, E))]
+             for i in range(n_new_rel)]
+    plan = OnlineUpdater(kb, epochs=1, seed=seed).plan(
+        np.asarray(rows, np.int32))
+    roles = model.param_roles()
+    for name, table in plan.params.items():
+        old_n = np.asarray(params[name]).shape[0]
+        app = np.asarray(table)[old_n:]
+        assert np.array_equal(
+            np.asarray(model.normalize_rows(name, app)), app), (
+            f"{model_name}:{name} appended rows violate the constraint")
+        # base prefix untouched by extension
+        assert np.array_equal(np.asarray(table)[:old_n],
+                              np.asarray(params[name]))
+        assert plan.update_mask[name].shape == (table.shape[0],)
+        assert roles[name] in ("ent", "rel")
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(model_name=st.sampled_from(available()),
+           seed=st.integers(0, 2**16))
+    def test_warm_init_constraint_safety(model_name, seed):
+        _check_extended_invariants(model_name, seed)
+
+else:
+
+    @pytest.mark.parametrize("model_name", available())
+    @pytest.mark.parametrize("seed", [0, 1, 7, 1234])
+    def test_warm_init_constraint_safety(model_name, seed):
+        _check_extended_invariants(model_name, seed)
+
+
+def test_warm_init_uses_neighbor_mean(base_kb, small_kg):
+    """A new entity adjacent to old entities starts at the mean of their
+    embeddings (projected), not at the random draw."""
+    E = small_kg.n_entities
+    delta = np.asarray([[E, 2, 5], [E, 3, 9]], np.int32)
+    plan = OnlineUpdater(base_kb, seed=7).plan(delta)
+    old = np.asarray(base_kb.params["ent"])
+    want = (old[5].astype(np.float64) + old[9]) / 2
+    want = np.asarray(base_kb.model.normalize_rows(
+        "ent", want.astype(old.dtype)[None, :]))[0]
+    got = np.asarray(plan.params["ent"])[E]
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+# -- freshness: fingerprints + caches --------------------------------------
+
+
+def test_kg_stale_cache_regression(small_kg):
+    """The bug this PR closes: mutating a KG's triples with warm lazy
+    caches leaves eval filters answering from the OLD graph (a known
+    triple ranks as a fresh candidate).  invalidate_caches() fixes it;
+    KG.extend() returns a fresh instance so it can never happen."""
+    g = kg_lib.KG(small_kg.n_entities, small_kg.n_relations,
+                  small_kg.train.copy(), small_kg.valid.copy(),
+                  small_kg.test.copy())
+    h, r = int(g.train[0, 0]), int(g.train[0, 1])
+    known_tails = {int(t) for hh, rr, t in g.all_triplets.tolist()
+                   if hh == h and rr == r}
+    t_new = next(t for t in range(g.n_entities) if t not in known_tails)
+    pairs = np.asarray([[h, r]], np.int64)
+
+    def filtered_out(graph):
+        """Ids the filtered ranking excludes for (h, r, ?)."""
+        row = graph.known_candidate_masks(pairs, "tail")[0]
+        return set(row.tolist()) - {graph.n_entities}
+
+    assert t_new not in filtered_out(g)               # warms the cache
+
+    g.train = np.concatenate(
+        [g.train, np.asarray([[h, r, t_new]], np.int32)])
+    # stale: the cache still claims (h, r, t_new) is unknown, so a
+    # filtered rank would count the now-known tail against the query
+    assert t_new not in filtered_out(g)
+    g.invalidate_caches()
+    assert t_new in filtered_out(g)
+
+    # the safe path: extend() is fresh-by-construction
+    g2 = small_kg.extend(np.asarray([[h, r, t_new]], np.int32))
+    assert t_new in filtered_out(g2)
+    assert t_new not in filtered_out(small_kg)        # base untouched
+
+
+def test_fingerprints_change_on_update(base_kb, small_kg):
+    delta = _delta(small_kg, n_old=5, n_new_ent=0)
+    kb2 = base_kb.update(delta, epochs=1, seed=2)
+    assert kb2.fingerprint() != base_kb.fingerprint()
+    assert kb2.graph.fingerprint() != small_kg.fingerprint()
+    # even a same-size update (no new ids) must change both
+    assert kb2.n_entities == base_kb.n_entities
+
+
+def test_server_cache_invalidated_across_update(base_kb, small_kg):
+    """The answer cache can never serve pre-update answers: swap() to an
+    updated artifact changes the tenant fingerprint and flushes the LRU."""
+    from repro.serve.server import KGServer
+
+    srv = KGServer(base_kb, max_batch=4, max_wait_us=100, cache_size=64)
+    try:
+        a1 = srv.query_tails(3, 1, k=4)
+        a1c = srv.query_tails(3, 1, k=4)        # served from cache
+        assert np.array_equal(a1.ids, a1c.ids)
+        fp_before = srv.tenant_fingerprint()
+
+        kb2 = base_kb.update(_delta(small_kg), epochs=2, seed=3)
+        srv.swap(kb2)
+        assert srv.tenant_fingerprint() != fp_before
+        assert srv.stats().cache_invalidations >= 1
+
+        a2 = srv.query_tails(3, 1, k=4)
+        ref = kb2.query_tails(3, 1, k=4)
+        assert np.array_equal(np.atleast_2d(a2.ids)[0],
+                              np.atleast_2d(ref.ids)[0])
+    finally:
+        srv.stop()
+
+
+# -- serve-while-training --------------------------------------------------
+
+
+def test_refresh_daemon_swap_consistency(base_kb, small_kg):
+    """Queries answered before a refresh match the admitted artifact;
+    queries after flush() match the refreshed one; the swap is warmed
+    (zero steady recompiles) and drain() waits out in-flight waves."""
+    from repro.serve.server import KGServer
+
+    srv = KGServer(base_kb, max_batch=4, max_wait_us=100)
+    try:
+        before = srv.query_tails(5, 2, k=4)
+        ref_before = base_kb.query_tails(5, 2, k=4)
+        assert np.array_equal(np.atleast_2d(before.ids)[0],
+                              np.atleast_2d(ref_before.ids)[0])
+
+        with RefreshDaemon(srv, epochs=2, seed=5) as daemon:
+            daemon.submit(_delta(small_kg, n_old=10, n_new_ent=1))
+            assert daemon.flush(timeout=300)
+            assert daemon.refreshes == 1
+            after = srv.query_tails(5, 2, k=4)
+        ref_after = daemon.kb.query_tails(5, 2, k=4)
+        assert np.array_equal(np.atleast_2d(after.ids)[0],
+                              np.atleast_2d(ref_after.ids)[0])
+        assert daemon.kb.fingerprint() == srv.tenant_fingerprint()
+        assert srv.drain(timeout=60)
+        st = srv.stats()
+        assert st.swaps == 1
+        assert st.steady_recompiles == 0
+    finally:
+        srv.stop()
+
+
+def test_refresh_daemon_surfaces_errors(base_kb):
+    class Boom(Exception):
+        pass
+
+    class BadServer:
+        def tenant_kb(self, tenant="default"):
+            return base_kb
+
+        def swap(self, kb, tenant="default"):
+            raise Boom()
+
+    daemon = RefreshDaemon(BadServer(), epochs=1)
+    daemon.start()
+    daemon.submit(np.asarray([[0, 0, 1]], np.int32))
+    with pytest.raises(Boom):
+        daemon.flush(timeout=300)
+    daemon.stop()
